@@ -1,0 +1,102 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+"""§Perf hillclimbing driver: per pair, re-measure the paper-faithful
+baseline (with top-collective-op detail) and each candidate change, saving
+tagged records next to the baselines.
+
+    PYTHONPATH=src python -m benchmarks.hillclimb --round 1
+"""
+
+import argparse  # noqa: E402
+import json      # noqa: E402
+import sys       # noqa: E402
+
+sys.path.insert(0, os.path.join(os.path.dirname(
+    os.path.dirname(os.path.abspath(__file__))), "src"))
+
+from benchmarks.roofline import analyze  # noqa: E402
+
+ROUND1 = [
+    # (arch, shape, extra-config, tag)
+    ("dbrx-132b", "train_4k", None, "__base2"),
+    ("dbrx-132b", "train_4k", {"moe_dispatch": "cumsum"}, "__cumsum"),
+    ("qwen1.5-4b", "train_4k", {"loss_impl": "lse"}, "__lse"),
+    ("qwen1.5-4b", "train_4k",
+     {"loss_impl": "lse", "logits_dtype": "bfloat16"}, "__lse_bf16"),
+    ("zamba2-7b", "train_4k", {"ssm_chunk": 64}, "__chunk64"),
+]
+
+ROUND2 = [
+    # round-1 refutations redirected the hypotheses (see EXPERIMENTS.md):
+    # dbrx: the 52.85GB f32 (E,C,f) all-reduces over 'data' -> gather the
+    # FSDP weight shards instead.
+    ("dbrx-132b", "train_4k", {"moe_weight_gather": True}, "__wgather"),
+    # qwen: f32[256,...] attention scores fully REPLICATED per device (20
+    # heads don't divide the 16-way model axis) -> pin batch over
+    # data x model during attention.
+    ("qwen1.5-4b", "train_4k", {"attn_shard": "batch"}, "__attnbatch"),
+    # zamba/mamba2: fused in_proj sliced at non-shard boundaries replicates
+    # the (B,T,14576) activations -> split per-component projections.
+    ("zamba2-7b", "train_4k", {"ssm_split_proj": True}, "__split"),
+    ("mamba2-370m", "train_4k", {"ssm_split_proj": True}, "__split"),
+]
+
+ROUND3 = [
+    # stack the wins + sweep secondary knobs
+    ("dbrx-132b", "train_4k",
+     {"moe_weight_gather": True, "moe_shard_capacity": True},
+     "__wgather_cap"),
+    ("dbrx-132b", "train_4k",
+     {"moe_weight_gather": True, "moe_shard_capacity": True,
+      "attn_shard": "heads"}, "__wgather_cap_attnh"),
+    ("qwen1.5-4b", "train_4k",
+     {"attn_shard": "batch", "loss_impl": "lse",
+      "logits_dtype": "bfloat16"}, "__attnbatch_lse_bf16"),
+    ("zamba2-7b", "train_4k",
+     {"ssm_split_proj": True, "ssm_chunk": 64}, "__split_chunk64"),
+    ("zamba2-7b", "train_4k",
+     {"ssm_split_proj": True, "attn_shard": "heads"}, "__split_attnh"),
+]
+
+
+ROUND4 = [
+    ("zamba2-7b", "train_4k",
+     {"ssm_split_proj": True, "attn_shard": "heads",
+      "ssd_dtype": "bfloat16"}, "__split_attnh_ssdbf16"),
+    ("dbrx-132b", "train_4k",
+     {"moe_weight_gather": True, "attn_shard": "heads"}, "__wgather_attnh"),
+    ("mamba2-370m", "train_4k",
+     {"ssm_split_proj": True, "ssd_dtype": "bfloat16"}, "__split_ssdbf16"),
+]
+
+
+ROUND5 = [
+    # 4th pair (beyond the required three): worst prefill pair.
+    # hypothesis: MQA kv=1 partially replicates attention activations at 32k
+    # (q heads 48 divide 16; kv heads do not) -> pin q to head-sharded.
+    ("granite-20b", "prefill_32k", {"attn_shard": "heads"}, "__attnh"),
+    ("granite-3-8b", "prefill_32k", {"attn_shard": "heads"}, "__attnh"),
+    ("qwen1.5-4b", "prefill_32k", {"attn_shard": "batch"}, "__attnbatch"),
+]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--round", type=int, default=1)
+    args = ap.parse_args()
+    plan = {1: ROUND1, 2: ROUND2, 3: ROUND3, 4: ROUND4, 5: ROUND5}[args.round]
+    for arch, shape, extra, tag in plan:
+        try:
+            r = analyze(arch, shape, extra=extra, tag_suffix=tag)
+            print(f"OK {arch}{tag}: compute={r['compute_s']:.3e} "
+                  f"memory={r['memory_s']:.3e} coll={r['collective_s']:.3e} "
+                  f"dominant={r['dominant']}")
+        except Exception as e:  # noqa: BLE001
+            import traceback
+            traceback.print_exc()
+            print(f"FAIL {arch}{tag}: {e}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,82 @@
+"""Assemble EXPERIMENTS.md sections from saved dry-run / roofline artifacts.
+
+    PYTHONPATH=src python -m benchmarks.report [--section dryrun|roofline]
+"""
+
+import argparse
+import json
+import os
+import sys
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+sys.path.insert(0, os.path.join(os.path.dirname(HERE), "src"))
+
+DRYRUN = os.path.join(HERE, "results", "dryrun")
+ROOFLINE = os.path.join(HERE, "results", "roofline")
+
+
+def _gb(x):
+    return f"{x / 1e9:.2f}"
+
+
+def dryrun_table() -> str:
+    from repro.configs.registry import ARCH_IDS, INPUT_SHAPES
+    lines = [
+        "| arch | shape | mesh | HLO GFLOP/dev | arg GB/dev | temp GB/dev | "
+        "compile s | collectives (count) |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for arch in ARCH_IDS:
+        for shape in INPUT_SHAPES:
+            for mesh in ("pod", "multipod"):
+                p = os.path.join(DRYRUN, f"{arch}__{shape}__{mesh}.json")
+                if not os.path.exists(p):
+                    continue
+                r = json.load(open(p))
+                coll = ", ".join(f"{k}:{v['count']}" for k, v in
+                                 sorted(r["collectives"].items())
+                                 if not k.startswith("__"))
+                mem = r.get("memory", {})
+                lines.append(
+                    f"| {arch} | {shape} | {r['mesh']} | "
+                    f"{r['cost'].get('flops', 0) / 1e9:.1f} | "
+                    f"{_gb(mem.get('argument_size_in_bytes', 0))} | "
+                    f"{_gb(mem.get('temp_size_in_bytes', 0))} | "
+                    f"{r['compile_s']} | {coll} |")
+    return "\n".join(lines)
+
+
+def roofline_table() -> str:
+    from benchmarks.roofline import report
+    lines = [report(ROOFLINE), "", "### Per-pair detail", ""]
+    for f in sorted(os.listdir(ROOFLINE)):
+        if not f.endswith(".json"):
+            continue
+        r = json.load(open(os.path.join(ROOFLINE, f)))
+        lines.append(
+            f"- **{r['arch']} / {r['shape']}**: "
+            f"flops/dev {r['flops_per_device']:.3e}, "
+            f"bytes/dev {r['bytes_per_device']:.3e}, "
+            f"wire/dev {r['wire_bytes_per_device']:.3e}; "
+            f"dominant **{r['dominant']}**; "
+            f"MODEL_FLOPS {r['model_flops']:.3e} "
+            f"(useful ratio {r['useful_flops_ratio']:.2f})")
+    return "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--section", choices=["dryrun", "roofline", "all"],
+                    default="all")
+    args = ap.parse_args()
+    if args.section in ("dryrun", "all"):
+        print("## §Dry-run\n")
+        print(dryrun_table())
+        print()
+    if args.section in ("roofline", "all"):
+        print("## §Roofline\n")
+        print(roofline_table())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,186 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+"""Roofline analysis (deliverable g): three terms per (arch x shape) on the
+single-pod 16x16 mesh, derived from compiled dry-run artifacts with
+UNROLLED layer stacks (XLA's cost model counts while-loop bodies once, so
+the scanned lowering undercounts by ~n_layers — verified empirically). To
+keep compile times sane we unroll one and two pattern-groups of depth and
+extrapolate linearly to the full depth (exact: per-layer cost is
+depth-independent at fixed width; see ``analyze``).
+
+    compute term    = HLO_flops_per_device / 197e12        (bf16 MXU peak)
+    memory term     = HLO_bytes_per_device / 819e9         (HBM bandwidth)
+    collective term = wire_bytes_per_device / 50e9         (per-link ICI)
+
+HLO quantities come from ``compiled.cost_analysis()`` (per-device SPMD
+module); wire bytes from parsing every collective in ``compiled.as_text()``
+with ring-cost factors and true replica-group sizes.
+
+MODEL_FLOPS uses the standard estimate: 6*N*D for training (N = params,
+MoE: active params), 2*N*D for inference, D = tokens processed. The ratio
+MODEL_FLOPS / (HLO_flops * chips) exposes remat/redundancy waste.
+"""
+
+import argparse     # noqa: E402
+import dataclasses  # noqa: E402
+import json         # noqa: E402
+import sys          # noqa: E402
+import time         # noqa: E402
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(REPO, "src"))
+
+PEAK_FLOPS = 197e12   # bf16 / chip (v5e)
+HBM_BW = 819e9        # bytes/s / chip
+ICI_BW = 50e9         # bytes/s / link
+
+RESULTS = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                       "results", "roofline")
+
+
+def model_flops(cfg, shape) -> float:
+    n = cfg.active_param_count()
+    if shape.kind == "train":
+        return 6.0 * n * shape.global_batch * shape.seq_len
+    if shape.kind == "prefill":
+        return 2.0 * n * shape.global_batch * shape.seq_len
+    return 2.0 * n * shape.global_batch  # decode: one token per sequence
+
+
+def _depth_unit(cfg) -> int:
+    """Depth granularity: one repeating pattern group."""
+    if cfg.arch_type == "hybrid":
+        return cfg.shared_attn_every          # 6 mamba + 1 shared block
+    if cfg.arch_type == "vlm":
+        return cfg.cross_attn_every           # 4 self + 1 cross
+    return 2
+
+
+def _measure(arch, shape_name, n_layers, extra):
+    from repro.launch import dryrun
+    ex = dict(extra or {})
+    ex["n_layers"] = n_layers
+    jit_fn, args, mesh, cfg = dryrun.build(arch, shape_name, multi_pod=False,
+                                           unroll=True, extra=ex)
+    with mesh:  # ambient mesh for with_sharding_constraint(PartitionSpec)
+        compiled = jit_fn.lower(*args).compile()
+    cost = compiled.cost_analysis() or {}
+    coll = dryrun.parse_collectives(compiled.as_text())
+    wire = sum(d["wire_bytes"] for k, d in coll.items()
+               if not k.startswith("__"))
+    return (float(cost.get("flops", 0.0)),
+            float(cost.get("bytes accessed", 0.0)), wire, coll, mesh, cfg)
+
+
+def analyze(arch: str, shape_name: str, *, save=True,
+            extra: dict | None = None, tag_suffix: str = "") -> dict:
+    """Two-depth unrolled measurement + exact linear extrapolation in depth.
+
+    Per-layer cost is depth-independent (same width), so
+    cost(L) = nonlayer + L * per_layer exactly; we measure at L = u and
+    L = 2u (u = one pattern group) and extrapolate to the full depth.
+    Compiling the full config unrolled is exact too but takes tens of
+    minutes per pair at 512-way SPMD on this host.
+    """
+    from repro.configs.registry import INPUT_SHAPES, get_config
+
+    t0 = time.time()
+    cfg_full = get_config(arch)
+    u = _depth_unit(cfg_full)
+    f1, b1, w1, _, _, _ = _measure(arch, shape_name, u, extra)
+    f2, b2, w2, coll, mesh, cfg = _measure(arch, shape_name, 2 * u, extra)
+    L = cfg_full.n_layers
+    scale = L / u  # total depth in pattern-group units (hybrid: +rem/u)
+
+    def extrap(c1, c2):
+        per_u = c2 - c1
+        nonlayer = c1 - per_u
+        return nonlayer + scale * per_u
+
+    flops_dev = extrap(f1, f2)
+    bytes_dev = extrap(b1, b2)
+    wire_dev = extrap(w1, w2)
+    shape = INPUT_SHAPES[shape_name]
+    n_dev = int(mesh.devices.size)
+    cfg = cfg_full
+
+    t_compute = flops_dev / PEAK_FLOPS
+    t_memory = bytes_dev / HBM_BW
+    t_coll = wire_dev / ICI_BW
+    terms = {"compute_s": t_compute, "memory_s": t_memory,
+             "collective_s": t_coll}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops(cfg, shape)
+    useful = mf / max(flops_dev * n_dev, 1.0)
+
+    rec = dict(
+        arch=arch, shape=shape_name, mesh="16x16", n_devices=n_dev,
+        flops_per_device=flops_dev, bytes_per_device=bytes_dev,
+        wire_bytes_per_device=wire_dev,
+        compute_s=t_compute, memory_s=t_memory, collective_s=t_coll,
+        dominant=dominant.replace("_s", ""),
+        model_flops=mf, useful_flops_ratio=useful,
+        collectives=coll, compile_s=round(time.time() - t0, 1),
+        params=cfg.param_count(), active_params=cfg.active_param_count(),
+    )
+    if save:
+        os.makedirs(RESULTS, exist_ok=True)
+        with open(os.path.join(
+                RESULTS, f"{arch}__{shape_name}{tag_suffix}.json"), "w") as f:
+            json.dump(rec, f, indent=1)
+    return rec
+
+
+def report(directory=RESULTS, include_tags: bool = False) -> str:
+    """Markdown table over saved roofline records. Baseline records are
+    ``<arch>__<shape>.json``; hillclimb variants carry an extra ``__<tag>``
+    and are excluded unless ``include_tags``."""
+    lines = [
+        "| arch | shape | variant | compute s | memory s | collective s | "
+        "dominant | useful-FLOP ratio |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for f in sorted(os.listdir(directory)):
+        if not f.endswith(".json"):
+            continue
+        parts = f[:-5].split("__")
+        tag = parts[2] if len(parts) > 2 else "baseline"
+        if tag != "baseline" and not include_tags:
+            continue
+        r = json.load(open(os.path.join(directory, f)))
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {tag} | {r['compute_s']:.3e} | "
+            f"{r['memory_s']:.3e} | {r['collective_s']:.3e} | "
+            f"{r['dominant']} | {r['useful_flops_ratio']:.2f} |")
+    return "\n".join(lines)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--report", action="store_true")
+    args = ap.parse_args(argv)
+    if args.report:
+        print(report())
+        return
+    from repro.configs.registry import ARCH_IDS, INPUT_SHAPES
+    pairs = ([(args.arch, args.shape)] if not args.all else
+             [(a, s) for a in ARCH_IDS for s in INPUT_SHAPES])
+    for a, s in pairs:
+        try:
+            r = analyze(a, s)
+            print(f"OK {a} {s} dominant={r['dominant']} "
+                  f"compute={r['compute_s']:.3e}s memory={r['memory_s']:.3e}s "
+                  f"coll={r['collective_s']:.3e}s useful={r['useful_flops_ratio']:.2f} "
+                  f"(compile {r['compile_s']}s)")
+        except Exception as e:  # noqa: BLE001
+            import traceback
+            traceback.print_exc()
+            print(f"FAIL {a} {s}: {e}")
+
+
+if __name__ == "__main__":
+    main()

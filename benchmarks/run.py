@@ -1,0 +1,37 @@
+"""Benchmark harness: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV (plus a roofline summary row per
+saved dry-run record if present). Run: PYTHONPATH=src python -m benchmarks.run
+"""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src"))
+
+
+def main() -> None:
+    from benchmarks.tables import ALL_TABLES
+    print("name,us_per_call,derived")
+    for table in ALL_TABLES:
+        for name, us, derived in table():
+            print(f"{name},{us:.1f},{derived:.6g}")
+    # roofline summary (if the dry-run artifacts exist)
+    import json
+    rdir = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                        "results", "roofline")
+    if os.path.isdir(rdir):
+        for f in sorted(os.listdir(rdir)):
+            if f.endswith(".json"):
+                parts = f[:-5].split("__")
+                tag = parts[2] if len(parts) > 2 else "baseline"
+                r = json.load(open(os.path.join(rdir, f)))
+                dom = {"compute": r["compute_s"], "memory": r["memory_s"],
+                       "collective": r["collective_s"]}[r["dominant"]]
+                print(f"roofline/{r['arch']}/{r['shape']}/{tag},"
+                      f"{1e6 * dom:.1f},{r['useful_flops_ratio']:.4g}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,62 @@
+"""End-to-end driver: train a small LM (any of the 10 architectures, reduced
+config) for a few hundred steps on CPU with checkpointing.
+
+    PYTHONPATH=src python examples/lm_train.py --arch granite-3-8b --steps 200
+"""
+
+import argparse
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "src"))
+
+import numpy as np
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="granite-3-8b")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_lm_ckpt")
+    args = ap.parse_args()
+
+    from repro.configs.registry import get_smoke_config
+    from repro.data.lm_pipeline import batches
+    from repro.training.optimizer import AdamWConfig
+    from repro.training.train import train_loop
+
+    cfg = get_smoke_config(args.arch)
+    ocfg = AdamWConfig(lr=2e-3, warmup_steps=20, total_steps=args.steps)
+    kw = {}
+    if cfg.inputs_embeds:
+        kw["embeds_dim"] = cfg.d_model
+    if cfg.arch_type == "vlm":
+        kw["image_tokens"] = cfg.n_image_tokens
+        kw["d_model"] = cfg.d_model
+    raw = batches(cfg.vocab, args.batch, args.seq, seed=0, **kw)
+
+    def it():
+        for b in raw:
+            if "tokens" not in b and not cfg.inputs_embeds:
+                b["tokens"] = b["targets"]
+            elif not cfg.inputs_embeds:
+                b["tokens"] = b["targets"]
+            yield b
+
+    state, hist = train_loop(cfg, ocfg, it(), steps=args.steps,
+                             log_every=max(1, args.steps // 20),
+                             checkpoint_dir=args.ckpt_dir,
+                             checkpoint_every=max(10, args.steps // 2),
+                             remat=False)
+    uniform = float(np.log(cfg.vocab))
+    for h in hist:
+        print(f"step {h['step']:4d}  loss={h['loss']:.4f}  "
+              f"lr={h['lr']:.2e}  wall={h['wall']:.0f}s")
+    print(f"uniform-entropy baseline: {uniform:.4f}")
+    print(f"final loss {hist[-1]['loss']:.4f} "
+          f"({'LEARNED' if hist[-1]['loss'] < uniform - 0.3 else 'check'})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,61 @@
+"""Primal stochastic (sub)gradient descent with AdaGrad — the paper's 'SGD'.
+
+Update (paper Eq. 3-4): sample i, then
+    g_i = lam * phi'(w) + l'_i(<w, x_i>) * x_i
+    w  <- w - eta * g_i            (AdaGrad-scaled, per App. B)
+
+Minibatched for TPU friendliness (batch=1 recovers the paper exactly).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.losses import get_loss
+from repro.core.regularizers import get_regularizer
+from repro.core.saddle import Problem, primal_objective
+
+
+@functools.partial(jax.jit, static_argnames=("loss_name", "reg_name", "m",
+                                             "batch"))
+def _sgd_epoch(X, y, perm, w, acc, eta0, lam, *, loss_name, reg_name, m,
+               batch):
+    loss = get_loss(loss_name)
+    reg = get_regularizer(reg_name)
+    nsteps = m // batch
+
+    def body(carry, s):
+        w, acc = carry
+        idx = jax.lax.dynamic_slice(perm, (s * batch,), (batch,))
+        Xb, yb = X[idx], y[idx]
+        u = Xb @ w
+        g = lam * reg.grad(w) + (Xb.T @ loss.grad(u, yb)) / batch
+        acc = acc + g * g
+        w = w - eta0 * g * jax.lax.rsqrt(acc + 1e-8)
+        return (w, acc), None
+
+    (w, acc), _ = jax.lax.scan(body, (w, acc), jnp.arange(nsteps))
+    return w, acc
+
+
+def run_sgd(prob: Problem, epochs: int = 10, eta0: float = 0.1,
+            batch: int = 1, seed: int = 0, eval_every: int = 1):
+    w = jnp.zeros(prob.d, jnp.float32)
+    acc = jnp.zeros_like(w)
+    key = jax.random.PRNGKey(seed)
+    history = []
+    for t in range(1, epochs + 1):
+        key, sk = jax.random.split(key)
+        perm = jax.random.permutation(sk, prob.m)
+        w, acc = _sgd_epoch(prob.X, prob.y, perm, w, acc,
+                            jnp.float32(eta0), jnp.float32(prob.lam),
+                            loss_name=prob.loss_name, reg_name=prob.reg_name,
+                            m=prob.m, batch=batch)
+        if t % eval_every == 0 or t == epochs:
+            history.append(dict(epoch=t,
+                                primal=float(primal_objective(prob, w))))
+    return w, history

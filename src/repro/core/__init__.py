@@ -1,0 +1,22 @@
+"""Core DSO library: the paper's primary contribution.
+
+- ``losses`` / ``regularizers``: Table 1 losses + Fenchel conjugates.
+- ``saddle``: the saddle-point reformulation f(w, alpha), P(w), D(alpha), gap.
+- ``dso``: paper-exact serial DSO + block-cyclic grid simulator.
+- ``dso_dist``: shard_map + ppermute distributed DSO (Algorithm 1).
+- ``schedule``: the sigma_r block-cyclic schedule and ring permutation.
+- ``adagrad``: App. B step-size adaptation.
+"""
+
+from repro.core.losses import LOSSES, get_loss
+from repro.core.regularizers import REGULARIZERS, get_regularizer
+from repro.core.saddle import (Problem, dual_objective, duality_gap,
+                               make_problem, primal_objective,
+                               saddle_objective)
+from repro.core.dso import run_dso_grid, run_dso_serial
+
+__all__ = [
+    "LOSSES", "REGULARIZERS", "get_loss", "get_regularizer", "Problem",
+    "make_problem", "primal_objective", "dual_objective", "saddle_objective",
+    "duality_gap", "run_dso_serial", "run_dso_grid",
+]

@@ -1,0 +1,25 @@
+"""AdaGrad step sizes (Duchi et al.), as used by the paper (App. B).
+
+Diagonal accumulator G += g^2; effective step = eta0 / sqrt(G + eps).
+The primal accumulator travels with its w-shard through the DSO ring; the
+dual accumulator stays resident with alpha.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+_EPS = 1e-8
+
+
+def init(shape, dtype=jnp.float32) -> Array:
+    return jnp.zeros(shape, dtype)
+
+
+def step(g: Array, acc: Array, eta0: float) -> tuple[Array, Array]:
+    """Returns (scaled update, new accumulator)."""
+    acc = acc + g * g
+    return eta0 * g * jax.lax.rsqrt(acc + _EPS), acc

@@ -1,0 +1,345 @@
+"""DSO — Distributed Stochastic Optimization of the saddle objective (Alg. 1).
+
+Three implementations, in increasing order of hardware realism; all share the
+Eq.-(8) update math from ``saddle.py``:
+
+1. ``run_dso_serial``      — the paper-exact pointwise algorithm: one (i,j)
+   nonzero per update, sequential ``lax.scan``. Ground truth for faithfulness.
+2. ``run_dso_grid``        — a single-device simulator of the p-processor
+   block-cyclic schedule with *tile* (minibatch) updates: every anti-diagonal
+   block of the p x p grid is updated simultaneously, exactly as the p devices
+   would.  This is bit-identical to the ``shard_map`` version in
+   ``dso_dist.py`` and is what the tests compare against.
+3. ``dso_dist.run_dso_sharded`` — the real distributed version: ``shard_map``
+   over a ring mesh axis, ``lax.ppermute`` moving w-shards (the paper's bulk
+   synchronization), one device per processor.
+
+TPU adaptation (see DESIGN.md §3): instead of the paper's one-nonzero-at-a-
+time updates (pointer chasing, hostile to the MXU), each inner iteration
+performs ``row_batches`` *tile steps* on the active block — dense mat-vecs
+X_tile^T alpha and X_tile w on the MXU, with the paper's 1/|Omega-bar_j| and
+1/(m |Omega_i|) scalings carried by count vectors.  Block-disjointness (the
+paper's key observation) is unchanged, so the serializability argument of
+Lemma 2 holds at tile granularity.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.losses import get_loss
+from repro.core.regularizers import get_regularizer
+from repro.core.saddle import (Problem, duality_gap, primal_objective,
+                               project_alpha, saddle_objective)
+from repro.core.schedule import pad_to_multiple
+
+Array = jax.Array
+
+
+# =====================================================================
+# 1. Paper-exact serial DSO (pointwise Eq. 8 + Algorithm 1 schedule)
+# =====================================================================
+
+
+def _coords(prob: Problem) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    Xn = np.asarray(prob.X)
+    ii, jj = np.nonzero(Xn)
+    return ii.astype(np.int32), jj.astype(np.int32), Xn[ii, jj].astype(np.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("loss_name", "reg_name", "m",
+                                             "use_adagrad"))
+def _serial_epoch(ii, jj, vv, perm, w, alpha, gw, ga, y, row_nnz, col_nnz,
+                  eta_t, lam, w_lo, w_hi, *, loss_name, reg_name, m,
+                  use_adagrad):
+    loss = get_loss(loss_name)
+    reg = get_regularizer(reg_name)
+
+    def body(carry, k):
+        w, alpha, gw, ga = carry
+        i, j, x = ii[perm[k]], jj[perm[k]], vv[perm[k]]
+        wj, ai, yi = w[j], alpha[i], y[i]
+        # Eq. (8), simultaneous read of (w_j, alpha_i) — the Lemma 2 form
+        g_w = lam * reg.grad(wj) / col_nnz[j] - ai * x / m
+        g_a = (-loss.dual_grad(ai, yi) / (m * row_nnz[i]) - wj * x / m)
+        if use_adagrad:
+            gw_i = gw[j] + g_w * g_w
+            ga_i = ga[i] + g_a * g_a
+            dw = eta_t * g_w * jax.lax.rsqrt(gw_i + 1e-8)
+            da = eta_t * g_a * jax.lax.rsqrt(ga_i + 1e-8)
+            gw = gw.at[j].set(gw_i)
+            ga = ga.at[i].set(ga_i)
+        else:
+            dw, da = eta_t * g_w, eta_t * g_a
+        # App. B projections, applied to the touched coordinates
+        w = w.at[j].set(jnp.clip(wj - dw, w_lo, w_hi))
+        ai_new = jnp.squeeze(loss.project_alpha(ai + da, yi))
+        alpha = alpha.at[i].set(ai_new)
+        return (w, alpha, gw, ga), None
+
+    (w, alpha, gw, ga), _ = jax.lax.scan(body, (w, alpha, gw, ga),
+                                         jnp.arange(ii.shape[0]))
+    return w, alpha, gw, ga
+
+
+def run_dso_serial(prob: Problem, epochs: int = 10, eta0: float = 0.1,
+                   seed: int = 0, use_adagrad: bool = True,
+                   alpha0: float = 0.0, eval_every: int = 1):
+    """Paper-exact Algorithm 1 with p=1 (sequential pointwise updates)."""
+    ii, jj, vv = _coords(prob)
+    ii, jj, vv = jnp.asarray(ii), jnp.asarray(jj), jnp.asarray(vv)
+    w = jnp.zeros(prob.d, jnp.float32)
+    alpha = project_alpha(prob, jnp.full(prob.m, alpha0, jnp.float32))
+    gw = jnp.zeros_like(w)
+    ga = jnp.zeros_like(alpha)
+    key = jax.random.PRNGKey(seed)
+    history = []
+    loss = get_loss(prob.loss_name)
+    box = loss.w_box(prob.lam) if loss.w_box is not None else np.inf
+    for t in range(1, epochs + 1):
+        key, sk = jax.random.split(key)
+        perm = jax.random.permutation(sk, ii.shape[0])
+        eta_t = eta0 if use_adagrad else eta0 / np.sqrt(t)
+        w, alpha, gw, ga = _serial_epoch(
+            ii, jj, vv, perm, w, alpha, gw, ga, prob.y, prob.row_nnz,
+            prob.col_nnz, jnp.float32(eta_t), jnp.float32(prob.lam),
+            jnp.float32(-box), jnp.float32(box), loss_name=prob.loss_name,
+            reg_name=prob.reg_name, m=prob.m, use_adagrad=use_adagrad)
+        if t % eval_every == 0 or t == epochs:
+            history.append(dict(
+                epoch=t,
+                primal=float(primal_objective(prob, w)),
+                gap=float(duality_gap(prob, w, alpha)),
+                saddle=float(saddle_objective(prob, w, alpha)),
+            ))
+    return w, alpha, history
+
+
+# =====================================================================
+# 2. Grid data layout shared by the simulator and the sharded version
+# =====================================================================
+
+
+class GridData(NamedTuple):
+    """Problem data laid out on the p x p DSO grid (row-major padding)."""
+
+    Xg: Array        # (p, mb, d_pad)  row shard per processor, all columns
+    yg: Array        # (p, mb)
+    row_nnz_g: Array  # (p, mb)   |Omega_i|, >= 1
+    col_nnz: Array   # (d_pad,)   |Omega-bar_j|, >= 1
+    row_valid: Array  # (p, mb)  1.0 for real rows, 0.0 padding
+    p: int
+    mb: int          # rows per processor
+    db: int          # cols per block
+
+
+class DSOState(NamedTuple):
+    w_grid: Array    # (p, db)   w block *by block id* (not by owner)
+    gw_grid: Array   # (p, db)   AdaGrad accumulator travelling with the block
+    alpha: Array     # (p, mb)
+    ga: Array        # (p, mb)
+    epoch: Array     # scalar int32
+
+
+def make_grid_data(prob: Problem, p: int) -> GridData:
+    m_pad, d_pad = pad_to_multiple(prob.m, p), pad_to_multiple(prob.d, p)
+    mb, db = m_pad // p, d_pad // p
+    X = np.zeros((m_pad, d_pad), np.float32)
+    X[: prob.m, : prob.d] = np.asarray(prob.X)
+    y = np.zeros((m_pad,), np.float32)
+    y[: prob.m] = np.asarray(prob.y)
+    row_nnz = np.ones((m_pad,), np.float32)
+    row_nnz[: prob.m] = np.asarray(prob.row_nnz)
+    col_nnz = np.ones((d_pad,), np.float32)
+    col_nnz[: prob.d] = np.asarray(prob.col_nnz)
+    row_valid = np.zeros((m_pad,), np.float32)
+    row_valid[: prob.m] = 1.0
+    return GridData(
+        Xg=jnp.asarray(X.reshape(p, mb, d_pad)),
+        yg=jnp.asarray(y.reshape(p, mb)),
+        row_nnz_g=jnp.asarray(row_nnz.reshape(p, mb)),
+        col_nnz=jnp.asarray(col_nnz),
+        row_valid=jnp.asarray(row_valid.reshape(p, mb)),
+        p=p, mb=mb, db=db,
+    )
+
+
+def init_state(prob: Problem, data: GridData, alpha0: float = 0.0) -> DSOState:
+    p, mb, db = data.p, data.mb, data.db
+    alpha = jnp.full((p, mb), alpha0, jnp.float32)
+    alpha = get_loss(prob.loss_name).project_alpha(alpha, data.yg)
+    alpha = alpha * data.row_valid
+    return DSOState(
+        w_grid=jnp.zeros((p, db), jnp.float32),
+        gw_grid=jnp.zeros((p, db), jnp.float32),
+        alpha=alpha,
+        ga=jnp.zeros((p, mb), jnp.float32),
+        epoch=jnp.int32(0),
+    )
+
+
+def block_tile_step_pallas(*, X_tile, y_tile, w_blk, alpha_blk, gw_blk,
+                           ga_blk, row_nnz_tile, col_nnz_blk, eta_t, lam, m,
+                           loss_name: str, reg_name: str, use_adagrad: bool,
+                           w_lo, w_hi):
+    """Pallas-kernel twin of ``block_tile_step`` (kernels/dso_update.py).
+
+    AdaGrad is always on in the kernel. On CPU this runs in interpret mode
+    (slow — used for validation); on TPU it is the production hot loop."""
+    from repro.kernels import ops
+    assert use_adagrad, "the fused kernel implements the AdaGrad step"
+    scalars = jnp.stack([eta_t, lam, m, w_lo, w_hi]).astype(jnp.float32)
+    w2, a2, gw2, ga2 = ops.dso_tile_step(
+        X_tile, y_tile, w_blk, alpha_blk, gw_blk, ga_blk, row_nnz_tile,
+        col_nnz_blk, scalars, loss_name=loss_name, reg_name=reg_name)
+    return w2, a2, gw2, ga2
+
+
+def block_tile_step(*, X_tile, y_tile, w_blk, alpha_blk, gw_blk, ga_blk,
+                    row_nnz_tile, col_nnz_blk, eta_t, lam, m,
+                    loss_name: str, reg_name: str, use_adagrad: bool,
+                    w_lo, w_hi):
+    """One TPU-native tile step on an active block (DESIGN.md §3).
+
+    Aggregates Eq. (8) over every nonzero of the tile; simultaneous
+    (Jacobi) read of (w, alpha) as in Lemma 2.  Returns updated
+    (w_blk, alpha_blk, gw_blk, ga_blk), with App. B projections applied.
+    """
+    loss = get_loss(loss_name)
+    reg = get_regularizer(reg_name)
+    nz = (X_tile != 0).astype(X_tile.dtype)
+    tile_col_nnz = nz.sum(axis=0)          # n_j within this tile
+    tile_row_nnz = nz.sum(axis=1)          # n_i within this tile
+    g_w = (lam * reg.grad(w_blk) * tile_col_nnz / col_nnz_blk
+           - (X_tile.T @ alpha_blk) / m)
+    g_a = (-loss.dual_grad(alpha_blk, y_tile) * tile_row_nnz
+           / (m * row_nnz_tile)
+           - (X_tile @ w_blk) / m)
+    if use_adagrad:
+        gw_blk = gw_blk + g_w * g_w
+        ga_blk = ga_blk + g_a * g_a
+        dw = eta_t * g_w * jax.lax.rsqrt(gw_blk + 1e-8)
+        da = eta_t * g_a * jax.lax.rsqrt(ga_blk + 1e-8)
+    else:
+        dw, da = eta_t * g_w, eta_t * g_a
+    w_blk = jnp.clip(w_blk - dw, w_lo, w_hi)
+    # rows with no nonzero in this tile have g_a = 0 automatically
+    # (tile_row_nnz = 0 and the X_tile @ w term vanishes).
+    alpha_blk = loss.project_alpha(alpha_blk + da, y_tile)
+    return w_blk, alpha_blk, gw_blk, ga_blk
+
+
+def _inner_iteration(prob_meta, data: GridData, blk_cols, w_blk, gw_blk,
+                     alpha_q, ga_q, X_q, y_q, row_nnz_q, eta_t,
+                     row_batches: int, impl: str = "jnp"):
+    """All tile steps of one processor on one active block."""
+    lam, m, loss_name, reg_name, use_adagrad, w_lo, w_hi = prob_meta
+    step_fn = block_tile_step if impl == "jnp" else block_tile_step_pallas
+    db = w_blk.shape[0]
+    col_nnz_blk = jax.lax.dynamic_slice(data.col_nnz, (blk_cols,), (db,))
+    mb = X_q.shape[0]
+    rb = mb // row_batches
+
+    def sub(carry, s):
+        w_blk, alpha_q, gw_blk, ga_q = carry
+        Xt = jax.lax.dynamic_slice(X_q, (s * rb, blk_cols), (rb, db))
+        yt = jax.lax.dynamic_slice(y_q, (s * rb,), (rb,))
+        at = jax.lax.dynamic_slice(alpha_q, (s * rb,), (rb,))
+        gat = jax.lax.dynamic_slice(ga_q, (s * rb,), (rb,))
+        rnt = jax.lax.dynamic_slice(row_nnz_q, (s * rb,), (rb,))
+        w_blk, at, gw_blk, gat = step_fn(
+            X_tile=Xt, y_tile=yt, w_blk=w_blk, alpha_blk=at, gw_blk=gw_blk,
+            ga_blk=gat, row_nnz_tile=rnt, col_nnz_blk=col_nnz_blk,
+            eta_t=eta_t, lam=lam, m=m, loss_name=loss_name,
+            reg_name=reg_name, use_adagrad=use_adagrad, w_lo=w_lo, w_hi=w_hi)
+        alpha_q = jax.lax.dynamic_update_slice(alpha_q, at, (s * rb,))
+        ga_q = jax.lax.dynamic_update_slice(ga_q, gat, (s * rb,))
+        return (w_blk, alpha_q, gw_blk, ga_q), None
+
+    (w_blk, alpha_q, gw_blk, ga_q), _ = jax.lax.scan(
+        sub, (w_blk, alpha_q, gw_blk, ga_q), jnp.arange(row_batches))
+    return w_blk, alpha_q, gw_blk, ga_q
+
+
+def _prob_meta(prob: Problem):
+    loss = get_loss(prob.loss_name)
+    box = loss.w_box(prob.lam) if loss.w_box is not None else np.inf
+    return (jnp.float32(prob.lam), jnp.float32(prob.m), prob.loss_name,
+            prob.reg_name, True, jnp.float32(-box), jnp.float32(box))
+
+
+# =====================================================================
+# 3. Single-device simulator of the p-processor schedule
+# =====================================================================
+
+
+@functools.partial(jax.jit, static_argnames=("loss_name", "reg_name",
+                                             "use_adagrad", "row_batches",
+                                             "p", "db", "impl"))
+def _grid_epoch(data: GridData, state: DSOState, eta_t, lam, m, w_lo, w_hi,
+                *, loss_name, reg_name, use_adagrad, row_batches, p, db,
+                impl="jnp"):
+    meta = (lam, m, loss_name, reg_name, use_adagrad, w_lo, w_hi)
+    qs = jnp.arange(p)
+
+    def inner(r, st: DSOState) -> DSOState:
+        blk_ids = (qs + r) % p                      # sigma(q, r)
+        # gather the w blocks each processor owns this inner iteration
+        w_owned = jnp.take(st.w_grid, blk_ids, axis=0)    # (p, db)
+        gw_owned = jnp.take(st.gw_grid, blk_ids, axis=0)
+
+        def per_q(blk_id, w_blk, gw_blk, a_q, ga_q, X_q, y_q, rn_q):
+            return _inner_iteration(meta, data, blk_id * db, w_blk, gw_blk,
+                                    a_q, ga_q, X_q, y_q, rn_q, eta_t,
+                                    row_batches, impl)
+
+        w_new, a_new, gw_new, ga_new = jax.vmap(per_q)(
+            blk_ids, w_owned, gw_owned, st.alpha, st.ga, data.Xg, data.yg,
+            data.row_nnz_g)
+        w_grid = st.w_grid.at[blk_ids].set(w_new)
+        gw_grid = st.gw_grid.at[blk_ids].set(gw_new)
+        return DSOState(w_grid, gw_grid, a_new, ga_new, st.epoch)
+
+    state = jax.lax.fori_loop(0, p, inner, state)
+    return state._replace(epoch=state.epoch + 1)
+
+
+def gather_w(state: DSOState, d: int) -> Array:
+    return state.w_grid.reshape(-1)[:d]
+
+
+def gather_alpha(state: DSOState, m: int) -> Array:
+    return state.alpha.reshape(-1)[:m]
+
+
+def run_dso_grid(prob: Problem, p: int = 4, epochs: int = 10,
+                 eta0: float = 0.1, use_adagrad: bool = True,
+                 row_batches: int = 1, alpha0: float = 0.0,
+                 eval_every: int = 1, impl: str = "jnp"):
+    """Single-device simulation of Algorithm 1 with p processors."""
+    data = make_grid_data(prob, p)
+    state = init_state(prob, data, alpha0)
+    lam, m, loss_name, reg_name, _, w_lo, w_hi = _prob_meta(prob)
+    history = []
+    for t in range(1, epochs + 1):
+        eta_t = eta0 if use_adagrad else eta0 / np.sqrt(t)
+        state = _grid_epoch(
+            data, state, jnp.float32(eta_t), lam, m, w_lo, w_hi,
+            loss_name=prob.loss_name, reg_name=prob.reg_name,
+            use_adagrad=use_adagrad, row_batches=row_batches, p=p,
+            db=data.db, impl=impl)
+        if t % eval_every == 0 or t == epochs:
+            w = gather_w(state, prob.d)
+            alpha = gather_alpha(state, prob.m)
+            history.append(dict(
+                epoch=t,
+                primal=float(primal_objective(prob, w)),
+                gap=float(duality_gap(prob, w, alpha)),
+                saddle=float(saddle_objective(prob, w, alpha)),
+            ))
+    return gather_w(state, prob.d), gather_alpha(state, prob.m), history

@@ -1,0 +1,95 @@
+"""Randomized-schedule DSO — the paper's §6 'natural next step' (NOMAD-style).
+
+The paper's convergence proof only needs an *equivalent serial sequence of
+updates* (Lemma 2), which holds for ANY schedule that assigns, at each inner
+iteration, a permutation of blocks to processors (no shared row/column).
+Algorithm 1 uses the cyclic shift sigma_r(q) = (q+r) mod p; asynchronous
+NOMAD-style execution visits blocks in a data-dependent order. We model that
+here with a *uniformly random permutation per inner iteration* — the
+schedule distribution NOMAD approaches under homogeneous processors — and
+verify (tests) that convergence matches the cyclic schedule, supporting the
+paper's conjecture that the proof carries over.
+
+Communication note: a random permutation is a general shuffle (all-to-all of
+w-blocks) rather than a ring step, so on real hardware NOMAD buys schedule
+freedom at the cost of less regular traffic; on the simulator both are
+gathers.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.dso import (DSOState, GridData, _inner_iteration, _prob_meta,
+                            gather_alpha, gather_w, init_state,
+                            make_grid_data)
+from repro.core.saddle import Problem, duality_gap, primal_objective
+
+
+@functools.partial(jax.jit, static_argnames=("loss_name", "reg_name",
+                                             "use_adagrad", "row_batches",
+                                             "p", "db"))
+def _random_epoch(data: GridData, state: DSOState, perms, eta_t, lam, m,
+                  w_lo, w_hi, *, loss_name, reg_name, use_adagrad,
+                  row_batches, p, db):
+    """One epoch with per-inner-iteration random block permutations.
+
+    ``perms``: (p, p) int32 — perms[r, q] = block owned by processor q at
+    inner iteration r (each row is a permutation of 0..p-1)."""
+    meta = (lam, m, loss_name, reg_name, use_adagrad, w_lo, w_hi)
+
+    def inner(r, st: DSOState) -> DSOState:
+        blk_ids = perms[r]
+        w_owned = jnp.take(st.w_grid, blk_ids, axis=0)
+        gw_owned = jnp.take(st.gw_grid, blk_ids, axis=0)
+
+        def per_q(blk_id, w_blk, gw_blk, a_q, ga_q, X_q, y_q, rn_q):
+            return _inner_iteration(meta, data, blk_id * db, w_blk, gw_blk,
+                                    a_q, ga_q, X_q, y_q, rn_q, eta_t,
+                                    row_batches)
+
+        w_new, a_new, gw_new, ga_new = jax.vmap(per_q)(
+            blk_ids, w_owned, gw_owned, st.alpha, st.ga, data.Xg, data.yg,
+            data.row_nnz_g)
+        return DSOState(st.w_grid.at[blk_ids].set(w_new),
+                        st.gw_grid.at[blk_ids].set(gw_new),
+                        a_new, ga_new, st.epoch)
+
+    state = jax.lax.fori_loop(0, p, inner, state)
+    return state._replace(epoch=state.epoch + 1)
+
+
+def run_dso_random(prob: Problem, p: int = 4, epochs: int = 10,
+                   eta0: float = 0.1, use_adagrad: bool = True,
+                   row_batches: int = 1, alpha0: float = 0.0, seed: int = 0,
+                   eval_every: int = 1):
+    """DSO with uniformly random block permutations per inner iteration."""
+    data = make_grid_data(prob, p)
+    state = init_state(prob, data, alpha0)
+    lam, m, _, _, _, w_lo, w_hi = _prob_meta(prob)
+    key = jax.random.PRNGKey(seed)
+    history = []
+    for t in range(1, epochs + 1):
+        key, sk = jax.random.split(key)
+        perms = jnp.stack([
+            jax.random.permutation(k, p)
+            for k in jax.random.split(sk, p)])
+        eta_t = eta0 if use_adagrad else eta0 / np.sqrt(t)
+        state = _random_epoch(
+            data, state, perms, jnp.float32(eta_t), lam, m, w_lo, w_hi,
+            loss_name=prob.loss_name, reg_name=prob.reg_name,
+            use_adagrad=use_adagrad, row_batches=row_batches, p=p,
+            db=data.db)
+        if t % eval_every == 0 or t == epochs:
+            w = gather_w(state, prob.d)
+            alpha = gather_alpha(state, prob.m)
+            history.append(dict(
+                epoch=t,
+                primal=float(primal_objective(prob, w)),
+                gap=float(duality_gap(prob, w, alpha)),
+            ))
+    return gather_w(state, prob.d), gather_alpha(state, prob.m), history

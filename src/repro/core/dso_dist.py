@@ -1,0 +1,154 @@
+"""Distributed DSO: Algorithm 1 on a ring of JAX devices.
+
+``shard_map`` over a 1-D mesh axis ``"dso"`` of p devices. Each device is one
+of the paper's processors:
+
+  resident  : its row-shard of X, labels, alpha-shard, dual AdaGrad acc.
+  travelling: one w-block + its primal AdaGrad acc, moved to the ring
+              neighbour by ``jax.lax.ppermute`` after every inner iteration —
+              this *is* the paper's bulk synchronization, expressed as an XLA
+              ``collective-permute`` (overlappable with compute).
+
+Only w (d/p numbers per device per inner iteration) is ever communicated;
+alpha and X never move — exactly the paper's communication pattern, giving
+the (|Omega| T_u / p + T_c) T epoch cost of Theorem 1.
+
+The math is identical to ``dso.run_dso_grid`` (same ``_inner_iteration``);
+tests assert bit-equality between the two.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+
+from repro.core.dso import (DSOState, GridData, _inner_iteration, _prob_meta,
+                            init_state, make_grid_data)
+from repro.core.losses import get_loss
+from repro.core.saddle import Problem, duality_gap, primal_objective
+
+
+def make_dso_mesh(p: int | None = None) -> Mesh:
+    devs = np.array(jax.devices())
+    p = p or len(devs)
+    if len(devs) < p:
+        raise ValueError(f"need {p} devices, have {len(devs)}")
+    return jax.sharding.Mesh(devs[:p], ("dso",))
+
+
+def _epoch_shardmap(mesh: Mesh, p: int, db: int, loss_name: str,
+                    reg_name: str, use_adagrad: bool, row_batches: int):
+    """Builds the jitted sharded epoch function for a fixed problem shape."""
+
+    def epoch_body(Xq, yq, rnq, col_nnz, w_blk, gw_blk, alpha_q, ga_q,
+                   eta_t, lam, m, w_lo, w_hi):
+        # Inside shard_map: Xq (1, mb, d), w_blk (1, db), ... per device.
+        q = jax.lax.axis_index("dso")
+        Xq, yq, rnq = Xq[0], yq[0], rnq[0]
+        w_blk, gw_blk = w_blk[0], gw_blk[0]
+        alpha_q, ga_q = alpha_q[0], ga_q[0]
+        meta = (lam, m, loss_name, reg_name, use_adagrad, w_lo, w_hi)
+        data = GridData(Xg=None, yg=None, row_nnz_g=None, col_nnz=col_nnz,
+                        row_valid=None, p=p, mb=Xq.shape[0], db=db)
+        perm = [(i, (i - 1) % p) for i in range(p)]
+
+        def inner(r, carry):
+            w_blk, gw_blk, alpha_q, ga_q = carry
+            blk_id = (q + r) % p
+            w_blk, alpha_q, gw_blk, ga_q = _inner_iteration(
+                meta, data, blk_id * db, w_blk, gw_blk, alpha_q, ga_q,
+                Xq, yq, rnq, eta_t, row_batches)
+            # bulk synchronization: pass the block to the ring neighbour
+            w_blk, gw_blk = jax.lax.ppermute((w_blk, gw_blk), "dso", perm)
+            return (w_blk, gw_blk, alpha_q, ga_q)
+
+        w_blk, gw_blk, alpha_q, ga_q = jax.lax.fori_loop(
+            0, p, inner, (w_blk, gw_blk, alpha_q, ga_q))
+        return (w_blk[None], gw_blk[None], alpha_q[None], ga_q[None])
+
+    sharded = shard_map(
+        epoch_body, mesh=mesh,
+        in_specs=(P("dso"), P("dso"), P("dso"), P(None), P("dso"), P("dso"),
+                  P("dso"), P("dso"), P(), P(), P(), P(), P()),
+        out_specs=(P("dso"), P("dso"), P("dso"), P("dso")),
+    )
+    return jax.jit(sharded)
+
+
+class ShardedDSO:
+    """Driver object holding device-placed state for Algorithm 1."""
+
+    def __init__(self, prob: Problem, mesh: Mesh | None = None,
+                 row_batches: int = 1, use_adagrad: bool = True,
+                 alpha0: float = 0.0):
+        self.prob = prob
+        self.mesh = mesh or make_dso_mesh()
+        self.p = self.mesh.devices.size
+        self.data = make_grid_data(prob, self.p)
+        state = init_state(prob, self.data, alpha0)
+        self.use_adagrad = use_adagrad
+        (self.lam, self.m_f, _, _, _, self.w_lo, self.w_hi) = _prob_meta(prob)
+
+        shard = NamedSharding(self.mesh, P("dso"))
+        repl = NamedSharding(self.mesh, P(None))
+        self.Xg = jax.device_put(self.data.Xg, shard)
+        self.yg = jax.device_put(self.data.yg, shard)
+        self.rng_ = jax.device_put(self.data.row_nnz_g, shard)
+        self.col_nnz = jax.device_put(self.data.col_nnz, repl)
+        # state.w_grid is indexed by block id; device q starts owning block q
+        self.w = jax.device_put(state.w_grid, shard)
+        self.gw = jax.device_put(state.gw_grid, shard)
+        self.alpha = jax.device_put(state.alpha, shard)
+        self.ga = jax.device_put(state.ga, shard)
+        self.epochs_done = 0
+        self._epoch_fn = _epoch_shardmap(
+            self.mesh, self.p, self.data.db, prob.loss_name, prob.reg_name,
+            use_adagrad, row_batches)
+
+    def epoch(self, eta0: float = 0.1):
+        t = self.epochs_done + 1
+        eta_t = eta0 if self.use_adagrad else eta0 / np.sqrt(t)
+        self.w, self.gw, self.alpha, self.ga = self._epoch_fn(
+            self.Xg, self.yg, self.rng_, self.col_nnz, self.w, self.gw,
+            self.alpha, self.ga, jnp.float32(eta_t), self.lam, self.m_f,
+            self.w_lo, self.w_hi)
+        self.epochs_done = t
+
+    # -- evaluation helpers ------------------------------------------------
+    def w_full(self):
+        """Global w, accounting for the ring position after each epoch.
+
+        After one epoch (p inner iterations) every block has made a full trip
+        around the ring, so device q again holds block q: the gathered
+        (p, db) array is already in block-id order.
+        """
+        return jnp.asarray(self.w).reshape(-1)[: self.prob.d]
+
+    def alpha_full(self):
+        return jnp.asarray(self.alpha).reshape(-1)[: self.prob.m]
+
+    def metrics(self) -> dict:
+        w, a = self.w_full(), self.alpha_full()
+        return dict(
+            epoch=self.epochs_done,
+            primal=float(primal_objective(self.prob, w)),
+            gap=float(duality_gap(self.prob, w, a)),
+        )
+
+
+def run_dso_sharded(prob: Problem, epochs: int = 10, eta0: float = 0.1,
+                    mesh: Mesh | None = None, row_batches: int = 1,
+                    use_adagrad: bool = True, alpha0: float = 0.0,
+                    eval_every: int = 1):
+    opt = ShardedDSO(prob, mesh, row_batches, use_adagrad, alpha0)
+    history = []
+    for t in range(1, epochs + 1):
+        opt.epoch(eta0)
+        if t % eval_every == 0 or t == epochs:
+            history.append(opt.metrics())
+    return opt.w_full(), opt.alpha_full(), history

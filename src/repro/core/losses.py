@@ -1,0 +1,171 @@
+"""Loss functions and their Fenchel-Legendre conjugates (paper Table 1).
+
+Each loss ``l_i(u) = l(u, y_i)`` is convex in the margin ``u = <w, x_i>``.
+The saddle objective uses the *negated conjugate at -alpha*::
+
+    -l_i*(-alpha)   with   l*(s) = sup_u  s*u - l(u)
+
+Table 1 of the paper:
+
+    hinge     l(u) = max(1 - y*u, 0)          -l*(-a) = y*a          for y*a in [0, 1]
+    logistic  l(u) = log(1 + exp(-y*u))       -l*(-a) = H(y*a)       for y*a in (0, 1)
+    square    l(u) = (u - y)^2 / 2            -l*(-a) = y*a - a^2/2  for a in R
+
+where ``H(b) = -(b log b + (1-b) log(1-b))`` is the binary entropy.
+
+``dual_grad`` returns ``d/da [ l*(-a) ]`` — the quantity appearing in the
+dual ascent step of Eq. (8):  ``alpha += eta * (-dual_grad/(m |Omega_i|) - w_j x_ij / m)``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+# App. B projects logistic alphas into (1e-14, 1 - 1e-14); that epsilon is a
+# float64/C++ constant — 1 - 1e-14 is not representable in float32, so we use
+# the float32-resolution analogue.
+_EPS = 1e-6
+
+
+@dataclasses.dataclass(frozen=True)
+class Loss:
+    """A convex loss with its conjugate machinery (all elementwise)."""
+
+    name: str
+    # primal loss l(u, y)
+    value: Callable[[Array, Array], Array]
+    # d/du l(u, y)  (subgradient where non-smooth)
+    grad: Callable[[Array, Array], Array]
+    # -l*(-alpha, y): the dual payoff appearing in f(w, alpha)
+    neg_conjugate: Callable[[Array, Array], Array]
+    # d/dalpha [ l*(-alpha, y) ]  (subgradient where non-smooth)
+    dual_grad: Callable[[Array, Array], Array]
+    # projection of alpha onto the conjugate domain (App. B)
+    project_alpha: Callable[[Array, Array], Array]
+    # half-width of the w box projection given lambda (App. B); None = no box
+    w_box: Callable[[float], float] | None
+
+
+# ---------------------------------------------------------------- hinge --
+
+
+def _hinge_value(u, y):
+    return jnp.maximum(1.0 - y * u, 0.0)
+
+
+def _hinge_grad(u, y):
+    return jnp.where(y * u < 1.0, -y, 0.0)
+
+
+def _hinge_neg_conj(a, y):
+    return y * a
+
+
+def _hinge_dual_grad(a, y):
+    # l*(-a) = -y*a on its domain  =>  d/da = -y
+    return -y
+
+
+def _hinge_project(a, y):
+    # y*a in [0, 1]  <=>  a in [0, y] (y=+1) or [y, 0] (y=-1)
+    return y * jnp.clip(y * a, 0.0, 1.0)
+
+
+# ------------------------------------------------------------- logistic --
+
+
+def _logistic_value(u, y):
+    # log(1 + exp(-y u)) = softplus(-y u), numerically stable
+    return jax.nn.softplus(-y * u)
+
+
+def _logistic_grad(u, y):
+    return -y * jax.nn.sigmoid(-y * u)
+
+
+def _logistic_neg_conj(a, y):
+    b = jnp.clip(y * a, _EPS, 1.0 - _EPS)
+    # xlogy-safe binary entropy (b may still round to 0/1 in low precision)
+    h = jnp.where(b > 0, b * jnp.log(b), 0.0)
+    h = h + jnp.where(b < 1, (1.0 - b) * jnp.log1p(-b), 0.0)
+    return -h
+
+
+def _logistic_dual_grad(a, y):
+    b = jnp.clip(y * a, _EPS, 1.0 - _EPS)
+    # l*(-a) = b log b + (1-b) log(1-b), b = y a  =>  d/da = y * logit(b)
+    return y * (jnp.log(b) - jnp.log1p(-b))
+
+
+def _logistic_project(a, y):
+    return y * jnp.clip(y * a, _EPS, 1.0 - _EPS)
+
+
+# --------------------------------------------------------------- square --
+
+
+def _square_value(u, y):
+    return 0.5 * (u - y) ** 2
+
+
+def _square_grad(u, y):
+    return u - y
+
+
+def _square_neg_conj(a, y):
+    return y * a - 0.5 * a * a
+
+
+def _square_dual_grad(a, y):
+    # l*(-a) = -y a + a^2/2  =>  d/da = a - y
+    return a - y
+
+
+def _square_project(a, y):
+    return a  # conjugate domain is all of R
+
+
+HINGE = Loss(
+    name="hinge",
+    value=_hinge_value,
+    grad=_hinge_grad,
+    neg_conjugate=_hinge_neg_conj,
+    dual_grad=_hinge_dual_grad,
+    project_alpha=_hinge_project,
+    w_box=lambda lam: 1.0 / jnp.sqrt(lam),
+)
+
+LOGISTIC = Loss(
+    name="logistic",
+    value=_logistic_value,
+    grad=_logistic_grad,
+    neg_conjugate=_logistic_neg_conj,
+    dual_grad=_logistic_dual_grad,
+    project_alpha=_logistic_project,
+    w_box=lambda lam: jnp.sqrt(jnp.log(2.0) / lam),
+)
+
+SQUARE = Loss(
+    name="square",
+    value=_square_value,
+    grad=_square_grad,
+    neg_conjugate=_square_neg_conj,
+    dual_grad=_square_dual_grad,
+    project_alpha=_square_project,
+    w_box=None,
+)
+
+LOSSES: dict[str, Loss] = {"hinge": HINGE, "logistic": LOGISTIC, "square": SQUARE}
+
+
+def get_loss(name: str) -> Loss:
+    try:
+        return LOSSES[name]
+    except KeyError:
+        raise ValueError(f"unknown loss {name!r}; have {sorted(LOSSES)}") from None

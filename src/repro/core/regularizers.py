@@ -1,0 +1,66 @@
+"""Separable regularizers ``phi_j(w_j)`` (paper Eq. 1).
+
+The paper's SVM / logistic experiments use the square-norm regularizer
+``phi(w) = w^2`` (note: *not* w^2/2 — lambda absorbs constants), and LASSO
+uses ``phi(w) = |w|``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class Regularizer:
+    name: str
+    value: Callable[[Array], Array]  # elementwise phi(w)
+    grad: Callable[[Array], Array]  # elementwise (sub)gradient
+
+    # min_w  lam * phi(w) - c * w  (closed form; used for the dual objective /
+    # duality gap). Returns the *minimum value*, elementwise in c.
+    conjugate_min: Callable[[Array, float], Array]
+
+
+def _l2_value(w):
+    return w * w
+
+
+def _l2_grad(w):
+    return 2.0 * w
+
+
+def _l2_conj_min(c, lam):
+    # min_w lam w^2 - c w  =  -c^2 / (4 lam)
+    return -(c * c) / (4.0 * lam)
+
+
+def _l1_value(w):
+    return jnp.abs(w)
+
+
+def _l1_grad(w):
+    return jnp.sign(w)
+
+
+def _l1_conj_min(c, lam):
+    # min_w lam|w| - c w = 0 if |c| <= lam else -inf
+    return jnp.where(jnp.abs(c) <= lam, 0.0, -jnp.inf)
+
+
+L2 = Regularizer("l2", _l2_value, _l2_grad, _l2_conj_min)
+L1 = Regularizer("l1", _l1_value, _l1_grad, _l1_conj_min)
+
+REGULARIZERS: dict[str, Regularizer] = {"l2": L2, "l1": L1}
+
+
+def get_regularizer(name: str) -> Regularizer:
+    try:
+        return REGULARIZERS[name]
+    except KeyError:
+        raise ValueError(f"unknown regularizer {name!r}; have {sorted(REGULARIZERS)}") from None

@@ -1,0 +1,78 @@
+"""Synthetic datasets with planted ground truth.
+
+Mirrors the character of the paper's datasets (Table 2): sparse text-like
+matrices (real-sim, news20, kdda) and dense ones (ocr, alpha, dna), generated
+at CPU-friendly scale with a fixed seed.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.saddle import Problem, make_problem
+
+
+def make_classification(m: int = 2000, d: int = 500, density: float = 0.05,
+                        loss: str = "hinge", lam: float = 1e-4,
+                        noise: float = 0.1, seed: int = 0,
+                        reg: str = "l2") -> Problem:
+    """Sparse linear-separable-ish binary classification."""
+    rng = np.random.default_rng(seed)
+    X = np.zeros((m, d), np.float32)
+    nnz_per_row = max(1, int(density * d))
+    for i in range(m):
+        cols = rng.choice(d, size=nnz_per_row, replace=False)
+        X[i, cols] = rng.normal(0, 1, size=nnz_per_row).astype(np.float32)
+    # normalize rows to unit norm (standard for text data)
+    norms = np.linalg.norm(X, axis=1, keepdims=True)
+    X /= np.maximum(norms, 1e-8)
+    w_star = rng.normal(0, 1, size=d).astype(np.float32)
+    margin = X @ w_star + noise * rng.normal(0, 1, size=m).astype(np.float32)
+    y = np.where(margin >= 0, 1.0, -1.0).astype(np.float32)
+    return make_problem(X, y, lam, loss=loss, reg=reg)
+
+
+def make_dense_classification(m: int = 2000, d: int = 128, loss: str = "hinge",
+                              lam: float = 1e-4, noise: float = 0.1,
+                              seed: int = 0) -> Problem:
+    """Dense features (ocr/alpha-like)."""
+    rng = np.random.default_rng(seed)
+    X = rng.normal(0, 1.0 / np.sqrt(d), size=(m, d)).astype(np.float32)
+    w_star = rng.normal(0, 1, size=d).astype(np.float32)
+    margin = X @ w_star + noise * rng.normal(0, 1, size=m).astype(np.float32)
+    y = np.where(margin >= 0, 1.0, -1.0).astype(np.float32)
+    return make_problem(X, y, lam, loss=loss, reg="l2")
+
+
+def make_regression(m: int = 1000, d: int = 200, density: float = 0.1,
+                    lam: float = 1e-3, seed: int = 0,
+                    reg: str = "l1") -> Problem:
+    """LASSO-style problem (square loss, L1 regularizer)."""
+    rng = np.random.default_rng(seed)
+    X = (rng.random((m, d)) < density).astype(np.float32)
+    X *= rng.normal(0, 1, size=(m, d)).astype(np.float32)
+    w_star = np.zeros(d, np.float32)
+    support = rng.choice(d, size=max(1, d // 10), replace=False)
+    w_star[support] = rng.normal(0, 2, size=len(support)).astype(np.float32)
+    y = (X @ w_star + 0.05 * rng.normal(0, 1, size=m)).astype(np.float32)
+    return make_problem(X, y, lam, loss="square", reg=reg)
+
+
+# Named CPU-scale stand-ins for the paper's datasets (Table 2 shape ratios).
+PAPER_LIKE = {
+    # name: (m, d, density)  — scaled down ~1000x, same sparsity regime
+    "real-sim": (2000, 800, 0.0025),
+    "news20": (800, 4000, 0.0005),
+    "kdda": (4000, 8000, 0.0002),
+    "ocr": (2000, 256, 1.0),
+    "alpha": (1000, 128, 1.0),
+    "worm": (1600, 64, 0.25),
+}
+
+
+def paper_like(name: str, loss: str = "hinge", lam: float = 1e-4,
+               seed: int = 0) -> Problem:
+    m, d, density = PAPER_LIKE[name]
+    if density >= 1.0:
+        return make_dense_classification(m, d, loss=loss, lam=lam, seed=seed)
+    return make_classification(m, d, density, loss=loss, lam=lam, seed=seed)

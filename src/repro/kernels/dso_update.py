@@ -1,0 +1,223 @@
+"""Pallas TPU kernel for the DSO tile step (the paper's Eq. 8, tile form).
+
+The hot loop of Algorithm 1 on TPU is the *tile step* (DESIGN.md §3): for the
+active (q, sigma_r(q)) block, compute
+
+    g_w = lam * phi'(w) * n_j / |Omega-bar_j| - X^T alpha / m      (primal)
+    g_a = -l*'(-alpha) * n_i / (m |Omega_i|)  - X w / m            (dual)
+
+then AdaGrad-scale, step, and project (App. B). Two kernels, each a flash-
+style single pass over the data tile with an on-chip accumulator:
+
+  * ``primal`` kernel: grid (d-tiles, m-tiles); the m-axis is the inner
+    reduction — partial ``X^T alpha`` and the per-column nonzero counts
+    accumulate in VMEM scratch; the final m-step applies the update to the
+    w block. HBM traffic: X once, w/gw once.
+  * ``dual`` kernel: symmetric, grid (m-tiles, d-tiles), d inner.
+
+Both kernels read the *pre-update* w and alpha (the simultaneous/Jacobi form
+used in Lemma 2), so primal+dual order does not matter.
+
+Block shapes default to (256, 512) float32 — 512 KiB per X block, well under
+VMEM, with the MXU-aligned 128-multiple on both axes.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BM = 256  # rows per X block
+DEFAULT_BD = 512  # cols per X block
+_ADA_EPS = 1e-8
+
+
+def _reg_grad(reg_name: str, w):
+    if reg_name == "l2":
+        return 2.0 * w
+    if reg_name == "l1":
+        return jnp.sign(w)
+    raise ValueError(reg_name)
+
+
+def _dual_grad(loss_name: str, a, y):
+    if loss_name == "hinge":
+        return -y
+    if loss_name == "logistic":
+        b = jnp.clip(y * a, 1e-6, 1.0 - 1e-6)
+        return y * (jnp.log(b) - jnp.log1p(-b))
+    if loss_name == "square":
+        return a - y
+    raise ValueError(loss_name)
+
+
+def _project_alpha(loss_name: str, a, y):
+    if loss_name == "hinge":
+        return y * jnp.clip(y * a, 0.0, 1.0)
+    if loss_name == "logistic":
+        return y * jnp.clip(y * a, 1e-6, 1.0 - 1e-6)
+    return a
+
+
+# ----------------------------------------------------------------- primal --
+
+
+def _primal_kernel(x_ref, alpha_ref, w_ref, gw_ref, cn_ref, scal_ref,
+                   w_out_ref, gw_out_ref, acc_ref, cnt_ref,
+                   *, n_mt: int, loss_name: str, reg_name: str):
+    mi = pl.program_id(1)  # inner reduction over row tiles
+
+    @pl.when(mi == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        cnt_ref[...] = jnp.zeros_like(cnt_ref)
+
+    x = x_ref[...]                      # (bm, bd)
+    a = alpha_ref[...]                  # (bm, 1)
+    acc_ref[...] += (a.T @ x)           # (1, bd) partial X^T alpha
+    cnt_ref[...] += (x != 0).astype(jnp.float32).sum(axis=0, keepdims=True)
+
+    @pl.when(mi == n_mt - 1)
+    def _finalize():
+        eta = scal_ref[0, 0]
+        lam = scal_ref[0, 1]
+        m = scal_ref[0, 2]
+        w_lo = scal_ref[0, 3]
+        w_hi = scal_ref[0, 4]
+        w = w_ref[...]                  # (1, bd)
+        gw = gw_ref[...]
+        cn = cn_ref[...]                # |Omega-bar_j|
+        g_w = lam * _reg_grad(reg_name, w) * cnt_ref[...] / cn - acc_ref[...] / m
+        gw_new = gw + g_w * g_w
+        dw = eta * g_w * jax.lax.rsqrt(gw_new + _ADA_EPS)
+        w_out_ref[...] = jnp.clip(w - dw, w_lo, w_hi)
+        gw_out_ref[...] = gw_new
+
+
+# ------------------------------------------------------------------- dual --
+
+
+def _dual_kernel(x_ref, w_ref, alpha_ref, ga_ref, y_ref, rn_ref, scal_ref,
+                 a_out_ref, ga_out_ref, acc_ref, cnt_ref,
+                 *, n_dt: int, loss_name: str, reg_name: str):
+    di = pl.program_id(1)  # inner reduction over column tiles
+
+    @pl.when(di == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        cnt_ref[...] = jnp.zeros_like(cnt_ref)
+
+    x = x_ref[...]                      # (bm, bd)
+    w = w_ref[...]                      # (1, bd)
+    acc_ref[...] += (x @ w.T)           # (bm, 1) partial X w
+    cnt_ref[...] += (x != 0).astype(jnp.float32).sum(axis=1, keepdims=True)
+
+    @pl.when(di == n_dt - 1)
+    def _finalize():
+        eta = scal_ref[0, 0]
+        m = scal_ref[0, 2]
+        a = alpha_ref[...]              # (bm, 1)
+        ga = ga_ref[...]
+        y = y_ref[...]
+        rn = rn_ref[...]                # |Omega_i|
+        g_a = (-_dual_grad(loss_name, a, y) * cnt_ref[...] / (m * rn)
+               - acc_ref[...] / m)
+        ga_new = ga + g_a * g_a
+        da = eta * g_a * jax.lax.rsqrt(ga_new + _ADA_EPS)
+        a_out_ref[...] = _project_alpha(loss_name, a + da, y)
+        ga_out_ref[...] = ga_new
+
+
+# ---------------------------------------------------------------- wrapper --
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("loss_name", "reg_name", "bm", "bd", "interpret"))
+def dso_tile_step_pallas(X, y, w, alpha, gw, ga, row_nnz, col_nnz, scalars,
+                         *, loss_name: str, reg_name: str,
+                         bm: int = DEFAULT_BM, bd: int = DEFAULT_BD,
+                         interpret: bool = False):
+    """One fused DSO tile step. Shapes: X (M, D); w/gw/col_nnz (D,);
+    alpha/ga/y/row_nnz (M,); scalars = [eta, lam, m, w_lo, w_hi] float32(5,).
+
+    M, D must be multiples of (bm, bd) — callers pad (ops.py handles it).
+    Returns (w_new, alpha_new, gw_new, ga_new).
+    """
+    M, D = X.shape
+    assert M % bm == 0 and D % bd == 0, (M, D, bm, bd)
+    n_mt, n_dt = M // bm, D // bd
+    w2 = w.reshape(1, D)
+    gw2 = gw.reshape(1, D)
+    cn2 = col_nnz.reshape(1, D)
+    a2 = alpha.reshape(M, 1)
+    ga2 = ga.reshape(M, 1)
+    y2 = y.reshape(M, 1)
+    rn2 = row_nnz.reshape(M, 1)
+    sc = scalars.reshape(1, 5)
+
+    kw = dict(loss_name=loss_name, reg_name=reg_name)
+
+    w_new, gw_new = pl.pallas_call(
+        functools.partial(_primal_kernel, n_mt=n_mt, **kw),
+        grid=(n_dt, n_mt),
+        in_specs=[
+            pl.BlockSpec((bm, bd), lambda dj, mi: (mi, dj)),   # X
+            pl.BlockSpec((bm, 1), lambda dj, mi: (mi, 0)),     # alpha
+            pl.BlockSpec((1, bd), lambda dj, mi: (0, dj)),     # w
+            pl.BlockSpec((1, bd), lambda dj, mi: (0, dj)),     # gw
+            pl.BlockSpec((1, bd), lambda dj, mi: (0, dj)),     # col_nnz
+            pl.BlockSpec((1, 5), lambda dj, mi: (0, 0)),       # scalars
+        ],
+        out_specs=[
+            pl.BlockSpec((1, bd), lambda dj, mi: (0, dj)),
+            pl.BlockSpec((1, bd), lambda dj, mi: (0, dj)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((1, D), jnp.float32),
+            jax.ShapeDtypeStruct((1, D), jnp.float32),
+        ],
+        # VMEM accumulators: partial X^T alpha and per-column tile counts
+        scratch_shapes=_scratch_1xbd(bd),
+        interpret=interpret,
+    )(X, a2, w2, gw2, cn2, sc)
+
+    a_new, ga_new = pl.pallas_call(
+        functools.partial(_dual_kernel, n_dt=n_dt, **kw),
+        grid=(n_mt, n_dt),
+        in_specs=[
+            pl.BlockSpec((bm, bd), lambda mi, dj: (mi, dj)),   # X
+            pl.BlockSpec((1, bd), lambda mi, dj: (0, dj)),     # w (pre-update)
+            pl.BlockSpec((bm, 1), lambda mi, dj: (mi, 0)),     # alpha
+            pl.BlockSpec((bm, 1), lambda mi, dj: (mi, 0)),     # ga
+            pl.BlockSpec((bm, 1), lambda mi, dj: (mi, 0)),     # y
+            pl.BlockSpec((bm, 1), lambda mi, dj: (mi, 0)),     # row_nnz
+            pl.BlockSpec((1, 5), lambda mi, dj: (0, 0)),       # scalars
+        ],
+        out_specs=[
+            pl.BlockSpec((bm, 1), lambda mi, dj: (mi, 0)),
+            pl.BlockSpec((bm, 1), lambda mi, dj: (mi, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((M, 1), jnp.float32),
+            jax.ShapeDtypeStruct((M, 1), jnp.float32),
+        ],
+        scratch_shapes=_scratch_bmx1(bm),
+        interpret=interpret,
+    )(X, w2, a2, ga2, y2, rn2, sc)
+
+    return (w_new.reshape(D), a_new.reshape(M), gw_new.reshape(D),
+            ga_new.reshape(M))
+
+
+def _scratch_1xbd(bd):
+    import jax.experimental.pallas.tpu as pltpu
+    return [pltpu.VMEM((1, bd), jnp.float32), pltpu.VMEM((1, bd), jnp.float32)]
+
+
+def _scratch_bmx1(bm):
+    import jax.experimental.pallas.tpu as pltpu
+    return [pltpu.VMEM((bm, 1), jnp.float32), pltpu.VMEM((bm, 1), jnp.float32)]

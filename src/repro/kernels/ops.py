@@ -1,0 +1,89 @@
+"""Public jit'd wrappers for the Pallas kernels (padding + dispatch).
+
+On this CPU container the kernels run with ``interpret=True``; on a real TPU
+set ``interpret=False`` (the default flips on backend detection).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import dso_update, ssd_scan as _ssd, swa_attention as _swa
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _pad_axis(x, axis: int, mult: int):
+    n = x.shape[axis]
+    pad = (-n) % mult
+    if pad == 0:
+        return x, n
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths), n
+
+
+def dso_tile_step(X, y, w, alpha, gw, ga, row_nnz, col_nnz, scalars, *,
+                  loss_name: str, reg_name: str, bm: int | None = None,
+                  bd: int | None = None, interpret: bool | None = None):
+    """Padded wrapper around kernels/dso_update.py. Same contract, any M, D."""
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    M, D = X.shape
+    bm = bm or min(dso_update.DEFAULT_BM, max(8, M))
+    bd = bd or min(dso_update.DEFAULT_BD, max(128, D))
+    Xp, _ = _pad_axis(X, 0, bm)
+    Xp, _ = _pad_axis(Xp, 1, bd)
+    yp, _ = _pad_axis(y, 0, bm)
+    # padded rows/cols must not divide by zero: nnz counts clamped to 1
+    rnp = jnp.concatenate([row_nnz, jnp.ones(Xp.shape[0] - M, row_nnz.dtype)])
+    cnp = jnp.concatenate([col_nnz, jnp.ones(Xp.shape[1] - D, col_nnz.dtype)])
+    wp, _ = _pad_axis(w, 0, bd)
+    gwp, _ = _pad_axis(gw, 0, bd)
+    ap, _ = _pad_axis(alpha, 0, bm)
+    gap, _ = _pad_axis(ga, 0, bm)
+    w2, a2, gw2, ga2 = dso_update.dso_tile_step_pallas(
+        Xp, yp, wp, ap, gwp, gap, rnp, cnp, scalars,
+        loss_name=loss_name, reg_name=reg_name, bm=bm, bd=bd,
+        interpret=interpret)
+    return w2[:D], a2[:M], gw2[:D], ga2[:M]
+
+
+def swa_attention(q, k, v, *, window: int, causal: bool = True,
+                  q_offset: int = 0, bq: int | None = None,
+                  bk: int | None = None, interpret: bool | None = None):
+    """Padded wrapper around kernels/swa_attention.py."""
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    B, Hq, Tq, Dh = q.shape
+    Tk = k.shape[2]
+    bq = bq or min(_swa.DEFAULT_BQ, max(8, Tq))
+    bk = bk or min(_swa.DEFAULT_BK, max(8, Tk))
+    qp, _ = _pad_axis(q, 2, bq)
+    kp, _ = _pad_axis(k, 2, bk)
+    vp, _ = _pad_axis(v, 2, bk)
+    # padded keys must never be attended: they sit at positions >= Tk, and
+    # every real query has position <= q_offset + Tq - 1 < padded positions
+    # only when causal; for safety we also rely on window masking for pads
+    # beyond the last real key (kpos > qpos always for pads under causal).
+    out = _swa.swa_attention(qp, kp, vp, window=window, causal=causal,
+                             q_offset=q_offset, bq=bq, bk=bk,
+                             interpret=interpret)
+    return out[:, :, :Tq]
+
+
+def ssd_scan(x, dt, A, B, C, *, chunk: int | None = None,
+             interpret: bool | None = None):
+    """Padded wrapper around kernels/ssd_scan.py."""
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    b, t, h, dh = x.shape
+    chunk = chunk or min(_ssd.DEFAULT_CHUNK, max(8, t))
+    xp, _ = _pad_axis(x, 1, chunk)
+    dtp, _ = _pad_axis(dt, 1, chunk)  # pad dt with 0: zero step = no effect
+    Bp, _ = _pad_axis(B, 1, chunk)
+    Cp, _ = _pad_axis(C, 1, chunk)
+    y = _ssd.ssd_scan(xp, dtp, A, Bp, Cp, chunk=chunk, interpret=interpret)
+    return y[:, :t]

@@ -1,0 +1,87 @@
+"""Pure-jnp oracles for every kernel in this package.
+
+These are the correctness ground truth: kernel tests sweep shapes/dtypes and
+``assert_allclose`` against these functions (which are themselves exercised by
+the system-level tests through ``repro.core`` / the model zoo).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.dso import block_tile_step
+
+_NEG_INF = -1e30
+
+
+def dso_tile_step_ref(X, y, w, alpha, gw, ga, row_nnz, col_nnz, scalars, *,
+                      loss_name: str, reg_name: str):
+    """Oracle for kernels/dso_update.py — delegates to the core tile step."""
+    eta, lam, m, w_lo, w_hi = [scalars[k] for k in range(5)]
+    w_new, a_new, gw_new, ga_new = block_tile_step(
+        X_tile=X, y_tile=y, w_blk=w, alpha_blk=alpha, gw_blk=gw, ga_blk=ga,
+        row_nnz_tile=row_nnz, col_nnz_blk=col_nnz, eta_t=eta, lam=lam, m=m,
+        loss_name=loss_name, reg_name=reg_name, use_adagrad=True,
+        w_lo=w_lo, w_hi=w_hi)
+    return w_new, a_new, gw_new, ga_new
+
+
+def swa_attention_ref(q, k, v, *, window: int, causal: bool = True,
+                      q_offset: int = 0):
+    """Sliding-window attention oracle.
+
+    q: (B, Hq, Tq, Dh); k, v: (B, Hkv, Tk, Dh). GQA: Hq % Hkv == 0.
+    Position of query row t is ``q_offset + t`` (decode: Tq=1,
+    q_offset=cache_len-1... pass absolute positions). Key position is its
+    index. Attends to keys in (pos - window, pos] when causal.
+    """
+    B, Hq, Tq, Dh = q.shape
+    _, Hkv, Tk, _ = k.shape
+    rep = Hq // Hkv
+    k = jnp.repeat(k, rep, axis=1)
+    v = jnp.repeat(v, rep, axis=1)
+    scale = 1.0 / jnp.sqrt(jnp.asarray(Dh, jnp.float32))
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    qpos = q_offset + jnp.arange(Tq)[:, None]
+    kpos = jnp.arange(Tk)[None, :]
+    mask = kpos <= qpos if causal else jnp.ones((Tq, Tk), bool)
+    mask = mask & (kpos > qpos - window)
+    logits = jnp.where(mask[None, None], logits, _NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def ssd_scan_ref(x, dt, A, B, C, *, chunk: int = 64):
+    """Mamba2 SSD oracle — exact sequential recurrence (arXiv:2405.21060).
+
+    x:  (b, t, h, dh)   inputs per head
+    dt: (b, t, h)       softplus-ed step sizes (>0)
+    A:  (h,)            negative decay rates (A < 0)
+    B:  (b, t, n)       input->state projection (state dim n)
+    C:  (b, t, n)       state->output projection
+    Returns y: (b, t, h, dh).
+
+      state_{t} = exp(A h dt_t) * state_{t-1} + dt_t * B_t x_t^T
+      y_t       = C_t . state_t
+    """
+    b, t, h, dh = x.shape
+    n = B.shape[-1]
+
+    def step(state, inp):
+        xt, dtt, Bt, Ct = inp  # (b,h,dh), (b,h), (b,n), (b,n)
+        decay = jnp.exp(A[None] * dtt)  # (b,h)
+        upd = jnp.einsum("bn,bh,bhd->bhnd", Bt, dtt, xt)
+        state = state * decay[..., None, None] + upd
+        y = jnp.einsum("bn,bhnd->bhd", Ct, state)
+        return state, y
+
+    state0 = jnp.zeros((b, h, n, dh), jnp.float32)
+    xs = (jnp.moveaxis(x, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(dt, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(B, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(C, 1, 0).astype(jnp.float32))
+    _, ys = jax.lax.scan(step, state0, xs)
+    return jnp.moveaxis(ys, 0, 1).astype(x.dtype)

@@ -1,0 +1,99 @@
+"""Mamba2 SSD (state-space duality) chunked scan — Pallas TPU kernel.
+
+Implements the chunk-parallel form of the SSD recurrence
+(arXiv:2405.21060): within a chunk of length L the output is a masked
+(L, L) "attention-like" matmul (MXU-friendly); across chunks a small
+(n, dh) state is carried *in VMEM scratch between sequential grid steps*
+— the TPU grid executes in order, so the inter-chunk recurrence needs no
+extra HBM round-trips.
+
+    y[t]   = sum_{tau<=t} C_t . B_tau * exp(s_t - s_tau) * dt_tau * x_tau
+             + (C_t . state_prev) * exp(s_t)
+    state' = exp(s_L) * state_prev + B^T @ (x * dt * exp(s_L - s))
+
+where s = cumsum(A * dt) within the chunk.
+
+Grid: (batch*heads, chunks) — chunks innermost/sequential. B and C are
+shared across heads (single SSD group), indexed per batch in the BlockSpec.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+DEFAULT_CHUNK = 128
+
+
+def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, o_ref, state_ref,
+                *, chunk: int):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    x = x_ref[0].astype(jnp.float32)          # (L, dh)
+    dt = dt_ref[0].astype(jnp.float32)        # (L, 1)
+    A = a_ref[0, 0]                           # scalar, < 0
+    B = b_ref[0].astype(jnp.float32)          # (L, n)
+    C = c_ref[0].astype(jnp.float32)          # (L, n)
+
+    a = A * dt                                # (L, 1) log-decay per step
+    cs = jnp.cumsum(a, axis=0)                # (L, 1)
+
+    # intra-chunk: masked decay matrix on the MXU
+    diff = cs - cs.T                          # (L, L): s_t - s_tau
+    tmask = (jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+             >= jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1))
+    decay = jnp.where(tmask, jnp.exp(diff), 0.0)
+    M = (C @ B.T) * decay * dt.T              # (L, L), columns weighted dt_tau
+    y = M @ x                                 # (L, dh)
+
+    # inter-chunk: contribution of the carried state
+    state = state_ref[...]                    # (n, dh)
+    y += jnp.exp(cs) * (C @ state)            # (L,1)*(L,dh)
+
+    # state update for the next chunk
+    last = cs[chunk - 1]                      # (1,)
+    w_in = dt * jnp.exp(last - cs)            # (L, 1)
+    state_ref[...] = jnp.exp(last) * state + B.T @ (x * w_in)
+
+    o_ref[0] = y.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan(x, dt, A, B, C, *, chunk: int = DEFAULT_CHUNK,
+             interpret: bool = False):
+    """x: (b, t, h, dh); dt: (b, t, h) (>0); A: (h,) (<0); B, C: (b, t, n).
+
+    t must be a multiple of ``chunk`` (ops.py pads). Returns y like x.
+    """
+    b, t, h, dh = x.shape
+    n = B.shape[-1]
+    assert t % chunk == 0
+    n_chunks = t // chunk
+    xf = x.transpose(0, 2, 1, 3).reshape(b * h, t, dh)
+    dtf = dt.transpose(0, 2, 1).reshape(b * h, t, 1)
+    a2 = A.reshape(h, 1)
+
+    out = pl.pallas_call(
+        functools.partial(_ssd_kernel, chunk=chunk),
+        grid=(b * h, n_chunks),
+        in_specs=[
+            pl.BlockSpec((1, chunk, dh), lambda bh, c: (bh, c, 0)),   # x
+            pl.BlockSpec((1, chunk, 1), lambda bh, c: (bh, c, 0)),    # dt
+            pl.BlockSpec((1, 1), lambda bh, c: (bh % h, 0)),          # A
+            pl.BlockSpec((1, chunk, n), lambda bh, c: (bh // h, c, 0)),  # B
+            pl.BlockSpec((1, chunk, n), lambda bh, c: (bh // h, c, 0)),  # C
+        ],
+        out_specs=pl.BlockSpec((1, chunk, dh), lambda bh, c: (bh, c, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, t, dh), x.dtype),
+        scratch_shapes=[pltpu.VMEM((n, dh), jnp.float32)],  # carried state
+        interpret=interpret,
+    )(xf, dtf, a2, B, C)
+    return out.reshape(b, h, t, dh).transpose(0, 2, 1, 3)

@@ -1,0 +1,120 @@
+"""Sliding-window flash attention (Pallas TPU).
+
+Used by the long-context (``long_500k``) variants of the full-attention
+architectures (DESIGN.md §4): causal attention restricted to the last
+``window`` positions, computed as a single pass over KV tiles with the
+online-softmax recurrence (flash attention), never materializing the
+(Tq, Tk) score matrix.
+
+Grid: (batch*q_heads, q-tiles, kv-tiles), kv innermost (reduction).  Scratch
+keeps the running max ``m``, normalizer ``l`` and output accumulator in VMEM.
+Fully-masked kv tiles are skipped with ``pl.when`` (the window makes most of
+the grid empty — this is the structural win over dense attention).
+
+GQA: q heads map onto kv heads in the BlockSpec index map — no repeat/copy of
+KV in HBM.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+DEFAULT_BQ = 256
+DEFAULT_BK = 256
+_NEG_INF = -1e30
+
+
+def _swa_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+                *, bq: int, bk: int, n_kt: int, window: int, causal: bool,
+                q_offset: int, scale: float):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    qpos = q_offset + qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    kpos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    in_window = kpos > qpos - window
+    if causal:
+        in_window &= kpos <= qpos
+
+    # tile-level skip: any overlap between this kv tile and any query's window?
+    lo_q = q_offset + qi * bq               # smallest query position in tile
+    hi_q = q_offset + (qi + 1) * bq - 1     # largest
+    lo_k, hi_k = ki * bk, (ki + 1) * bk - 1
+    live = (lo_k <= hi_q) if causal else True
+    live = jnp.logical_and(live, hi_k > lo_q - window)
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)          # (bq, dh)
+        k = k_ref[0].astype(jnp.float32)          # (bk, dh)
+        v = v_ref[0].astype(jnp.float32)
+        s = (q @ k.T) * scale                     # (bq, bk)
+        s = jnp.where(in_window, s, _NEG_INF)
+        m_prev = m_ref[...]                       # (bq, 1)
+        m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + p.sum(axis=1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * corr + p @ v
+        m_ref[...] = m_new
+
+    @pl.when(ki == n_kt - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("window", "causal", "q_offset", "bq", "bk", "interpret"))
+def swa_attention(q, k, v, *, window: int, causal: bool = True,
+                  q_offset: int = 0, bq: int = DEFAULT_BQ,
+                  bk: int = DEFAULT_BK, interpret: bool = False):
+    """q: (B, Hq, Tq, Dh); k, v: (B, Hkv, Tk, Dh); returns (B, Hq, Tq, Dh).
+
+    Tq, Tk must be multiples of (bq, bk) — ops.py pads. ``q_offset`` is the
+    absolute position of q's first row (decode: cache_len - Tq).
+    """
+    B, Hq, Tq, Dh = q.shape
+    _, Hkv, Tk, _ = k.shape
+    assert Hq % Hkv == 0 and Tq % bq == 0 and Tk % bk == 0
+    rep = Hq // Hkv
+    n_qt, n_kt = Tq // bq, Tk // bk
+    qf = q.reshape(B * Hq, Tq, Dh)
+    kf = k.reshape(B * Hkv, Tk, Dh)
+    vf = v.reshape(B * Hkv, Tk, Dh)
+    scale = 1.0 / (Dh ** 0.5)
+
+    def kv_map(bh, qi, ki):
+        return ((bh // Hq) * Hkv + (bh % Hq) // rep, ki, 0)
+
+    out = pl.pallas_call(
+        functools.partial(_swa_kernel, bq=bq, bk=bk, n_kt=n_kt, window=window,
+                          causal=causal, q_offset=q_offset, scale=scale),
+        grid=(B * Hq, n_qt, n_kt),
+        in_specs=[
+            pl.BlockSpec((1, bq, Dh), lambda bh, qi, ki: (bh, qi, 0)),
+            pl.BlockSpec((1, bk, Dh), kv_map),
+            pl.BlockSpec((1, bk, Dh), kv_map),
+        ],
+        out_specs=pl.BlockSpec((1, bq, Dh), lambda bh, qi, ki: (bh, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * Hq, Tq, Dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),   # running max
+            pltpu.VMEM((bq, 1), jnp.float32),   # normalizer
+            pltpu.VMEM((bq, Dh), jnp.float32),  # output accumulator
+        ],
+        interpret=interpret,
+    )(qf, kf, vf)
+    return out.reshape(B, Hq, Tq, Dh)

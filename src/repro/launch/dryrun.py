@@ -1,0 +1,279 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# The two lines above MUST run before any jax-importing module: jax locks the
+# device count on first init, and the dry-run needs 512 placeholder devices
+# to build the production mesh. (Only this entry point does this — tests and
+# benches see the real single device.)
+
+import argparse      # noqa: E402
+import json          # noqa: E402
+import re            # noqa: E402
+import sys           # noqa: E402
+import time          # noqa: E402
+import traceback     # noqa: E402
+
+import jax           # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro.configs.registry import (ARCH_IDS, INPUT_SHAPES,  # noqa: E402
+                                    get_config)
+from repro.dist import sharding as shd  # noqa: E402
+from repro.launch import specs as S  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.models import model as M  # noqa: E402
+from repro.serving.engine import make_serve_step  # noqa: E402
+from repro.training import optimizer as opt  # noqa: E402
+from repro.training.train import TrainState, make_train_step  # noqa: E402
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "benchmarks", "results", "dryrun")
+
+# HLO collective ops and the bytes-on-the-wire factor applied to the listed
+# shape (n = shards participating; factors are the standard ring costs):
+#   all-gather:        result bytes * (n-1)/n   (result listed)
+#   reduce-scatter:    operand bytes * (n-1)/n  (operand = result * n)
+#   all-reduce:        2 * operand * (n-1)/n    (ring RS + AG)
+#   all-to-all:        operand * (n-1)/n
+#   collective-permute: operand * 1
+_COLL_RE = re.compile(
+    r"=\s*(?:\(([^)]*)\)|((?:[a-z0-9]+)\[[^\]]*\][^ ]*))\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "s64": 8, "u64": 8,
+    "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+
+def _shape_bytes(txt: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(txt):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+_GROUPS_EXPL_RE = re.compile(r"replica_groups=\{\{([0-9, ]*)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))  # [n_groups, group_size]<=...
+    m = _GROUPS_EXPL_RE.search(line)
+    if m:
+        ids = [x for x in m.group(1).split(",") if x.strip()]
+        return max(1, len(ids))
+    return 1
+
+
+# ring wire-bytes factors given per-device result bytes r and group size n
+_WIRE = {
+    "all-gather": lambda r, n: r * (n - 1) / max(n, 1),
+    "all-reduce": lambda r, n: 2.0 * r * (n - 1) / max(n, 1),
+    "reduce-scatter": lambda r, n: r * (n - 1),      # result = operand/n
+    "all-to-all": lambda r, n: r * (n - 1) / max(n, 1),
+    "collective-permute": lambda r, n: float(r),
+}
+
+
+def parse_collectives(hlo: str, top_k: int = 8) -> dict:
+    """Per-kind totals from optimized HLO: op count, per-device result bytes,
+    estimated ring wire bytes (using each op's replica-group size). Also
+    records the ``top_k`` largest individual collective ops (for targeting
+    perf work at the dominant transfers)."""
+    out: dict[str, dict] = {}
+    ops = []
+    for m in _COLL_RE.finditer(hlo):
+        shape_txt = m.group(1) or m.group(2)
+        kind = m.group(3)
+        line = hlo[m.start(): hlo.find("\n", m.start())]
+        b = _shape_bytes(shape_txt)
+        n = _group_size(line)
+        wire = _WIRE[kind](b, n)
+        d = out.setdefault(kind, {"count": 0, "result_bytes": 0,
+                                  "wire_bytes": 0.0})
+        d["count"] += 1
+        d["result_bytes"] += b
+        d["wire_bytes"] += wire
+        ops.append((wire, kind, shape_txt.strip()[:120], n))
+    ops.sort(reverse=True)
+    out["__top_ops__"] = [
+        {"wire_bytes": w, "kind": k, "shape": s, "group": n}
+        for w, k, s, n in ops[:top_k]]
+    return out
+
+
+def build(arch: str, shape_name: str, *, multi_pod: bool, remat: bool = True,
+          q_chunk: int = 2048, extra: dict | None = None,
+          unroll: bool = False):
+    """Returns (jitted_fn, example_args_sds) for this pair."""
+    cfg = get_config(arch)
+    if extra:
+        import dataclasses
+        cfg = dataclasses.replace(cfg, **extra)
+    shape = INPUT_SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    params_sds = S.param_spec_tree(cfg)
+    p_sh = shd.param_shardings(mesh, params_sds)
+
+    if shape.kind == "train":
+        ocfg = opt.AdamWConfig()
+        opt_sds = jax.eval_shape(opt.init, params_sds)
+        state_sds = TrainState(params=params_sds, opt=opt_sds)
+        state_sh = TrainState(
+            params=p_sh,
+            opt=opt.OptState(mu=p_sh, nu=p_sh,
+                             step=NamedSharding(mesh, P())))
+        bshapes = S.batch_specs(cfg, shape)
+        d_specs = shd.data_specs(mesh, bshapes)
+        d_sh = {k: NamedSharding(mesh, s) for k, s in d_specs.items()}
+        fn = make_train_step(cfg, ocfg, remat=remat, q_chunk=q_chunk,
+                             unroll=unroll)
+        jit_fn = jax.jit(fn, in_shardings=(state_sh, d_sh),
+                         out_shardings=(state_sh, None), donate_argnums=(0,))
+        return jit_fn, (state_sds, bshapes), mesh, cfg
+
+    if shape.kind == "prefill":
+        bshapes = S.batch_specs(cfg, shape)
+        d_specs = shd.data_specs(mesh, bshapes)
+        d_sh = {k: NamedSharding(mesh, s) for k, s in d_specs.items()}
+
+        def prefill(params, batch):
+            logits, _ = M.forward(params, batch, cfg, remat=False,
+                                  q_chunk=q_chunk, last_only=True,
+                                  unroll=unroll)
+            return logits
+
+        jit_fn = jax.jit(prefill, in_shardings=(p_sh, d_sh))
+        return jit_fn, (params_sds, bshapes), mesh, cfg
+
+    # decode
+    state_sds = S.decode_state_specs(cfg, shape)
+    st_specs = shd.decode_state_specs_tree(mesh, state_sds,
+                                           shape.global_batch)
+    st_sh = jax.tree.map(lambda s: NamedSharding(mesh, s), st_specs,
+                         is_leaf=lambda x: isinstance(x, P))
+    dspec = S.decode_specs(cfg, shape)
+    bspec = shd.batch_spec(mesh, shape.global_batch)
+    inp_sh = NamedSharding(mesh, P(*(tuple(bspec)
+                                     + (None,) * (len(dspec["inp"].shape) - 1))))
+    pos_sh = NamedSharding(mesh, P())
+    serve = make_serve_step(cfg, seq_len=shape.seq_len, unroll=unroll)
+    if cfg.arch_type == "vlm":
+        img_sds = dspec["image_embeds"]
+        img_sh = NamedSharding(mesh, P(*(tuple(bspec) + (None, None))))
+
+        def fn(params, state, inp, pos, image_embeds):
+            return serve(params, state, inp, pos, image_embeds=image_embeds)
+
+        jit_fn = jax.jit(fn, in_shardings=(p_sh, st_sh, inp_sh, pos_sh,
+                                           img_sh),
+                         out_shardings=(None, st_sh), donate_argnums=(1,))
+        args = (params_sds, state_sds, dspec["inp"], dspec["pos"], img_sds)
+    else:
+        jit_fn = jax.jit(serve, in_shardings=(p_sh, st_sh, inp_sh, pos_sh),
+                         out_shardings=(None, st_sh), donate_argnums=(1,))
+        args = (params_sds, state_sds, dspec["inp"], dspec["pos"])
+    return jit_fn, args, mesh, cfg
+
+
+def run_pair(arch: str, shape_name: str, *, multi_pod: bool,
+             save: bool = True, verbose: bool = True, unroll: bool = False,
+             extra: dict | None = None) -> dict:
+    t0 = time.time()
+    jit_fn, args, mesh, cfg = build(arch, shape_name, multi_pod=multi_pod,
+                                    unroll=unroll, extra=extra)
+    with mesh:  # ambient mesh for with_sharding_constraint(PartitionSpec)
+        lowered = jit_fn.lower(*args)
+    t_lower = time.time() - t0
+    compiled = lowered.compile()
+    t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    mem_d = {}
+    if mem is not None:
+        for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                     "temp_size_in_bytes", "generated_code_size_in_bytes",
+                     "alias_size_in_bytes"):
+            mem_d[attr] = int(getattr(mem, attr, 0) or 0)
+    cost = compiled.cost_analysis() or {}
+    cost_d = {k: float(v) for k, v in cost.items()
+              if isinstance(v, (int, float)) and (
+                  k in ("flops", "bytes accessed", "transcendentals")
+                  or k.startswith("bytes accessed"))}
+    hlo = compiled.as_text()
+    coll = parse_collectives(hlo)
+
+    n_dev = mesh.devices.size
+    rec = dict(
+        arch=arch, shape=shape_name, unroll=unroll,
+        mesh="2x16x16" if multi_pod else "16x16", n_devices=int(n_dev),
+        params=cfg.param_count(), active_params=cfg.active_param_count(),
+        lower_s=round(t_lower, 1), compile_s=round(t_compile, 1),
+        memory=mem_d, cost=cost_d, collectives=coll,
+        hlo_bytes=len(hlo),
+    )
+    if verbose:
+        print(json.dumps(rec, indent=1)[:2000])
+        print(compiled.memory_analysis())
+    if save:
+        os.makedirs(RESULTS_DIR, exist_ok=True)
+        tag = f"{arch}__{shape_name}__{'multipod' if multi_pod else 'pod'}"
+        if unroll:
+            tag += "__unroll"
+        if extra:
+            tag += "__opt"
+        with open(os.path.join(RESULTS_DIR, tag + ".json"), "w") as f:
+            json.dump(rec, f, indent=1)
+    return rec
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description="multi-pod AOT dry-run")
+    ap.add_argument("--arch", choices=ARCH_IDS, required=False)
+    ap.add_argument("--shape", choices=list(INPUT_SHAPES), required=False)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--unroll", action="store_true",
+                    help="fully unroll layer scans (truthful cost_analysis)")
+    ap.add_argument("--optimized", action="store_true",
+                    help="apply the per-arch §Perf winner knobs")
+    ap.add_argument("--all", action="store_true")
+    args = ap.parse_args(argv)
+    pairs = []
+    if args.all:
+        for a in ARCH_IDS:
+            for s in INPUT_SHAPES:
+                pairs.append((a, s))
+    else:
+        assert args.arch and args.shape
+        pairs = [(args.arch, args.shape)]
+    failures = []
+    for a, s in pairs:
+        try:
+            from repro.configs.registry import OPTIMIZED_KNOBS
+            extra = OPTIMIZED_KNOBS.get(a) if args.optimized else None
+            rec = run_pair(a, s, multi_pod=args.multi_pod,
+                           unroll=args.unroll, extra=extra)
+            print(f"PASS {a} {s} flops={rec['cost'].get('flops')}")
+        except Exception as e:  # noqa: BLE001
+            traceback.print_exc()
+            failures.append((a, s, repr(e)))
+            print(f"FAIL {a} {s}: {e}")
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

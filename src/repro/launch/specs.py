@@ -1,0 +1,67 @@
+"""Abstract input/state specs for every (architecture x input shape) pair.
+
+Everything here is ``jax.ShapeDtypeStruct`` — weak-type-correct, shardable,
+zero allocation — so the dry-run can ``.lower().compile()`` full-scale
+configs on a CPU host.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.registry import InputShape
+from repro.models import model as M
+from repro.models.config import ModelConfig
+
+SDS = jax.ShapeDtypeStruct
+
+
+def batch_specs(cfg: ModelConfig, shape: InputShape) -> dict:
+    """Batch pytree specs for a *training or prefill* step."""
+    B, S = shape.global_batch, shape.seq_len
+    specs = {}
+    if cfg.inputs_embeds:
+        specs["embeds"] = SDS((B, S, cfg.d_model), jnp.dtype(cfg.dtype))
+    else:
+        specs["tokens"] = SDS((B, S), jnp.int32)
+    if shape.kind == "train":
+        specs["targets"] = SDS((B, S), jnp.int32)
+    if cfg.arch_type == "vlm":
+        specs["image_embeds"] = SDS((B, cfg.n_image_tokens, cfg.d_model),
+                                    jnp.dtype(cfg.dtype))
+    return specs
+
+
+def decode_specs(cfg: ModelConfig, shape: InputShape) -> dict:
+    """Input specs for one serve_step: ONE token against a seq_len cache."""
+    B = shape.global_batch
+    if cfg.inputs_embeds:
+        inp = SDS((B, 1, cfg.d_model), jnp.dtype(cfg.dtype))
+    else:
+        inp = SDS((B, 1), jnp.int32)
+    specs = {"inp": inp, "pos": SDS((), jnp.int32)}
+    if cfg.arch_type == "vlm":
+        specs["image_embeds"] = SDS((B, cfg.n_image_tokens, cfg.d_model),
+                                    jnp.dtype(cfg.dtype))
+    return specs
+
+
+def param_spec_tree(cfg: ModelConfig):
+    return M.param_specs(cfg)  # eval_shape — no allocation
+
+
+def decode_state_specs(cfg: ModelConfig, shape: InputShape):
+    return jax.eval_shape(
+        lambda: M.init_decode_state(cfg, shape.global_batch, shape.seq_len))
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape) -> dict:
+    """The full abstract input set for this (arch, shape) pair."""
+    if shape.kind == "decode":
+        return {
+            "params": param_spec_tree(cfg),
+            "state": decode_state_specs(cfg, shape),
+            **decode_specs(cfg, shape),
+        }
+    return {"params": param_spec_tree(cfg), "batch": batch_specs(cfg, shape)}

@@ -1,0 +1,225 @@
+"""Attention: GQA/MQA/MHA with RoPE, causal / sliding-window / cross variants.
+
+Three execution paths, all mathematically the flash recurrence of
+``kernels/swa_attention.py`` (the Pallas kernel is the TPU hot-spot twin;
+these jnp paths are what XLA partitions for the multi-pod dry-run):
+
+  * direct:    T small (<= q_chunk) — one masked einsum.
+  * triangle:  long causal prefill — q processed in static tiles, each tile
+               attending only to its static [0, (i+1)*qc) key prefix, so the
+               compiled FLOPs follow the causal triangle, not the full square.
+  * windowed:  sliding-window prefill — each q tile attends to a static
+               window+qc slice of keys: O(T * window) FLOPs.
+
+Decode keeps either a full (seq_len) cache or a ring buffer of ``window``
+slots (long_500k), and always attends over the static cache length.
+
+Layout: activations (B, T, d); q heads grouped as (G kv groups, R repeats)
+so KV is never materialized per-q-head (GQA-friendly sharding: head axes
+shard over the 'model' mesh axis).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import _dense_init, apply_rope
+
+Array = jax.Array
+_NEG_INF = -1e30
+
+
+def attn_init(key, cfg: ModelConfig, dtype, cross: bool = False):
+    d, hq, dh = cfg.d_model, cfg.n_heads, cfg.head_dim
+    g = cfg.n_kv_heads or hq
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": _dense_init(ks[0], (d, hq * dh), dtype=dtype),
+        "wk": _dense_init(ks[1], (d, g * dh), dtype=dtype),
+        "wv": _dense_init(ks[2], (d, g * dh), dtype=dtype),
+        "wo": _dense_init(ks[3], (hq * dh, d), dtype=dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((hq * dh,), dtype)
+        p["bk"] = jnp.zeros((g * dh,), dtype)
+        p["bv"] = jnp.zeros((g * dh,), dtype)
+    return p
+
+
+def _project_q(p, x, cfg: ModelConfig):
+    B, T, _ = x.shape
+    q = jnp.einsum("btd,dh->bth", x, p["wq"])
+    if "bq" in p:
+        q = q + p["bq"]
+    return q.reshape(B, T, cfg.n_heads, cfg.head_dim)
+
+
+def _project_kv(p, x, cfg: ModelConfig):
+    B, T, _ = x.shape
+    g = cfg.n_kv_heads or cfg.n_heads
+    k = jnp.einsum("btd,dh->bth", x, p["wk"])
+    v = jnp.einsum("btd,dh->bth", x, p["wv"])
+    if "bk" in p:
+        k, v = k + p["bk"], v + p["bv"]
+    return (k.reshape(B, T, g, cfg.head_dim),
+            v.reshape(B, T, g, cfg.head_dim))
+
+
+_MODEL_AXIS = 16  # production mesh model-axis size (launch/mesh.py)
+
+
+def _constrain(t, cfg: ModelConfig):
+    """§Perf: pin (B, T, H, Dh) attention activations to an explicit layout
+    so the partitioner never falls back to replication (observed for head
+    counts that do not divide the model axis)."""
+    if cfg.attn_shard == "none":
+        return t
+    from jax.sharding import PartitionSpec as P
+    if cfg.attn_shard == "heads":
+        if t.shape[2] % _MODEL_AXIS == 0:
+            spec = P("data", None, "model", None)
+        else:  # few KV heads (MQA/GQA): batch-shard only, heads replicated
+            spec = P("data", None, None, None)
+    else:  # 'batch': spread batch over both axes; heads replicated
+        spec = P(("data", "model"), None, None, None)
+    return jax.lax.with_sharding_constraint(t, spec)
+
+
+def _attend(q, k, v, mask):
+    """q: (B,Tq,G,R,Dh), k/v: (B,Tk,G,Dh), mask: (Tq,Tk) or None."""
+    scale = 1.0 / (q.shape[-1] ** 0.5)
+    s = jnp.einsum("bqgrd,bkgd->bgrqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if mask is not None:
+        s = jnp.where(mask[None, None, None], s, _NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bgrqk,bkgd->bqgrd", p, v.astype(jnp.float32))
+    return out
+
+
+def _grouped(q, g):
+    B, T, H, Dh = q.shape
+    return q.reshape(B, T, g, H // g, Dh)
+
+
+def _merge_heads(o):
+    B, T, G, R, Dh = o.shape
+    return o.reshape(B, T, G * R * Dh)
+
+
+def self_attention(p, x, cfg: ModelConfig, *, positions=None,
+                   window: int | None = None, q_chunk: int = 2048):
+    """Causal self-attention over x (B, T, d) — training / prefill."""
+    B, T, d = x.shape
+    g = cfg.n_kv_heads or cfg.n_heads
+    pos = positions if positions is not None else jnp.arange(T)
+    q = _project_q(p, x, cfg)
+    k, v = _project_kv(p, x, cfg)
+    if cfg.pos == "rope":
+        q = apply_rope(q, pos, cfg.rope_theta)
+        k = apply_rope(k, pos, cfg.rope_theta)
+    q = _constrain(q, cfg)
+    k = _constrain(k, cfg)
+    v = _constrain(v, cfg)
+    qg = _grouped(q, g)
+
+    dtype = x.dtype
+    if T <= q_chunk:
+        qpos = jnp.arange(T)[:, None]
+        kpos = jnp.arange(T)[None, :]
+        mask = kpos <= qpos
+        if window is not None:
+            mask &= kpos > qpos - window
+        o = _attend(qg, k, v, mask)
+        return _finish(p, o, dtype)
+
+    assert T % q_chunk == 0, (T, q_chunk)
+    n_qt = T // q_chunk
+    outs = []
+    for i in range(n_qt):
+        q_i = jax.lax.slice_in_dim(qg, i * q_chunk, (i + 1) * q_chunk, axis=1)
+        if window is None:
+            # causal triangle: keys [0, (i+1) * qc)
+            hi = (i + 1) * q_chunk
+            k_i = jax.lax.slice_in_dim(k, 0, hi, axis=1)
+            v_i = jax.lax.slice_in_dim(v, 0, hi, axis=1)
+            qpos = i * q_chunk + jnp.arange(q_chunk)[:, None]
+            kpos = jnp.arange(hi)[None, :]
+            mask = kpos <= qpos
+        else:
+            # sliding window: keys [lo, (i+1) * qc) with static length
+            hi = (i + 1) * q_chunk
+            lo = max(0, hi - window - q_chunk)
+            k_i = jax.lax.slice_in_dim(k, lo, hi, axis=1)
+            v_i = jax.lax.slice_in_dim(v, lo, hi, axis=1)
+            qpos = i * q_chunk + jnp.arange(q_chunk)[:, None]
+            kpos = lo + jnp.arange(hi - lo)[None, :]
+            mask = (kpos <= qpos) & (kpos > qpos - window)
+        outs.append(_attend(q_i, k_i, v_i, mask))
+    o = jnp.concatenate(outs, axis=1)
+    return _finish(p, o, dtype)
+
+
+def _finish(p, o, dtype):
+    out = _merge_heads(o).astype(dtype)
+    return jnp.einsum("bth,hd->btd", out, p["wo"])
+
+
+def cross_attention(p, x, kv_embeds, cfg: ModelConfig):
+    """x (B,T,d) attends to kv_embeds (B,S,d) — no mask, no rope on kv."""
+    g = cfg.n_kv_heads or cfg.n_heads
+    q = _project_q(p, x, cfg)
+    k, v = _project_kv(p, kv_embeds, cfg)
+    o = _attend(_grouped(q, g), k, v, None)
+    return _finish(p, o, x.dtype)
+
+
+# ------------------------------------------------------------------ decode --
+
+
+def init_cache(cfg: ModelConfig, batch: int, seq_len: int, dtype):
+    """KV cache for one layer. Ring-buffered if seq_len exceeds the
+    full-attention budget (long-context)."""
+    g = cfg.n_kv_heads or cfg.n_heads
+    S = seq_len if seq_len <= cfg.full_attn_max else cfg.sliding_window
+    return {
+        "k": jnp.zeros((batch, S, g, cfg.head_dim), dtype),
+        "v": jnp.zeros((batch, S, g, cfg.head_dim), dtype),
+    }
+
+
+def decode_self_attention(p, x, cache, pos, cfg: ModelConfig, *,
+                          seq_len: int):
+    """One-token decode. x: (B, 1, d); pos: scalar int32 (current position).
+
+    Returns (out (B,1,d), new_cache). The cache is a ring buffer when
+    seq_len > cfg.full_attn_max (slot = pos % window).
+    """
+    B = x.shape[0]
+    g = cfg.n_kv_heads or cfg.n_heads
+    S = cache["k"].shape[1]
+    windowed = seq_len > cfg.full_attn_max
+    q = _project_q(p, x, cfg)
+    k, v = _project_kv(p, x, cfg)
+    if cfg.pos == "rope":
+        pvec = jnp.full((1,), pos, jnp.int32)
+        q = apply_rope(q, pvec, cfg.rope_theta)
+        k = apply_rope(k, pvec, cfg.rope_theta)
+    slot = jax.lax.rem(pos, S) if windowed else pos
+    ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype),
+                                      (0, slot, 0, 0))
+    cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype),
+                                      (0, slot, 0, 0))
+    slots = jnp.arange(S)
+    if windowed:
+        # position currently held by slot s: pos - ((pos - s) mod S)
+        kpos = pos - jnp.mod(pos - slots, S)  # floor-mod: always in [0, S)
+        valid = kpos >= 0  # ring not yet filled
+    else:
+        kpos = slots
+        valid = slots <= pos
+    mask = valid[None, :]  # (1, S) — single query row
+    o = _attend(_grouped(q, g), ck, cv, mask)
+    return _finish(p, o, x.dtype), {"k": ck, "v": cv}

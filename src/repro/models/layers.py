@@ -1,0 +1,110 @@
+"""Shared neural building blocks (pure JAX, pytree params)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def _dense_init(key, shape, scale=None, dtype=jnp.float32):
+    fan_in = shape[0]
+    scale = scale if scale is not None else 1.0 / jnp.sqrt(fan_in)
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+# ------------------------------------------------------------------ norm --
+
+
+def rmsnorm_init(d: int, dtype=jnp.float32):
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(params, x, eps: float = 1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * params["scale"].astype(jnp.float32)).astype(dt)
+
+
+# ------------------------------------------------------------------ rope --
+
+
+def rope_freqs(head_dim: int, theta: float):
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x: Array, positions: Array, theta: float) -> Array:
+    """x: (..., T, H, Dh); positions: (..., T) int32."""
+    half = x.shape[-1] // 2
+    freqs = rope_freqs(x.shape[-1], theta)          # (half,)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (..., T, half)
+    cos = jnp.cos(angles)[..., :, None, :]          # (..., T, 1, half)
+    sin = jnp.sin(angles)[..., :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.concatenate([xf1 * cos - xf2 * sin, xf2 * cos + xf1 * sin],
+                          axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_pos(positions: Array, d_model: int) -> Array:
+    """MusicGen-style fixed sinusoidal embeddings: (..., T, d_model)."""
+    half = d_model // 2
+    freqs = 1.0 / (10_000.0 ** (jnp.arange(half, dtype=jnp.float32) / half))
+    angles = positions[..., None].astype(jnp.float32) * freqs
+    return jnp.concatenate([jnp.sin(angles), jnp.cos(angles)], axis=-1)
+
+
+# ------------------------------------------------------------------- mlp --
+
+
+def mlp_init(key, d_model: int, d_ff: int, kind: str, dtype=jnp.float32):
+    ks = jax.random.split(key, 3)
+    if kind == "swiglu":
+        return {
+            "w_gate": _dense_init(ks[0], (d_model, d_ff), dtype=dtype),
+            "w_up": _dense_init(ks[1], (d_model, d_ff), dtype=dtype),
+            "w_down": _dense_init(ks[2], (d_ff, d_model), dtype=dtype),
+        }
+    return {
+        "w_up": _dense_init(ks[0], (d_model, d_ff), dtype=dtype),
+        "w_down": _dense_init(ks[1], (d_ff, d_model), dtype=dtype),
+    }
+
+
+def mlp_apply(params, x, kind: str):
+    if kind == "swiglu":
+        g = jnp.einsum("...d,df->...f", x, params["w_gate"])
+        u = jnp.einsum("...d,df->...f", x, params["w_up"])
+        h = jax.nn.silu(g) * u
+    else:
+        h = jax.nn.gelu(jnp.einsum("...d,df->...f", x, params["w_up"]))
+    return jnp.einsum("...f,fd->...d", h, params["w_down"])
+
+
+# -------------------------------------------------------------- embedding --
+
+
+def embedding_init(key, vocab: int, d_model: int, dtype=jnp.float32):
+    return {"table": _dense_init(key, (vocab, d_model), scale=0.02,
+                                 dtype=dtype)}
+
+
+def embed(params, tokens):
+    return jnp.take(params["table"], tokens, axis=0)
+
+
+def unembed_init(key, d_model: int, vocab: int, dtype=jnp.float32):
+    return {"w": _dense_init(key, (d_model, vocab), dtype=dtype)}
+
+
+def unembed(params, x, dtype=jnp.float32):
+    # float32 by default for a stable softmax-xent; bf16 selectable for the
+    # memory-bound loss path (lse accumulates in f32 either way).
+    return jnp.einsum("...d,dv->...v", x.astype(dtype),
+                      params["w"].astype(dtype),
+                      preferred_element_type=jnp.float32).astype(dtype)

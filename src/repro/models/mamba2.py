@@ -1,0 +1,243 @@
+"""Mamba2 (SSD — state-space duality, arXiv:2405.21060) block.
+
+Faithful shape structure: in_proj produces (z | x | B | C | dt); a short
+causal conv over (x, B, C); SSD scan with per-head scalar decay A; gated
+RMSNorm; out_proj. The SSD scan is the chunked algorithm of
+``kernels/ssd_scan.py`` re-expressed in jnp (`ssd_chunked`) so XLA can
+partition it for the dry-run; the Pallas kernel is its TPU twin and the
+tests assert all three (kernel, chunked, sequential oracle) agree.
+
+Decode carries (conv ring buffer, SSD state) — O(1) per token, which is why
+the SSM/hybrid architectures run ``long_500k`` natively.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import _dense_init, rmsnorm, rmsnorm_init
+
+Array = jax.Array
+
+
+def mamba2_init(key, cfg: ModelConfig, dtype):
+    d = cfg.d_model
+    di = cfg.d_inner
+    n = cfg.ssm_state
+    h = cfg.ssm_heads
+    conv_dim = di + 2 * n
+    ks = jax.random.split(key, 10)
+    p = {
+        "A_log": jnp.zeros((h,), jnp.float32),       # A = -exp(A_log)
+        "D": jnp.ones((h,), jnp.float32),            # skip connection
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "norm": rmsnorm_init(di, jnp.float32),
+        "out_proj": _dense_init(ks[4], (di, d), dtype=dtype),
+    }
+    if cfg.ssm_split_proj:
+        # §Perf variant: per-component projections/convs — no slicing of a
+        # sharded fused axis, so activations stay batch/TP-sharded.
+        p.update({
+            "in_z": _dense_init(ks[0], (d, di), dtype=dtype),
+            "in_x": _dense_init(ks[5], (d, di), dtype=dtype),
+            "in_B": _dense_init(ks[6], (d, n), dtype=dtype),
+            "in_C": _dense_init(ks[7], (d, n), dtype=dtype),
+            "in_dt": _dense_init(ks[8], (d, h), dtype=dtype),
+            "conv_x": _dense_init(ks[1], (cfg.ssm_conv, di), scale=0.5,
+                                  dtype=dtype),
+            "conv_x_b": jnp.zeros((di,), dtype),
+            "conv_B": _dense_init(ks[2], (cfg.ssm_conv, n), scale=0.5,
+                                  dtype=dtype),
+            "conv_B_b": jnp.zeros((n,), dtype),
+            "conv_C": _dense_init(ks[3], (cfg.ssm_conv, n), scale=0.5,
+                                  dtype=dtype),
+            "conv_C_b": jnp.zeros((n,), dtype),
+        })
+    else:
+        p.update({
+            # order: z (di) | x (di) | B (n) | C (n) | dt (h)
+            "in_proj": _dense_init(ks[0], (d, 2 * di + 2 * n + h),
+                                   dtype=dtype),
+            "conv_w": _dense_init(ks[1], (cfg.ssm_conv, conv_dim),
+                                  scale=0.5, dtype=dtype),
+            "conv_b": jnp.zeros((conv_dim,), dtype),
+        })
+    return p
+
+
+def split_fused_params(p, cfg: ModelConfig):
+    """Slice fused in_proj/conv params into the split layout (for
+    equivalence tests and checkpoint migration)."""
+    di, n, h = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    w = p["in_proj"]
+    cw, cb = p["conv_w"], p["conv_b"]
+    out = {k: v for k, v in p.items()
+           if k not in ("in_proj", "conv_w", "conv_b")}
+    out.update({
+        "in_z": w[:, :di], "in_x": w[:, di: 2 * di],
+        "in_B": w[:, 2 * di: 2 * di + n],
+        "in_C": w[:, 2 * di + n: 2 * di + 2 * n],
+        "in_dt": w[:, 2 * di + 2 * n:],
+        "conv_x": cw[:, :di], "conv_x_b": cb[:di],
+        "conv_B": cw[:, di: di + n], "conv_B_b": cb[di: di + n],
+        "conv_C": cw[:, di + n:], "conv_C_b": cb[di + n:],
+    })
+    return out
+
+
+def _split(cfg: ModelConfig, zxbcdt):
+    di, n, h = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    z = zxbcdt[..., :di]
+    xbc = zxbcdt[..., di: 2 * di + 2 * n]
+    dt = zxbcdt[..., 2 * di + 2 * n:]
+    return z, xbc, dt
+
+
+def _causal_conv(xbc, w, b):
+    """Depthwise causal conv, window K. xbc: (B, T, C); w: (K, C)."""
+    K = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(pad[:, i: i + xbc.shape[1]] * w[i] for i in range(K))
+    return out + b
+
+
+def ssd_chunked(x, dt, A, B, C, *, chunk: int = 128,
+                compute_dtype=jnp.float32):
+    """Chunk-parallel SSD in jnp — same math as kernels/ssd_scan.py.
+
+    x: (b, t, h, dh); dt: (b, t, h); A: (h,); B, C: (b, t, n).
+    ``compute_dtype`` (§Perf) selects the precision of the big intra-chunk
+    tensors; the decay cumsums and the state recurrence stay float32.
+    """
+    b, t, h, dh = x.shape
+    n = B.shape[-1]
+    assert t % chunk == 0, (t, chunk)
+    nc = t // chunk
+    L = chunk
+    xr = x.reshape(b, nc, L, h, dh).astype(compute_dtype)
+    dtr = dt.reshape(b, nc, L, h).astype(jnp.float32)
+    Br = B.reshape(b, nc, L, n).astype(compute_dtype)
+    Cr = C.reshape(b, nc, L, n).astype(compute_dtype)
+
+    a = A[None, None, None, :] * dtr                     # (b,nc,L,h)
+    cs = jnp.cumsum(a, axis=2)
+    last = cs[:, :, -1]                                  # (b,nc,h)
+
+    # intra-chunk (quadratic within the chunk, MXU-friendly)
+    diff = cs[:, :, :, None, :] - cs[:, :, None, :, :]   # (b,nc,L,L,h)
+    tmask = (jnp.arange(L)[:, None] >= jnp.arange(L)[None, :])
+    decay = jnp.where(tmask[None, None, :, :, None], jnp.exp(diff), 0.0)
+    cb = jnp.einsum("bcin,bcjn->bcij", Cr, Br,
+                    preferred_element_type=jnp.float32)  # (b,nc,L,L)
+    M = (cb[..., None] * decay
+         * dtr[:, :, None, :, :]).astype(compute_dtype)  # col j weighted dt_j
+    y = jnp.einsum("bcijh,bcjhd->bcihd", M, xr,
+                   preferred_element_type=jnp.float32)   # (b,nc,L,h,dh)
+
+    # per-chunk final states from in-chunk inputs
+    w_in = dtr * jnp.exp(last[:, :, None] - cs)          # (b,nc,L,h)
+    S = jnp.einsum("bcjn,bcjh,bcjhd->bchnd", Br.astype(jnp.float32), w_in,
+                   xr.astype(jnp.float32))               # (b,nc,h,n,dh)
+
+    # inter-chunk recurrence over the nc chunk axis
+    def step(carry, inp):
+        S_c, decay_c = inp                               # (b,h,n,dh), (b,h)
+        new = carry * jnp.exp(decay_c)[..., None, None] + S_c
+        return new, carry                                # emit *previous* state
+
+    S_m = jnp.moveaxis(S, 1, 0)                          # (nc,b,h,n,dh)
+    last_m = jnp.moveaxis(last, 1, 0)                    # (nc,b,h)
+    init = jnp.zeros((b, h, n, dh), jnp.float32)
+    _, prev_states = jax.lax.scan(step, init, (S_m, last_m))
+    prev = jnp.moveaxis(prev_states, 0, 1)               # (b,nc,h,n,dh)
+
+    # contribution of the carried state to each position
+    y = y + jnp.einsum("bcin,bchnd,bcih->bcihd", Cr.astype(jnp.float32),
+                       prev, jnp.exp(cs))
+    return y.reshape(b, t, h, dh).astype(x.dtype)
+
+
+def mamba2_apply(p, x, cfg: ModelConfig, *, chunk: int = 128):
+    """x: (B, T, d) -> (B, T, d)."""
+    Bsz, T, _ = x.shape
+    di, n, h, dh = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    if cfg.ssm_split_proj:
+        z = jnp.einsum("btd,dk->btk", x, p["in_z"])
+        xr = jnp.einsum("btd,dk->btk", x, p["in_x"])
+        Br = jnp.einsum("btd,dk->btk", x, p["in_B"])
+        Cr = jnp.einsum("btd,dk->btk", x, p["in_C"])
+        dt_raw = jnp.einsum("btd,dk->btk", x, p["in_dt"])
+        xs = jax.nn.silu(_causal_conv(xr, p["conv_x"], p["conv_x_b"]))
+        xs = xs.reshape(Bsz, T, h, dh)
+        Bc = jax.nn.silu(_causal_conv(Br, p["conv_B"], p["conv_B_b"]))
+        Cc = jax.nn.silu(_causal_conv(Cr, p["conv_C"], p["conv_C_b"]))
+    else:
+        zxbcdt = jnp.einsum("btd,dk->btk", x, p["in_proj"])
+        z, xbc, dt_raw = _split(cfg, zxbcdt)
+        xbc = jax.nn.silu(_causal_conv(xbc, p["conv_w"], p["conv_b"]))
+        xs = xbc[..., :di].reshape(Bsz, T, h, dh)
+        Bc = xbc[..., di: di + n]
+        Cc = xbc[..., di + n:]
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    ck = min(chunk, T) if T % min(chunk, T) == 0 else T
+    y = ssd_chunked(xs, dt, A, Bc, Cc, chunk=ck,
+                    compute_dtype=jnp.dtype(cfg.ssd_dtype))
+    y = y + p["D"][None, None, :, None].astype(y.dtype) * xs
+    y = y.reshape(Bsz, T, di)
+    y = rmsnorm(p["norm"], y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype))
+    return jnp.einsum("bti,id->btd", y, p["out_proj"])
+
+
+# ------------------------------------------------------------------ decode --
+
+
+def init_ssm_cache(cfg: ModelConfig, batch: int, dtype):
+    di, n, h, dh = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    conv_dim = di + 2 * n
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, conv_dim), dtype),
+        "state": jnp.zeros((batch, h, n, dh), jnp.float32),
+    }
+
+
+def mamba2_decode(p, x, cache, cfg: ModelConfig):
+    """One-token step. x: (B, 1, d). Returns (out (B,1,d), new cache)."""
+    Bsz = x.shape[0]
+    di, n, h, dh = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    if cfg.ssm_split_proj:
+        z = jnp.einsum("btd,dk->btk", x, p["in_z"])
+        xbc = jnp.concatenate([
+            jnp.einsum("btd,dk->btk", x, p["in_x"]),
+            jnp.einsum("btd,dk->btk", x, p["in_B"]),
+            jnp.einsum("btd,dk->btk", x, p["in_C"])], axis=-1)
+        dt_raw = jnp.einsum("btd,dk->btk", x, p["in_dt"])
+        conv_w = jnp.concatenate([p["conv_x"], p["conv_B"], p["conv_C"]],
+                                 axis=1)
+        conv_b = jnp.concatenate([p["conv_x_b"], p["conv_B_b"],
+                                  p["conv_C_b"]])
+    else:
+        zxbcdt = jnp.einsum("btd,dk->btk", x, p["in_proj"])
+        z, xbc, dt_raw = _split(cfg, zxbcdt)
+        conv_w, conv_b = p["conv_w"], p["conv_b"]
+    # conv ring: window = cfg.ssm_conv, cache holds the K-1 previous inputs
+    hist = jnp.concatenate([cache["conv"], xbc], axis=1)  # (B, K, C)
+    conv_out = (hist * conv_w[None]).sum(axis=1, keepdims=True)
+    xbc1 = jax.nn.silu(conv_out + conv_b)
+    xs = xbc1[..., :di].reshape(Bsz, h, dh)
+    Bc = xbc1[:, 0, di: di + n]
+    Cc = xbc1[:, 0, di + n:]
+    dt = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    decay = jnp.exp(A[None] * dt)                              # (B, h)
+    upd = jnp.einsum("bn,bh,bhd->bhnd", Bc.astype(jnp.float32), dt,
+                     xs.astype(jnp.float32))
+    state = cache["state"] * decay[..., None, None] + upd
+    y = jnp.einsum("bn,bhnd->bhd", Cc.astype(jnp.float32), state)
+    y = y + p["D"][None, :, None] * xs.astype(jnp.float32)
+    y = y.reshape(Bsz, 1, di).astype(x.dtype)
+    y = rmsnorm(p["norm"], y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype))
+    out = jnp.einsum("bti,id->btd", y, p["out_proj"])
+    return out, {"conv": hist[:, 1:], "state": state}

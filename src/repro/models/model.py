@@ -1,0 +1,394 @@
+"""Model assembly for all six architecture families.
+
+Homogeneous layer stacks are scanned (``lax.scan`` over stacked params) to
+keep the HLO small enough for 512-device SPMD compiles; heterogeneous
+patterns (hybrid shared-attention, VLM cross-attention) scan over *groups*.
+
+Forward modes:
+  * ``forward``      — training / prefill: full sequence, returns logits+aux.
+  * ``decode_step``  — one token against a KV/SSM cache (serve path).
+
+Inputs (per arch family):
+  dense/moe/ssm/hybrid: batch["tokens"]       (B, T) int32
+  vlm:   batch["tokens"] + batch["image_embeds"]  (B, n_img, d)
+  audio: batch["embeds"] (B, T, d) — stub codec frontend (DESIGN.md §4)
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models import mamba2, moe
+from repro.models.config import ModelConfig
+from repro.models.layers import (embed, embedding_init, mlp_apply, mlp_init,
+                                 rmsnorm, rmsnorm_init, sinusoidal_pos,
+                                 unembed, unembed_init)
+
+Array = jax.Array
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+# ================================================================= params --
+
+
+def _attn_block_init(key, cfg: ModelConfig, dtype, cross=False):
+    k1, k2 = jax.random.split(key)
+    p = {
+        "ln1": rmsnorm_init(cfg.d_model),
+        "attn": attn.attn_init(k1, cfg, dtype, cross=cross),
+        "ln2": rmsnorm_init(cfg.d_model),
+    }
+    if cfg.is_moe and not cross:
+        p["moe"] = moe.moe_init(k2, cfg, dtype)
+    else:
+        p["mlp"] = mlp_init(k2, cfg.d_model, cfg.d_ff, cfg.mlp, dtype)
+    return p
+
+
+def _mamba_block_init(key, cfg: ModelConfig, dtype):
+    return {
+        "ln": rmsnorm_init(cfg.d_model),
+        "mamba": mamba2.mamba2_init(key, cfg, dtype),
+    }
+
+
+def _stack_init(init_fn, key, n: int):
+    return jax.vmap(init_fn)(jax.random.split(key, n))
+
+
+def init_params(key, cfg: ModelConfig):
+    dtype = _dtype(cfg)
+    keys = jax.random.split(key, 8)
+    params: dict[str, Any] = {}
+    if not cfg.inputs_embeds:
+        params["embed"] = embedding_init(keys[0], cfg.padded_vocab,
+                                         cfg.d_model, dtype)
+    if cfg.arch_type in ("dense", "moe"):
+        params["layers"] = _stack_init(
+            lambda k: _attn_block_init(k, cfg, dtype), keys[1], cfg.n_layers)
+    elif cfg.arch_type == "ssm":
+        params["layers"] = _stack_init(
+            lambda k: _mamba_block_init(k, cfg, dtype), keys[1], cfg.n_layers)
+    elif cfg.arch_type == "hybrid":
+        params["layers"] = _stack_init(
+            lambda k: _mamba_block_init(k, cfg, dtype), keys[1], cfg.n_layers)
+        params["shared_attn"] = _attn_block_init(keys[2], cfg, dtype)
+    elif cfg.arch_type == "vlm":
+        ce = cfg.cross_attn_every
+        n_cross = cfg.n_layers // ce
+        n_self = cfg.n_layers - n_cross
+        params["layers"] = _stack_init(
+            lambda k: _attn_block_init(k, cfg, dtype), keys[1], n_self)
+        params["cross_layers"] = _stack_init(
+            lambda k: _attn_block_init(k, cfg, dtype, cross=True), keys[2],
+            n_cross)
+    elif cfg.arch_type == "audio":
+        params["layers"] = _stack_init(
+            lambda k: _attn_block_init(k, cfg, dtype), keys[1], cfg.n_layers)
+    else:
+        raise ValueError(cfg.arch_type)
+    params["final_norm"] = rmsnorm_init(cfg.d_model)
+    params["unembed"] = unembed_init(keys[3], cfg.d_model, cfg.padded_vocab,
+                                     dtype)
+    return params
+
+
+def param_specs(cfg: ModelConfig):
+    """Abstract parameter shapes, no allocation (for the AOT dry-run)."""
+    return jax.eval_shape(lambda: init_params(jax.random.PRNGKey(0), cfg))
+
+
+# ================================================================ forward --
+
+
+def _attn_block_apply(p, x, cfg: ModelConfig, *, window, q_chunk=2048):
+    h = x + attn.self_attention(p["attn"], rmsnorm(p["ln1"], x), cfg,
+                                window=window, q_chunk=q_chunk)
+    z = rmsnorm(p["ln2"], h)
+    if cfg.is_moe and "moe" in p:
+        y, aux = moe.moe_apply(p["moe"], z, cfg)
+    else:
+        y, aux = mlp_apply(p["mlp"], z, cfg.mlp), 0.0
+    return h + y, aux
+
+
+def _cross_block_apply(p, x, kv, cfg: ModelConfig):
+    h = x + attn.cross_attention(p["attn"], rmsnorm(p["ln1"], x), kv, cfg)
+    y = mlp_apply(p["mlp"], rmsnorm(p["ln2"], h), cfg.mlp)
+    return h + y
+
+
+def _mamba_block_apply(p, x, cfg: ModelConfig):
+    return x + mamba2.mamba2_apply(p["mamba"], rmsnorm(p["ln"], x), cfg,
+                                   chunk=cfg.ssm_chunk)
+
+
+def _remat_policy(cfg: ModelConfig):
+    if cfg.remat_policy == "dots":
+        return jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+    return jax.checkpoint_policies.nothing_saveable
+
+
+def _window_for(cfg: ModelConfig, T: int):
+    return cfg.sliding_window if (cfg.has_attention
+                                  and T > cfg.full_attn_max) else None
+
+
+def forward(params, batch, cfg: ModelConfig, *, remat: bool = True,
+            q_chunk: int = 2048, last_only: bool = False,
+            unroll: bool = False):
+    """Returns (logits float32, aux dict). ``last_only`` emits logits for the
+    final position only — the prefill contract (next-token after the prompt)
+    that avoids materializing (B, T, vocab)."""
+    if cfg.inputs_embeds:
+        x = batch["embeds"]
+        T = x.shape[1]
+    else:
+        tokens = batch["tokens"]
+        T = tokens.shape[1]
+        x = embed(params["embed"], tokens)
+    if cfg.pos == "sinusoidal":
+        x = x + sinusoidal_pos(jnp.arange(T), cfg.d_model).astype(x.dtype)
+    window = _window_for(cfg, T)
+    aux_total = jnp.float32(0.0)
+
+    if cfg.arch_type in ("dense", "moe", "audio"):
+        def body(x, layer_p):
+            x, aux = _attn_block_apply(layer_p, x, cfg, window=window,
+                                       q_chunk=q_chunk)
+            return x, aux
+        if remat:
+            body = jax.checkpoint(
+                body, policy=_remat_policy(cfg))
+        x, auxs = jax.lax.scan(body, x, params["layers"], unroll=unroll)
+        aux_total += jnp.sum(jnp.asarray(auxs)) if cfg.is_moe else 0.0
+
+    elif cfg.arch_type == "ssm":
+        def body(x, layer_p):
+            return _mamba_block_apply(layer_p, x, cfg), 0.0
+        if remat:
+            body = jax.checkpoint(
+                body, policy=_remat_policy(cfg))
+        x, _ = jax.lax.scan(body, x, params["layers"], unroll=unroll)
+
+    elif cfg.arch_type == "hybrid":
+        k = cfg.shared_attn_every
+        n_groups, rem = divmod(cfg.n_layers, k)
+        grouped = jax.tree.map(
+            lambda a: a[: n_groups * k].reshape((n_groups, k) + a.shape[1:]),
+            params["layers"])
+        tail = jax.tree.map(lambda a: a[n_groups * k:], params["layers"])
+        shared = params["shared_attn"]
+
+        def mamba_body(x, layer_p):
+            return _mamba_block_apply(layer_p, x, cfg), 0.0
+
+        mb = mamba_body
+        if remat:
+            mb = jax.checkpoint(
+                mamba_body, policy=_remat_policy(cfg))
+
+        def group_body(x, group_p):
+            x, _ = jax.lax.scan(mb, x, group_p, unroll=unroll)
+            x, _ = _attn_block_apply(shared, x, cfg, window=window,
+                                     q_chunk=q_chunk)
+            return x, 0.0
+
+        if remat:
+            group_body = jax.checkpoint(
+                group_body, policy=_remat_policy(cfg))
+        x, _ = jax.lax.scan(group_body, x, grouped, unroll=unroll)
+        if rem:
+            x, _ = jax.lax.scan(mb, x, tail, unroll=unroll)
+
+    elif cfg.arch_type == "vlm":
+        kv = batch["image_embeds"]
+        ce = cfg.cross_attn_every
+        n_groups = cfg.n_layers // ce
+        grouped_self = jax.tree.map(
+            lambda a: a.reshape((n_groups, ce - 1) + a.shape[1:]),
+            params["layers"])
+
+        def self_body(x, layer_p):
+            x, aux = _attn_block_apply(layer_p, x, cfg, window=window,
+                                       q_chunk=q_chunk)
+            return x, aux
+
+        sb = self_body
+        if remat:
+            sb = jax.checkpoint(
+                self_body, policy=_remat_policy(cfg))
+
+        def group_body(x, group_p):
+            self_p, cross_p = group_p
+            x, _ = jax.lax.scan(sb, x, self_p, unroll=unroll)
+            x = _cross_block_apply(cross_p, x, kv, cfg)
+            return x, 0.0
+
+        if remat:
+            group_body = jax.checkpoint(
+                group_body, policy=_remat_policy(cfg))
+        x, _ = jax.lax.scan(group_body, x,
+                            (grouped_self, params["cross_layers"]), unroll=unroll)
+    else:
+        raise ValueError(cfg.arch_type)
+
+    if last_only:
+        x = x[:, -1:]
+    x = rmsnorm(params["final_norm"], x)
+    logits = unembed(params["unembed"], x, dtype=jnp.dtype(cfg.logits_dtype))
+    return logits, {"aux_loss": aux_total}
+
+
+# ================================================================= decode --
+
+
+def _stacked(tree, n: int):
+    return jax.tree.map(
+        lambda x: jnp.broadcast_to(x[None], (n,) + x.shape), tree)
+
+
+def init_decode_state(cfg: ModelConfig, batch: int, seq_len: int):
+    dtype = _dtype(cfg)
+    n = cfg.n_layers
+    kv = lambda: attn.init_cache(cfg, batch, seq_len, dtype)
+    ssm = lambda: mamba2.init_ssm_cache(cfg, batch, dtype)
+
+    if cfg.arch_type in ("dense", "moe", "audio"):
+        return {"layers": _stacked(kv(), n)}
+    if cfg.arch_type == "ssm":
+        return {"layers": _stacked(ssm(), n)}
+    if cfg.arch_type == "hybrid":
+        n_groups = cfg.n_layers // cfg.shared_attn_every
+        return {"layers": _stacked(ssm(), n),
+                "shared": _stacked(kv(), n_groups)}
+    if cfg.arch_type == "vlm":
+        n_cross = cfg.n_layers // cfg.cross_attn_every
+        return {"layers": _stacked(kv(), n - n_cross)}
+    raise ValueError(cfg.arch_type)
+
+
+def decode_step(params, state, inp, pos, cfg: ModelConfig, *, seq_len: int,
+                image_embeds=None, unroll: bool = False):
+    """One decode step. inp: tokens (B, 1) int32 or embeds (B, 1, d).
+
+    Returns (logits (B, 1, vocab), new_state)."""
+    if cfg.inputs_embeds:
+        x = inp
+    else:
+        x = embed(params["embed"], inp)
+    if cfg.pos == "sinusoidal":
+        x = x + sinusoidal_pos(jnp.full((1,), pos), cfg.d_model).astype(x.dtype)
+
+    def attn_step(x, layer_p, cache):
+        h, new_cache = attn.decode_self_attention(
+            layer_p["attn"], rmsnorm(layer_p["ln1"], x), cache, pos, cfg,
+            seq_len=seq_len)
+        h = x + h
+        z = rmsnorm(layer_p["ln2"], h)
+        if cfg.is_moe and "moe" in layer_p:
+            y, _ = moe.moe_apply(layer_p["moe"], z, cfg)
+        else:
+            y = mlp_apply(layer_p["mlp"], z, cfg.mlp)
+        return h + y, new_cache
+
+    def mamba_step(x, layer_p, cache):
+        h, new_cache = mamba2.mamba2_decode(
+            layer_p["mamba"], rmsnorm(layer_p["ln"], x), cache, cfg)
+        return x + h, new_cache
+
+    if cfg.arch_type in ("dense", "moe", "audio"):
+        def body(x, xs):
+            layer_p, cache = xs
+            x, nc = attn_step(x, layer_p, cache)
+            return x, nc
+        x, new_caches = jax.lax.scan(body, x,
+                                     (params["layers"], state["layers"]), unroll=unroll)
+        new_state = {"layers": new_caches}
+
+    elif cfg.arch_type == "ssm":
+        def body(x, xs):
+            layer_p, cache = xs
+            return mamba_step(x, layer_p, cache)
+        x, new_caches = jax.lax.scan(body, x,
+                                     (params["layers"], state["layers"]), unroll=unroll)
+        new_state = {"layers": new_caches}
+
+    elif cfg.arch_type == "hybrid":
+        k = cfg.shared_attn_every
+        n_groups, rem = divmod(cfg.n_layers, k)
+        grouped = jax.tree.map(
+            lambda a: a[: n_groups * k].reshape((n_groups, k) + a.shape[1:]),
+            params["layers"])
+        tail_p = jax.tree.map(lambda a: a[n_groups * k:], params["layers"])
+        caches = state["layers"]
+        gcache = jax.tree.map(
+            lambda a: a[: n_groups * k].reshape((n_groups, k) + a.shape[1:]),
+            caches)
+        tail_c = jax.tree.map(lambda a: a[n_groups * k:], caches)
+        shared = params["shared_attn"]
+
+        def group_body(x, xs):
+            gp, gc, sc = xs
+
+            def inner(x, ys):
+                lp, lc = ys
+                return mamba_step(x, lp, lc)
+
+            x, new_gc = jax.lax.scan(inner, x, (gp, gc), unroll=unroll)
+            x, new_sc = attn_step(x, shared, sc)
+            return x, (new_gc, new_sc)
+
+        x, (new_gc, new_sc) = jax.lax.scan(group_body, x, (grouped, gcache, state["shared"]), unroll=unroll)
+        new_layers = jax.tree.map(
+            lambda a: a.reshape((n_groups * k,) + a.shape[2:]), new_gc)
+        if rem:
+            def inner(x, ys):
+                lp, lc = ys
+                return mamba_step(x, lp, lc)
+            x, new_tail = jax.lax.scan(inner, x, (tail_p, tail_c), unroll=unroll)
+            new_layers = jax.tree.map(
+                lambda a, b: jnp.concatenate([a, b], axis=0), new_layers,
+                new_tail)
+        new_state = {"layers": new_layers, "shared": new_sc}
+
+    elif cfg.arch_type == "vlm":
+        kv = image_embeds
+        ce = cfg.cross_attn_every
+        n_groups = cfg.n_layers // ce
+        grouped_self = jax.tree.map(
+            lambda a: a.reshape((n_groups, ce - 1) + a.shape[1:]),
+            params["layers"])
+        gcache = jax.tree.map(
+            lambda a: a.reshape((n_groups, ce - 1) + a.shape[1:]),
+            state["layers"])
+
+        def group_body(x, xs):
+            gp, cp, gc = xs
+
+            def inner(x, ys):
+                lp, lc = ys
+                return attn_step(x, lp, lc)
+
+            x, new_gc = jax.lax.scan(inner, x, (gp, gc), unroll=unroll)
+            x = _cross_block_apply(cp, x, kv, cfg)
+            return x, new_gc
+
+        x, new_gc = jax.lax.scan(group_body, x, (grouped_self, params["cross_layers"], gcache), unroll=unroll)
+        new_state = {"layers": jax.tree.map(
+            lambda a: a.reshape((cfg.n_layers - n_groups,) + a.shape[2:]),
+            new_gc)}
+    else:
+        raise ValueError(cfg.arch_type)
+
+    x = rmsnorm(params["final_norm"], x)
+    logits = unembed(params["unembed"], x)
+    return logits, new_state

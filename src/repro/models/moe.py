@@ -1,0 +1,124 @@
+"""Mixture-of-Experts with top-k token-choice routing (dbrx / phi3.5 style).
+
+Dispatch is sort-based with a static per-expert capacity (MaxText-style
+"dropping" implementation): tokens are argsorted by assigned expert, given a
+rank within their expert, and scattered into an (E, C, d) buffer; tokens
+beyond capacity are dropped (their gate weight is zeroed, so the residual
+stream passes them through unchanged).  This keeps every shape static —
+required for pjit — and the expert matmul FLOPs proportional to top_k (not
+n_experts), so the roofline reflects *active* parameters.
+
+Sharding: expert weights (E, d, f) shard E over 'model' and f over 'data'
+(FSDP); the token->expert scatter becomes the all-to-all of expert
+parallelism under the SPMD partitioner.
+
+The router aux loss is the standard load-balance term
+(mean_tokens_per_expert . mean_router_prob_per_expert) * E.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import _dense_init
+
+Array = jax.Array
+
+
+def moe_init(key, cfg: ModelConfig, dtype):
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    ks = jax.random.split(key, 4)
+    p = {"router": _dense_init(ks[0], (d, e), dtype=jnp.float32)}
+    if cfg.mlp == "swiglu":
+        p["w_gate"] = _dense_init(ks[1], (e, d, f), dtype=dtype)
+        p["w_up"] = _dense_init(ks[2], (e, d, f), dtype=dtype)
+    else:
+        p["w_up"] = _dense_init(ks[2], (e, d, f), dtype=dtype)
+    p["w_down"] = _dense_init(ks[3], (e, f, d), dtype=dtype)
+    return p
+
+
+def moe_apply(p, x, cfg: ModelConfig, *, capacity_factor: float = 1.25):
+    """x: (B, T, d). Returns (out (B, T, d), aux_loss scalar)."""
+    B, T, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    N = B * T
+    xt = x.reshape(N, d)
+
+    logits = jnp.einsum("nd,de->ne", xt.astype(jnp.float32), p["router"])
+    probs = jax.nn.softmax(logits, axis=-1)                    # (N, E)
+    gate_vals, expert_idx = jax.lax.top_k(probs, k)            # (N, k)
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(-1, keepdims=True), 1e-9)                # renormalize
+
+    # load-balance auxiliary loss (Switch/DBRX style)
+    me = probs.mean(axis=0)                                    # (E,)
+    one_hot = jax.nn.one_hot(expert_idx, e, dtype=jnp.float32) # (N, k, E)
+    ce = one_hot.sum(axis=(0, 1)) / (N * k)                    # fraction routed
+    aux = e * jnp.sum(me * ce)
+
+    # ---- dispatch with static capacity ----
+    C = int(max(1, round(N * k * capacity_factor / e)))
+    flat_expert = expert_idx.reshape(N * k)                    # (Nk,)
+    flat_gate = gate_vals.reshape(N * k)
+    flat_tok = jnp.repeat(jnp.arange(N), k)                    # token of each slot
+
+    if cfg.moe_dispatch == "cumsum":
+        # sort-free (§Perf): rank within expert via a cumulative count of a
+        # one-hot membership matrix — a scan instead of a distributed sort.
+        onehot = (flat_expert[:, None] ==
+                  jnp.arange(e)[None, :]).astype(jnp.int32)   # (Nk, E)
+        # rank of slot i within its expert = #earlier slots of same expert
+        rank = jnp.take_along_axis(jnp.cumsum(onehot, axis=0) - onehot,
+                                   flat_expert[:, None], axis=1)[:, 0]
+        sorted_e, sorted_tok, sorted_gate = flat_expert, flat_tok, flat_gate
+    else:
+        order = jnp.argsort(flat_expert)                       # stable
+        sorted_e = flat_expert[order]
+        sorted_tok = flat_tok[order]
+        sorted_gate = flat_gate[order]
+        # rank within expert: position - first-position-of-expert
+        starts = jnp.searchsorted(sorted_e, jnp.arange(e))     # (E,)
+        rank = jnp.arange(N * k) - starts[sorted_e]
+    keep = rank < C
+
+    # scatter tokens into the (E, C, d) expert buffer (drop on overflow)
+    buf = jnp.zeros((e, C, d), x.dtype)
+    buf = buf.at[sorted_e, jnp.where(keep, rank, 0)].add(
+        jnp.where(keep[:, None], xt[sorted_tok], 0.0).astype(x.dtype),
+        mode="drop")
+
+    if cfg.moe_shard_capacity:
+        # §Perf: expert-parallel + capacity-parallel compute — the scatter
+        # becomes the all-to-all of expert parallelism and each device owns
+        # a (E/16, C/16, d) slice of expert work.
+        from jax.sharding import PartitionSpec as P
+        buf = jax.lax.with_sharding_constraint(buf, P("model", "data", None))
+
+    # expert MLP on the dense (E, C, d) buffer
+    def _w(name):
+        w = p[name]
+        if cfg.moe_weight_gather:
+            # §Perf: pin the expert weights to TP-only sharding here so the
+            # partitioner all-gathers the (small) FSDP weight shards instead
+            # of all-reducing the (huge) (E, C, f) activations over 'data'.
+            from jax.sharding import PartitionSpec as P
+            w = jax.lax.with_sharding_constraint(w, P("model", None, None))
+        return w
+
+    if cfg.mlp == "swiglu":
+        g = jnp.einsum("ecd,edf->ecf", buf, _w("w_gate"))
+        u = jnp.einsum("ecd,edf->ecf", buf, _w("w_up"))
+        h = jax.nn.silu(g) * u
+    else:
+        h = jax.nn.gelu(jnp.einsum("ecd,edf->ecf", buf, _w("w_up")))
+    y = jnp.einsum("ecf,efd->ecd", h, _w("w_down"))            # (E, C, d)
+
+    # gather back and combine with gates
+    slot_out = y[sorted_e, jnp.where(keep, rank, 0)]           # (Nk, d)
+    slot_out = jnp.where(keep[:, None], slot_out, 0.0)
+    out = jnp.zeros((N, d), jnp.float32).at[sorted_tok].add(
+        slot_out.astype(jnp.float32) * sorted_gate[:, None])
+    return out.reshape(B, T, d).astype(x.dtype), aux

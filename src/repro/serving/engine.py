@@ -1,0 +1,101 @@
+"""Serving runtime: batched decode against a KV / SSM cache.
+
+``make_serve_step`` builds the jitted one-token step that the decode input
+shapes (``decode_32k``, ``long_500k``) lower in the dry-run: ONE new token
+against a ``seq_len`` cache. ``DecodeEngine`` is the host-side driver used
+by the examples: batched requests, greedy or temperature sampling, simple
+continuous-batching slot reuse.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import model as M
+from repro.models.config import ModelConfig
+
+
+def make_serve_step(cfg: ModelConfig, *, seq_len: int, unroll: bool = False):
+    """serve_step(params, state, inp, pos[, image_embeds]) -> (logits, state)."""
+
+    def serve_step(params, state, inp, pos, image_embeds=None):
+        return M.decode_step(params, state, inp, pos, cfg, seq_len=seq_len,
+                             image_embeds=image_embeds, unroll=unroll)
+
+    return serve_step
+
+
+@dataclasses.dataclass
+class Request:
+    prompt: list[int]
+    max_new: int = 16
+    temperature: float = 0.0
+    out: list[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class DecodeEngine:
+    """Minimal batched decoder (greedy/temperature) for CPU-scale models."""
+
+    def __init__(self, cfg: ModelConfig, params, batch: int, seq_len: int,
+                 seed: int = 0):
+        self.cfg = cfg
+        self.params = params
+        self.batch = batch
+        self.seq_len = seq_len
+        self.state = M.init_decode_state(cfg, batch, seq_len)
+        self.step_fn = jax.jit(make_serve_step(cfg, seq_len=seq_len))
+        self.key = jax.random.PRNGKey(seed)
+
+    def _step(self, tokens, pos):
+        logits, self.state = self.step_fn(self.params, self.state, tokens,
+                                          jnp.int32(pos))
+        return logits[:, 0, : self.cfg.vocab]  # (B, vocab), drop TP padding
+
+    def run(self, requests: list[Request]) -> list[Request]:
+        """Prefill token-by-token then decode until every request is done.
+
+        Requests are padded to the engine batch; slots past len(requests)
+        decode garbage that is discarded (kept simple — the multi-pod path
+        exercises the same serve_step)."""
+        assert len(requests) <= self.batch
+        reqs = list(requests)
+        maxp = max(len(r.prompt) for r in reqs)
+        pad_id = 0
+        cur = [list(r.prompt) for r in reqs] + \
+              [[pad_id]] * (self.batch - len(reqs))
+        pos = 0
+        # prefill (token-by-token through the decode path)
+        for t in range(maxp - 1):
+            tok = jnp.asarray([[c[t] if t < len(c) else pad_id]
+                               for c in cur], jnp.int32)
+            self._step(tok, pos)
+            pos += 1
+        # decode
+        last = jnp.asarray([[c[min(maxp, len(c)) - 1] for c in cur]],
+                           jnp.int32).T
+        max_new = max(r.max_new for r in reqs)
+        for _ in range(max_new):
+            logits = self._step(last, pos)
+            pos += 1
+            self.key, sk = jax.random.split(self.key)
+            greedy = jnp.argmax(logits, axis=-1)
+            temp = jnp.asarray([getattr(r, "temperature", 0.0)
+                                for r in reqs] +
+                               [0.0] * (self.batch - len(reqs)))
+            sampled = jax.random.categorical(sk, logits / jnp.maximum(
+                temp[:, None], 1e-6))
+            nxt = jnp.where(temp > 0, sampled, greedy)
+            for i, r in enumerate(reqs):
+                if not r.done and len(r.out) < r.max_new:
+                    r.out.append(int(nxt[i]))
+                    if len(r.out) >= r.max_new:
+                        r.done = True
+            last = nxt[:, None].astype(jnp.int32)
+            if all(r.done for r in reqs):
+                break
+        return reqs

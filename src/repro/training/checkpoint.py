@@ -1,0 +1,72 @@
+"""Checkpointing: flat-path .npz snapshots of the TrainState pytree.
+
+No external deps (orbax absent in this environment): leaves are gathered to
+host, keyed by their tree path, and restored by path. Works for any pytree
+of arrays; step metadata travels in a reserved key.
+"""
+
+from __future__ import annotations
+
+import os
+import re
+
+import jax
+import numpy as np
+
+_STEP_KEY = "__step__"
+_SEP = "|"
+
+
+def _flatten(tree):
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = _SEP.join(_key_str(k) for k in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def _key_str(k) -> str:
+    if isinstance(k, jax.tree_util.DictKey):
+        return f"d:{k.key}"
+    if isinstance(k, jax.tree_util.SequenceKey):
+        return f"i:{k.idx}"
+    if isinstance(k, jax.tree_util.GetAttrKey):
+        return f"a:{k.name}"
+    return f"x:{k}"
+
+
+def save(directory: str, state, step: int) -> str:
+    os.makedirs(directory, exist_ok=True)
+    flat = _flatten(state)
+    flat[_STEP_KEY] = np.asarray(step)
+    path = os.path.join(directory, f"ckpt_{step:08d}.npz")
+    tmp = path + ".tmp"
+    np.savez(tmp, **flat)
+    os.replace(tmp + ".npz" if os.path.exists(tmp + ".npz") else tmp, path)
+    return path
+
+
+def latest_step(directory: str) -> int | None:
+    if not os.path.isdir(directory):
+        return None
+    steps = [int(m.group(1)) for f in os.listdir(directory)
+             if (m := re.match(r"ckpt_(\d+)\.npz$", f))]
+    return max(steps) if steps else None
+
+
+def restore(directory: str, state_like, step: int | None = None):
+    """Restore into the structure of ``state_like``. Returns (state, step)."""
+    step = step if step is not None else latest_step(directory)
+    if step is None:
+        raise FileNotFoundError(f"no checkpoints in {directory}")
+    path = os.path.join(directory, f"ckpt_{step:08d}.npz")
+    data = np.load(path)
+    leaves_with_path, treedef = jax.tree_util.tree_flatten_with_path(
+        state_like)
+    new_leaves = []
+    for p, leaf in leaves_with_path:
+        key = _SEP.join(_key_str(k) for k in p)
+        arr = data[key]
+        assert arr.shape == tuple(leaf.shape), (key, arr.shape, leaf.shape)
+        new_leaves.append(jax.numpy.asarray(arr, leaf.dtype))
+    return treedef.unflatten(new_leaves), int(data[_STEP_KEY])

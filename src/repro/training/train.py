@@ -1,0 +1,125 @@
+"""Training loop: loss, pjit train_step builder, host driver."""
+
+from __future__ import annotations
+
+import functools
+import time
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.dist import sharding as shd
+from repro.models import model as M
+from repro.models.config import ModelConfig
+from repro.training import optimizer as opt
+
+Array = jax.Array
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: opt.OptState
+
+
+def lm_loss(params, batch, cfg: ModelConfig, *, remat: bool = True,
+            q_chunk: int = 2048, unroll: bool = False):
+    """Next-token cross entropy (+ MoE router aux loss)."""
+    logits, aux = M.forward(params, batch, cfg, remat=remat, q_chunk=q_chunk,
+                            unroll=unroll)
+    targets = batch["targets"]
+    tgt = targets[:, 1:]
+    if cfg.loss_impl == "lse":
+        # §Perf: logsumexp-based NLL — no materialized (N, V) log-probs and
+        # no full-tensor pad-mask pass (pad columns enter the lse; their
+        # contribution is trained down exactly like other never-target ids).
+        lg = logits[:, :-1]
+        lse = jax.nn.logsumexp(lg.astype(jnp.float32), axis=-1)
+        picked = jnp.take_along_axis(lg, tgt[..., None],
+                                     axis=-1)[..., 0].astype(jnp.float32)
+        nll = lse - picked
+    else:
+        if cfg.padded_vocab != cfg.vocab:  # mask vocab-padding logits out
+            pad_mask = jnp.arange(cfg.padded_vocab) < cfg.vocab
+            logits = jnp.where(pad_mask, logits, -1e30)
+        logp = jax.nn.log_softmax(logits[:, :-1].astype(jnp.float32),
+                                  axis=-1)
+        nll = -jnp.take_along_axis(logp, tgt[..., None], axis=-1)[..., 0]
+    mask = batch.get("mask")
+    if mask is not None:
+        mask = mask[:, 1:]
+        loss = (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+    else:
+        loss = nll.mean()
+    total = loss + cfg.router_aux_weight * aux["aux_loss"]
+    return total, {"loss": loss, "aux_loss": aux["aux_loss"]}
+
+
+def make_train_step(cfg: ModelConfig, ocfg: opt.AdamWConfig, *,
+                    remat: bool = True, q_chunk: int = 2048,
+                    unroll: bool = False):
+    """Returns train_step(state, batch) -> (state, metrics)."""
+
+    def train_step(state: TrainState, batch):
+        grad_fn = jax.value_and_grad(
+            functools.partial(lm_loss, cfg=cfg, remat=remat,
+                              q_chunk=q_chunk, unroll=unroll), has_aux=True)
+        (total, metrics), grads = grad_fn(state.params, batch)
+        params, opt_state, om = opt.apply(ocfg, state.params, grads,
+                                          state.opt)
+        metrics = dict(metrics, total=total, **om)
+        return TrainState(params, opt_state), metrics
+
+    return train_step
+
+
+def make_sharded_train_step(cfg: ModelConfig, ocfg: opt.AdamWConfig, mesh,
+                            batch_shapes: dict, *, remat: bool = True,
+                            q_chunk: int = 2048):
+    """jit the train step with explicit in/out shardings for ``mesh``.
+
+    ``batch_shapes``: dict of ShapeDtypeStruct for the batch pytree.
+    Returns (jitted_fn, state_shardings, batch_shardings).
+    """
+    pspecs = M.param_specs(cfg)
+    p_sh = shd.param_shardings(mesh, pspecs)
+    state_sh = TrainState(
+        params=p_sh,
+        opt=opt.OptState(mu=p_sh, nu=p_sh,
+                         step=NamedSharding(mesh, P())),
+    )
+    d_specs = shd.data_specs(mesh, batch_shapes)
+    d_sh = {k: NamedSharding(mesh, s) for k, s in d_specs.items()}
+    step_fn = make_train_step(cfg, ocfg, remat=remat, q_chunk=q_chunk)
+    jit_fn = jax.jit(step_fn, in_shardings=(state_sh, d_sh),
+                     out_shardings=(state_sh, None), donate_argnums=(0,))
+    return jit_fn, state_sh, d_sh
+
+
+def init_state(key, cfg: ModelConfig) -> TrainState:
+    params = M.init_params(key, cfg)
+    return TrainState(params=params, opt=opt.init(params))
+
+
+def train_loop(cfg: ModelConfig, ocfg: opt.AdamWConfig, data_iter, steps: int,
+               *, seed: int = 0, log_every: int = 10, remat: bool = True,
+               checkpoint_dir: str | None = None, checkpoint_every: int = 0):
+    """Single-host training driver (CPU-scale models)."""
+    from repro.training import checkpoint as ckpt
+    state = init_state(jax.random.PRNGKey(seed), cfg)
+    step_fn = jax.jit(make_train_step(cfg, ocfg, remat=remat))
+    history = []
+    t0 = time.time()
+    for step in range(steps):
+        batch = next(data_iter)
+        state, metrics = step_fn(state, batch)
+        if step % log_every == 0 or step == steps - 1:
+            m = {k: float(v) for k, v in metrics.items()}
+            m["step"] = step
+            m["wall"] = time.time() - t0
+            history.append(m)
+        if checkpoint_dir and checkpoint_every and \
+                (step + 1) % checkpoint_every == 0:
+            ckpt.save(checkpoint_dir, state, step + 1)
+    return state, history

@@ -1,0 +1,60 @@
+"""Baselines from Sec. 5: SGD, PSGD, BMRM, DCD — and cross-method agreement."""
+
+import numpy as np
+import pytest
+
+from repro.baselines.bmrm import run_bmrm
+from repro.baselines.dcd import run_dcd
+from repro.baselines.psgd import run_psgd
+from repro.baselines.sgd import run_sgd
+from repro.core.dso import run_dso_grid
+from repro.data.synthetic import make_classification
+
+
+@pytest.fixture(scope="module")
+def prob():
+    return make_classification(m=400, d=150, density=0.1, loss="hinge",
+                               lam=1e-3, seed=1)
+
+
+def test_sgd_converges(prob):
+    _, hist = run_sgd(prob, epochs=8, eta0=0.3)
+    assert hist[-1]["primal"] < hist[0]["primal"]
+
+
+def test_psgd_converges(prob):
+    _, hist = run_psgd(prob, p=4, epochs=8, eta0=0.3)
+    assert hist[-1]["primal"] < hist[0]["primal"]
+
+
+def test_bmrm_converges(prob):
+    _, hist = run_bmrm(prob, iters=25)
+    assert hist[-1]["primal"] < hist[2]["primal"]
+
+
+def test_dcd_converges(prob):
+    _, alpha, hist = run_dcd(prob, epochs=10)
+    assert hist[-1]["primal"] < hist[0]["primal"]
+    # alpha feasible for the saddle problem: y*alpha in [0, 1]
+    ya = np.asarray(prob.y) * np.asarray(alpha)
+    assert ya.min() >= -1e-6 and ya.max() <= 1 + 1e-6
+
+
+def test_all_methods_agree_on_optimum(prob):
+    """Every optimizer drives P(w) to the same neighbourhood (Sec. 5.1)."""
+    _, h_dcd = run_dcd(prob, epochs=20)[0], run_dcd(prob, epochs=20)[2]
+    _, h_sgd = run_sgd(prob, epochs=25, eta0=0.3)
+    _, h_bmrm = run_bmrm(prob, iters=40)
+    _, _, h_dso = run_dso_grid(prob, p=4, epochs=50, eta0=0.5)
+    ref = h_dcd[-1]["primal"]  # DCD = de-facto exact for hinge
+    for name, h in [("sgd", h_sgd), ("bmrm", h_bmrm), ("dso", h_dso)]:
+        assert abs(h[-1]["primal"] - ref) < 0.05, (name, h[-1], ref)
+
+
+def test_logistic_loss_sgd_vs_dso():
+    prob = make_classification(m=300, d=100, density=0.15, loss="logistic",
+                               lam=1e-3, seed=5)
+    _, h_sgd = run_sgd(prob, epochs=20, eta0=0.3)
+    _, _, h_dso = run_dso_grid(prob, p=4, epochs=40, eta0=0.5,
+                               alpha0=0.0005)  # App. B logistic init
+    assert abs(h_sgd[-1]["primal"] - h_dso[-1]["primal"]) < 0.05

@@ -1,0 +1,40 @@
+"""Theorem 1 rate checks: gap ~ O(1/sqrt(T)) under the eta0/sqrt(t)
+schedule, and AdaGrad convergence to small gaps (App. B configuration)."""
+
+import numpy as np
+import pytest
+
+from repro.core.dso import run_dso_grid
+from repro.data.synthetic import make_classification
+
+
+@pytest.fixture(scope="module")
+def prob():
+    return make_classification(m=400, d=120, density=0.15, loss="hinge",
+                               lam=1e-3, seed=0)
+
+
+def test_gap_rate_at_least_sqrt(prob):
+    """Fitted log-log slope of gap vs T is <= -0.5 (Thm 1 is an upper
+    bound; observed decay is typically faster on well-conditioned data)."""
+    _, _, h = run_dso_grid(prob, p=4, epochs=48, eta0=60.0,
+                           use_adagrad=False)
+    es = np.asarray([r["epoch"] for r in h], float)
+    gs = np.asarray([max(r["gap"], 1e-8) for r in h], float)
+    sel = es >= 4
+    slope = np.polyfit(np.log(es[sel]), np.log(gs[sel]), 1)[0]
+    assert slope <= -0.5, slope
+
+
+def test_adagrad_reaches_small_gap(prob):
+    _, _, h = run_dso_grid(prob, p=4, epochs=48, eta0=0.5, use_adagrad=True)
+    assert h[-1]["gap"] < 0.03
+
+
+def test_gap_monotone_tail(prob):
+    """After the transient, the gap trend is non-increasing."""
+    _, _, h = run_dso_grid(prob, p=4, epochs=40, eta0=0.5)
+    gaps = [r["gap"] for r in h][5:]
+    # allow small noise: compare 5-epoch block means
+    blocks = [np.mean(gaps[i:i + 5]) for i in range(0, len(gaps) - 4, 5)]
+    assert all(b2 <= b1 * 1.05 for b1, b2 in zip(blocks, blocks[1:]))

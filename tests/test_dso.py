@@ -1,0 +1,140 @@
+"""Algorithm 1 behaviour: convergence, schedule, serializability (Lemma 2)."""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.dso import make_grid_data, run_dso_grid, run_dso_serial
+from repro.core.saddle import duality_gap
+from repro.core.schedule import partition_even, ring_perm, sigma
+from repro.data.synthetic import make_classification, make_regression
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+# ------------------------------------------------------------- schedule --
+
+
+def test_sigma_every_block_visited_once_per_epoch():
+    for p in [2, 3, 4, 8]:
+        for q in range(p):
+            blocks = {sigma(q, r, p) for r in range(p)}
+            assert blocks == set(range(p))
+        for r in range(p):
+            owners = [sigma(q, r, p) for q in range(p)]
+            assert sorted(owners) == list(range(p))  # no conflicts
+
+
+def test_ring_perm_advances_schedule():
+    p = 5
+    perm = ring_perm(p)
+    # device q sends to q-1; after the permute q holds sigma(q, r+1)
+    holder = {q: sigma(q, 0, p) for q in range(p)}
+    new = {}
+    for src, dst in perm:
+        new[dst] = holder[src]
+    for q in range(p):
+        assert new[q] == sigma(q, 1, p)
+
+
+def test_partition_even():
+    parts = partition_even(103, 8)
+    sizes = [s.stop - s.start for s in parts]
+    assert sum(sizes) == 103 and max(sizes) - min(sizes) <= 1
+
+
+# ----------------------------------------------------------- grid data --
+
+
+def test_grid_data_padding_roundtrip():
+    prob = make_classification(m=37, d=23, density=0.3, seed=0)
+    data = make_grid_data(prob, p=4)
+    X = np.asarray(data.Xg).reshape(data.p * data.mb, -1)
+    assert np.allclose(X[:37, :23], np.asarray(prob.X))
+    assert np.all(X[37:] == 0) and np.all(X[:, 23:] == 0)
+    assert float(data.row_valid.sum()) == 37
+
+
+# ---------------------------------------------------------- convergence --
+
+
+@pytest.mark.parametrize("loss", ["hinge", "logistic"])
+def test_serial_dso_decreases_gap(loss):
+    prob = make_classification(m=200, d=80, density=0.15, loss=loss,
+                               lam=1e-3, seed=0)
+    _, _, hist = run_dso_serial(prob, epochs=6, eta0=0.5)
+    gaps = [h["gap"] for h in hist]
+    assert gaps[-1] < gaps[0] * 0.6
+    assert gaps[-1] >= -1e-5
+
+
+@pytest.mark.parametrize("p", [1, 2, 4])
+def test_grid_dso_converges_any_p(p):
+    prob = make_classification(m=200, d=80, density=0.15, loss="hinge",
+                               lam=1e-3, seed=0)
+    _, _, hist = run_dso_grid(prob, p=p, epochs=25, eta0=0.5)
+    assert hist[-1]["gap"] < 0.1
+    assert np.isfinite(hist[-1]["primal"])
+
+
+def test_grid_dso_lasso():
+    prob = make_regression(m=150, d=60, density=0.2, lam=1e-2, seed=0)
+    _, _, hist = run_dso_grid(prob, p=2, epochs=30, eta0=0.3)
+    assert hist[-1]["primal"] < hist[0]["primal"]
+
+
+def test_row_batches_still_converges():
+    prob = make_classification(m=240, d=80, density=0.15, loss="hinge",
+                               lam=1e-3, seed=0)
+    _, _, hist = run_dso_grid(prob, p=4, epochs=25, eta0=0.5, row_batches=3)
+    assert hist[-1]["gap"] < 0.15
+
+
+def test_solutions_agree_across_p():
+    """Different processor counts reach the same neighbourhood (Thm 1)."""
+    prob = make_classification(m=200, d=64, density=0.2, loss="hinge",
+                               lam=1e-3, seed=2)
+    finals = []
+    for p in [1, 2, 4]:
+        _, _, hist = run_dso_grid(prob, p=p, epochs=40, eta0=0.5)
+        finals.append(hist[-1]["primal"])
+    assert max(finals) - min(finals) < 0.03
+
+
+# ------------------------------------------- serializability (Lemma 2) --
+
+
+SHARD_SCRIPT = textwrap.dedent("""
+    import numpy as np
+    from repro.data.synthetic import make_classification
+    from repro.core.dso import run_dso_grid
+    from repro.core.dso_dist import run_dso_sharded
+    prob = make_classification(m=300, d=100, density=0.1, loss='hinge',
+                               lam=1e-3, seed=0)
+    w1, a1, _ = run_dso_grid(prob, p=4, epochs=4, eta0=0.5)
+    w2, a2, _ = run_dso_sharded(prob, epochs=4, eta0=0.5)
+    assert np.abs(np.asarray(w1) - np.asarray(w2)).max() < 1e-5
+    assert np.abs(np.asarray(a1) - np.asarray(a2)).max() < 1e-5
+    print('MATCH')
+""")
+
+
+def test_sharded_matches_grid_simulator():
+    """shard_map ring execution == single-device simulator, bitwise-ish.
+
+    This is the Lemma 2 serializability property: the distributed run is
+    replayable on one machine. Runs in a subprocess with 4 host devices so
+    the main test process keeps a single-device JAX.
+    """
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    out = subprocess.run([sys.executable, "-c", SHARD_SCRIPT], env=env,
+                         capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "MATCH" in out.stdout

@@ -1,0 +1,85 @@
+"""Beyond-paper extensions: randomized-schedule DSO (§6 next step) and the
+libsvm data path."""
+
+import os
+import tempfile
+
+import numpy as np
+import pytest
+
+from repro.core.dso import run_dso_grid
+from repro.core.dso_async import run_dso_random
+from repro.data.libsvm import dump_libsvm, load_libsvm, parse_libsvm
+from repro.data.synthetic import make_classification
+
+
+def test_random_schedule_matches_cyclic_convergence():
+    """Lemma 2 only needs per-iteration block-disjointness: a NOMAD-style
+    random permutation schedule converges to the same solution.
+
+    Empirical finding (recorded in EXPERIMENTS.md): random permutations do
+    NOT guarantee that each processor visits every w-block within an epoch
+    (coverage ~ 1 - 1/e per epoch), so epoch-for-epoch progress lags the
+    cyclic schedule by ~1.5x — the cyclic schedule is not just simpler, it
+    is a coupon-collector-free coverage guarantee."""
+    prob = make_classification(m=300, d=100, density=0.15, loss="hinge",
+                               lam=1e-3, seed=1)
+    _, _, h_cyc = run_dso_grid(prob, p=4, epochs=30, eta0=0.5)
+    _, _, h_rnd = run_dso_random(prob, p=4, epochs=45, eta0=0.5, seed=7)
+    assert h_rnd[-1]["gap"] < 0.1
+    assert abs(h_rnd[-1]["primal"] - h_cyc[-1]["primal"]) < 0.03
+
+
+def test_random_schedule_logistic():
+    prob = make_classification(m=200, d=80, density=0.2, loss="logistic",
+                               lam=1e-3, seed=2)
+    _, _, h = run_dso_random(prob, p=2, epochs=25, eta0=0.5, alpha0=0.0005)
+    assert h[-1]["gap"] < 0.1
+
+
+def test_libsvm_roundtrip():
+    prob = make_classification(m=50, d=30, density=0.2, seed=4)
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "data.libsvm")
+        dump_libsvm(path, np.asarray(prob.X), np.asarray(prob.y))
+        loaded = load_libsvm(path, lam=prob.lam)
+        assert loaded.m == prob.m
+        np.testing.assert_allclose(np.asarray(loaded.X)[:, : prob.d],
+                                   np.asarray(prob.X), rtol=1e-4, atol=1e-5)
+        np.testing.assert_array_equal(np.asarray(loaded.y),
+                                      np.asarray(prob.y))
+
+
+def test_libsvm_parsing_variants():
+    lines = [
+        "+1 1:0.5 3:1.25",
+        "-1 2:2.0",
+        "# comment",
+        "",
+        "+1 3:0.1",
+    ]
+    X, y = parse_libsvm(lines)
+    assert X.shape == (3, 3)
+    assert X[0, 0] == 0.5 and X[0, 2] == 1.25 and X[1, 1] == 2.0
+    assert list(y) == [1.0, -1.0, 1.0]
+
+
+def test_libsvm_zero_one_labels():
+    X, y = parse_libsvm(["1 1:1.0", "0 1:2.0"])
+    assert set(y.tolist()) == {1.0, -1.0}
+
+
+def test_libsvm_max_rows_cols():
+    lines = [f"+1 {j}:{j}.0" for j in range(1, 6)]
+    X, y = parse_libsvm(lines, max_rows=3, max_cols=2)
+    assert X.shape[0] == 3 and X.shape[1] <= 2
+
+
+def test_dso_on_libsvm_loaded_problem():
+    prob = make_classification(m=120, d=40, density=0.3, seed=9)
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "p.libsvm")
+        dump_libsvm(path, np.asarray(prob.X), np.asarray(prob.y))
+        loaded = load_libsvm(path, lam=1e-3)
+    _, _, h = run_dso_grid(loaded, p=2, epochs=20, eta0=0.5)
+    assert h[-1]["gap"] < 0.2

@@ -1,0 +1,194 @@
+"""Per-kernel allclose vs the pure-jnp oracles (interpret mode), with
+shape/dtype sweeps and hypothesis property tests."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops
+from repro.kernels.ref import dso_tile_step_ref, ssd_scan_ref, swa_attention_ref
+
+RNG = np.random.default_rng(42)
+
+
+# ------------------------------------------------------------ dso_update --
+
+
+def _dso_inputs(M, D, density, seed=0):
+    rng = np.random.default_rng(seed)
+    X = (rng.random((M, D)) < density).astype(np.float32)
+    X *= rng.normal(0, 1, (M, D)).astype(np.float32)
+    y = np.where(rng.random(M) < 0.5, 1.0, -1.0).astype(np.float32)
+    w = rng.normal(0, 0.1, D).astype(np.float32)
+    alpha = (y * rng.random(M)).astype(np.float32)
+    gw = np.abs(rng.normal(0, 0.01, D)).astype(np.float32)
+    ga = np.abs(rng.normal(0, 0.01, M)).astype(np.float32)
+    rn = np.maximum((X != 0).sum(1), 1).astype(np.float32)
+    cn = np.maximum((X != 0).sum(0), 1).astype(np.float32)
+    sc = np.array([0.5, 1e-3, M, -31.6, 31.6], np.float32)
+    return tuple(jnp.asarray(a) for a in (X, y, w, alpha, gw, ga, rn, cn, sc))
+
+
+@pytest.mark.parametrize("M,D,bm,bd", [
+    (256, 512, 256, 512),    # single block
+    (512, 1024, 256, 512),   # multi block both axes
+    (300, 700, 128, 256),    # ragged -> padding path
+    (64, 128, 32, 128),      # small
+])
+@pytest.mark.parametrize("loss", ["hinge", "logistic", "square"])
+def test_dso_tile_step_matches_ref(M, D, bm, bd, loss):
+    args = _dso_inputs(M, D, 0.1, seed=M + D)
+    out_k = ops.dso_tile_step(*args, loss_name=loss, reg_name="l2",
+                              bm=bm, bd=bd, interpret=True)
+    out_r = dso_tile_step_ref(*args, loss_name=loss, reg_name="l2")
+    for name, a, b in zip("w alpha gw ga".split(), out_k, out_r):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=2e-5, atol=2e-6, err_msg=name)
+
+
+@pytest.mark.parametrize("reg", ["l1", "l2"])
+def test_dso_tile_step_regularizers(reg):
+    args = _dso_inputs(128, 256, 0.2, seed=9)
+    out_k = ops.dso_tile_step(*args, loss_name="square", reg_name=reg,
+                              interpret=True)
+    out_r = dso_tile_step_ref(*args, loss_name="square", reg_name=reg)
+    for a, b in zip(out_k, out_r):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=2e-5, atol=2e-6)
+
+
+@given(m_exp=st.integers(4, 8), d_exp=st.integers(7, 9),
+       density=st.floats(0.05, 0.9),
+       loss=st.sampled_from(["hinge", "logistic", "square"]))
+@settings(max_examples=10, deadline=None)
+def test_dso_tile_step_property(m_exp, d_exp, density, loss):
+    M, D = 2 ** m_exp, 2 ** d_exp
+    args = _dso_inputs(M, D, density, seed=m_exp * 31 + d_exp)
+    out_k = ops.dso_tile_step(*args, loss_name=loss, reg_name="l2",
+                              interpret=True)
+    out_r = dso_tile_step_ref(*args, loss_name=loss, reg_name="l2")
+    for a, b in zip(out_k, out_r):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=3e-5, atol=3e-6)
+    # invariant: alpha stays in the conjugate domain
+    _, alpha_new, _, _ = out_k
+    if loss in ("hinge", "logistic"):
+        ya = np.asarray(args[1]) * np.asarray(alpha_new)
+        assert ya.min() >= -1e-6 and ya.max() <= 1 + 1e-6
+
+
+# --------------------------------------------------------- swa_attention --
+
+
+def _attn_inputs(B, Hq, Hkv, Tq, Tk, Dh, dtype=np.float32, seed=0):
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.normal(0, 1, (B, Hq, Tq, Dh)).astype(dtype))
+    k = jnp.asarray(rng.normal(0, 1, (B, Hkv, Tk, Dh)).astype(dtype))
+    v = jnp.asarray(rng.normal(0, 1, (B, Hkv, Tk, Dh)).astype(dtype))
+    return q, k, v
+
+
+@pytest.mark.parametrize("B,Hq,Hkv,Tq,Tk,Dh,window", [
+    (1, 2, 2, 256, 256, 64, 128),     # MHA
+    (2, 4, 2, 256, 256, 64, 64),      # GQA
+    (1, 8, 1, 128, 128, 32, 1024),    # MQA, window > T (= full causal)
+    (1, 2, 1, 100, 100, 64, 50),      # ragged -> padding
+])
+def test_swa_matches_ref(B, Hq, Hkv, Tq, Tk, Dh, window):
+    q, k, v = _attn_inputs(B, Hq, Hkv, Tq, Tk, Dh, seed=Tq)
+    o1 = ops.swa_attention(q, k, v, window=window, interpret=True,
+                           bq=64, bk=64)
+    o2 = swa_attention_ref(q, k, v, window=window)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_swa_decode_offset():
+    """Decode: 1 query row at the end of a long cache."""
+    q, k, v = _attn_inputs(2, 4, 2, 8, 512, 64, seed=5)
+    o1 = ops.swa_attention(q, k, v, window=256, q_offset=504,
+                           interpret=True, bq=8, bk=128)
+    o2 = swa_attention_ref(q, k, v, window=256, q_offset=504)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_swa_bf16():
+    q, k, v = _attn_inputs(1, 2, 2, 128, 128, 64, dtype=np.float32, seed=7)
+    q, k, v = (x.astype(jnp.bfloat16) for x in (q, k, v))
+    o1 = ops.swa_attention(q, k, v, window=64, interpret=True, bq=64, bk=64)
+    o2 = swa_attention_ref(q, k, v, window=64)
+    assert o1.dtype == jnp.bfloat16
+    np.testing.assert_allclose(np.asarray(o1, np.float32),
+                               np.asarray(o2, np.float32), rtol=3e-2,
+                               atol=3e-2)
+
+
+@given(tq_tiles=st.integers(1, 3), win_frac=st.floats(0.1, 2.0),
+       hq=st.sampled_from([1, 2, 4]))
+@settings(max_examples=8, deadline=None)
+def test_swa_property(tq_tiles, win_frac, hq):
+    T = 64 * tq_tiles
+    window = max(1, int(win_frac * T))
+    q, k, v = _attn_inputs(1, hq, 1, T, T, 32, seed=T + hq)
+    o1 = ops.swa_attention(q, k, v, window=window, interpret=True,
+                           bq=64, bk=64)
+    o2 = swa_attention_ref(q, k, v, window=window)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2),
+                               rtol=3e-5, atol=3e-5)
+
+
+# -------------------------------------------------------------- ssd_scan --
+
+
+def _ssd_inputs(b, t, h, dh, n, seed=0):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(0, 1, (b, t, h, dh)).astype(np.float32))
+    dt = jnp.asarray((np.abs(rng.normal(0, 0.1, (b, t, h))) + 0.01)
+                     .astype(np.float32))
+    A = jnp.asarray(-np.abs(rng.normal(1, 0.3, (h,))).astype(np.float32))
+    B = jnp.asarray((rng.normal(0, 1, (b, t, n)) / np.sqrt(n))
+                    .astype(np.float32))
+    C = jnp.asarray((rng.normal(0, 1, (b, t, n)) / np.sqrt(n))
+                    .astype(np.float32))
+    return x, dt, A, B, C
+
+
+@pytest.mark.parametrize("b,t,h,dh,n,chunk", [
+    (1, 128, 2, 32, 16, 64),
+    (2, 256, 3, 32, 16, 64),
+    (1, 100, 2, 16, 8, 32),     # ragged -> padding
+    (1, 512, 1, 64, 32, 128),
+])
+def test_ssd_matches_ref(b, t, h, dh, n, chunk):
+    x, dt, A, B, C = _ssd_inputs(b, t, h, dh, n, seed=t)
+    y1 = ops.ssd_scan(x, dt, A, B, C, chunk=chunk, interpret=True)
+    y2 = ssd_scan_ref(x, dt, A, B, C)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                               rtol=2e-4, atol=2e-5)
+
+
+@given(chunks=st.integers(1, 4), h=st.integers(1, 3),
+       decay=st.floats(0.1, 3.0))
+@settings(max_examples=8, deadline=None)
+def test_ssd_property(chunks, h, decay):
+    t = 64 * chunks
+    x, dt, A, B, C = _ssd_inputs(1, t, h, 16, 8, seed=chunks * 7 + h)
+    A = A * decay
+    y1 = ops.ssd_scan(x, dt, A, B, C, chunk=64, interpret=True)
+    y2 = ssd_scan_ref(x, dt, A, B, C)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                               rtol=3e-4, atol=3e-5)
+
+
+def test_ssd_state_decay_invariant():
+    """With A -> -inf (total decay) each position only sees itself."""
+    x, dt, A, B, C = _ssd_inputs(1, 128, 1, 16, 8, seed=3)
+    A = jnp.full_like(A, -1e4)
+    y = ops.ssd_scan(x, dt, A, B, C, chunk=64, interpret=True)
+    # expected: y_t = C_t . (dt_t B_t x_t^T)
+    want = jnp.einsum("btn,bth,btn,bthd->bthd", C, dt, B, x)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(want), rtol=1e-4,
+                               atol=1e-5)

@@ -1,0 +1,226 @@
+"""Per-architecture smoke tests (deliverable f) + model-level invariants.
+
+Each of the 10 assigned architectures is instantiated as its REDUCED smoke
+variant (2-4 layers, d_model <= 512, <= 4 experts) and runs one forward and
+one train step on CPU, asserting output shapes and no NaNs. Full configs are
+exercised only by the dry-run (launch/dryrun.py)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import ARCH_IDS, get_config, get_smoke_config
+from repro.data.lm_pipeline import batches
+from repro.models.model import (decode_step, forward, init_decode_state,
+                                init_params, param_specs)
+from repro.training.optimizer import AdamWConfig
+from repro.training.train import init_state, make_train_step
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _batch(cfg, B, T, with_targets=False):
+    b = {}
+    if cfg.inputs_embeds:
+        b["embeds"] = jax.random.normal(KEY, (B, T, cfg.d_model),
+                                        jnp.float32)
+    else:
+        b["tokens"] = jax.random.randint(KEY, (B, T), 0, cfg.vocab)
+    if cfg.arch_type == "vlm":
+        b["image_embeds"] = jax.random.normal(
+            KEY, (B, cfg.n_image_tokens, cfg.d_model), jnp.float32)
+    if with_targets:
+        b["targets"] = jax.random.randint(KEY, (B, T), 0, cfg.vocab)
+    return b
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_forward(arch):
+    cfg = get_smoke_config(arch)
+    assert cfg.n_layers <= 4 and cfg.d_model <= 512
+    assert cfg.n_experts <= 4
+    params = init_params(KEY, cfg)
+    B, T = 2, 64
+    logits, aux = forward(params, _batch(cfg, B, T), cfg, remat=False)
+    assert logits.shape == (B, T, cfg.padded_vocab)
+    assert not bool(jnp.isnan(logits).any())
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_train_step(arch):
+    cfg = get_smoke_config(arch)
+    ocfg = AdamWConfig(lr=1e-3, warmup_steps=2, total_steps=10)
+    state = init_state(KEY, cfg)
+    step = jax.jit(make_train_step(cfg, ocfg, remat=True))
+    b = _batch(cfg, 2, 32, with_targets=True)
+    state, metrics = step(state, b)
+    assert np.isfinite(float(metrics["loss"]))
+    assert float(metrics["loss"]) > 0
+    # one more step must change the loss (params actually updated)
+    _, m2 = step(state, b)
+    assert float(m2["loss"]) != float(metrics["loss"])
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_decode(arch):
+    cfg = get_smoke_config(arch)
+    params = init_params(KEY, cfg)
+    B, S = 2, 64
+    st = init_decode_state(cfg, B, S)
+    inp = (jax.random.normal(KEY, (B, 1, cfg.d_model), jnp.float32)
+           if cfg.inputs_embeds
+           else jax.random.randint(KEY, (B, 1), 0, cfg.vocab))
+    kw = {}
+    if cfg.arch_type == "vlm":
+        kw["image_embeds"] = jax.random.normal(
+            KEY, (B, cfg.n_image_tokens, cfg.d_model), jnp.float32)
+    logits, st = decode_step(params, st, inp, jnp.int32(0), cfg,
+                             seq_len=S, **kw)
+    assert logits.shape == (B, 1, cfg.padded_vocab)
+    assert not bool(jnp.isnan(logits).any())
+
+
+@pytest.mark.parametrize("arch", ["granite-3-8b", "mamba2-370m",
+                                  "zamba2-7b", "qwen1.5-4b"])
+def test_decode_matches_forward(arch):
+    """Prefilling token-by-token through decode_step reproduces forward()."""
+    cfg = get_smoke_config(arch)
+    params = init_params(KEY, cfg)
+    B, T = 1, 16
+    b = _batch(cfg, B, T)
+    logits_f, _ = forward(params, b, cfg, remat=False)
+    st = init_decode_state(cfg, B, T)
+    outs = []
+    for t in range(T):
+        lg, st = decode_step(params, st, b["tokens"][:, t: t + 1],
+                             jnp.int32(t), cfg, seq_len=T)
+        outs.append(lg)
+    logits_d = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(logits_d), np.asarray(logits_f),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_sliding_window_matches_ring_decode():
+    """Windowed forward() == ring-buffer decode over a long sequence."""
+    import dataclasses
+    cfg = dataclasses.replace(get_smoke_config("granite-3-8b"),
+                              full_attn_max=32, sliding_window=16)
+    params = init_params(KEY, cfg)
+    B, T = 1, 64  # > full_attn_max -> windowed path
+    b = _batch(cfg, B, T)
+    logits_f, _ = forward(params, b, cfg, remat=False, q_chunk=32)
+    st = init_decode_state(cfg, B, T)
+    assert st["layers"]["k"].shape[2] == 16  # ring cache = window slots
+    outs = []
+    for t in range(T):
+        lg, st = decode_step(params, st, b["tokens"][:, t: t + 1],
+                             jnp.int32(t), cfg, seq_len=T)
+        outs.append(lg)
+    logits_d = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(logits_d), np.asarray(logits_f),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_moe_capacity_drop_passthrough():
+    """Dropped tokens pass through the residual stream unchanged."""
+    from repro.models.moe import moe_apply, moe_init
+    cfg = get_smoke_config("dbrx-132b")
+    p = moe_init(KEY, cfg, jnp.float32)
+    x = jax.random.normal(KEY, (2, 16, cfg.d_model), jnp.float32)
+    out_small, _ = moe_apply(p, x, cfg, capacity_factor=0.01)  # drop ~all
+    # residual add happens outside moe_apply; dropped contribution ~ 0
+    assert float(jnp.abs(out_small).mean()) < float(
+        jnp.abs(moe_apply(p, x, cfg, capacity_factor=2.0)[0]).mean())
+
+
+def test_moe_router_balanced_uniform_input():
+    from repro.models.moe import moe_apply, moe_init
+    cfg = get_smoke_config("phi3.5-moe-42b-a6.6b")
+    p = moe_init(KEY, cfg, jnp.float32)
+    x = jax.random.normal(KEY, (4, 64, cfg.d_model), jnp.float32)
+    _, aux = moe_apply(p, x, cfg)
+    # random router ~ balanced: aux close to 1.0 (its minimum)
+    assert 0.9 < float(aux) < 1.5
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_full_config_matches_assignment(arch):
+    """The FULL configs carry exactly the assigned hyperparameters."""
+    cfg = get_config(arch)
+    expected = {
+        "dbrx-132b": (40, 6144, 48, 8, 10752, 100352),
+        "musicgen-large": (48, 2048, 32, 32, 8192, 2048),
+        "phi3.5-moe-42b-a6.6b": (32, 4096, 32, 8, 6400, 32064),
+        "zamba2-7b": (81, 3584, 32, 32, 14336, 32000),
+        "granite-20b": (52, 6144, 48, 1, 24576, 49152),
+        "mamba2-370m": (48, 1024, 0, 0, 0, 50280),
+        "qwen1.5-4b": (40, 2560, 20, 20, 6912, 151936),
+        "granite-3-8b": (40, 4096, 32, 8, 12800, 49155),
+        "starcoder2-15b": (40, 6144, 48, 4, 24576, 49152),
+        "llama-3.2-vision-11b": (40, 4096, 32, 8, 14336, 128256),
+    }[arch]
+    got = (cfg.n_layers, cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.d_ff,
+           cfg.vocab)
+    assert got == expected, (arch, got, expected)
+    extra = {
+        "dbrx-132b": cfg.n_experts == 16 and cfg.top_k == 4,
+        "phi3.5-moe-42b-a6.6b": cfg.n_experts == 16 and cfg.top_k == 2,
+        "zamba2-7b": cfg.ssm_state == 64,
+        "mamba2-370m": cfg.ssm_state == 128,
+        "qwen1.5-4b": cfg.qkv_bias,
+        "llama-3.2-vision-11b": cfg.cross_attn_every == 5,
+        "musicgen-large": cfg.inputs_embeds,
+    }.get(arch, True)
+    assert extra, arch
+    assert cfg.source  # provenance recorded
+
+
+def test_param_count_sane():
+    # param_count approximations land in the right ballpark
+    assert 100e9 < get_config("dbrx-132b").param_count() < 160e9
+    assert 0.25e9 < get_config("mamba2-370m").param_count() < 0.6e9
+    assert 10e9 < get_config("starcoder2-15b").param_count() < 20e9
+    dbrx = get_config("dbrx-132b")
+    assert dbrx.active_param_count() < 0.45 * dbrx.param_count()
+
+
+def test_ssd_chunk_invariance():
+    """ssd_chunked gives the same output for any chunk size."""
+    from repro.models.mamba2 import ssd_chunked
+    rng = np.random.default_rng(0)
+    b, t, h, dh, n = 2, 128, 2, 16, 8
+    x = jnp.asarray(rng.normal(0, 1, (b, t, h, dh)).astype(np.float32))
+    dt = jnp.asarray(np.abs(rng.normal(0, 0.1, (b, t, h))).astype(np.float32))
+    A = jnp.asarray(-np.abs(rng.normal(1, 0.3, h)).astype(np.float32))
+    B = jnp.asarray(rng.normal(0, 0.3, (b, t, n)).astype(np.float32))
+    C = jnp.asarray(rng.normal(0, 0.3, (b, t, n)).astype(np.float32))
+    y32 = ssd_chunked(x, dt, A, B, C, chunk=32)
+    y128 = ssd_chunked(x, dt, A, B, C, chunk=128)
+    np.testing.assert_allclose(np.asarray(y32), np.asarray(y128), rtol=1e-4,
+                               atol=1e-5)
+
+
+def test_param_specs_no_allocation():
+    cfg = get_config("dbrx-132b")  # 132B params — must NOT allocate
+    specs = param_specs(cfg)
+    leaves = jax.tree.leaves(specs)
+    assert all(isinstance(l, jax.ShapeDtypeStruct) for l in leaves)
+    total = sum(np.prod(l.shape) for l in leaves)
+    assert total > 100e9
+
+
+def test_moe_cumsum_dispatch_equals_sort():
+    """The sort-free (cumsum-rank) dispatch is numerically identical: a
+    stable sort's within-expert order == original slot order, so both drop
+    exactly the same over-capacity slots."""
+    import dataclasses
+    from repro.models.moe import moe_apply, moe_init
+    cfg = get_smoke_config("dbrx-132b")
+    p = moe_init(KEY, cfg, jnp.float32)
+    x = jax.random.normal(KEY, (2, 64, cfg.d_model), jnp.float32)
+    o1, a1 = moe_apply(p, x, cfg)
+    o2, a2 = moe_apply(p, x, dataclasses.replace(cfg,
+                                                 moe_dispatch="cumsum"))
+    np.testing.assert_array_equal(np.asarray(o1), np.asarray(o2))
+    assert float(a1) == float(a2)

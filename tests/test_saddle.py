@@ -1,0 +1,118 @@
+"""Table 1 / Sec. 2 correctness: conjugates, saddle objective, duality gap."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.losses import LOSSES, get_loss
+from repro.core.saddle import (argmin_w, dual_objective, duality_gap,
+                               make_problem, primal_objective,
+                               saddle_objective)
+from repro.data.synthetic import make_classification
+
+jax.config.update("jax_enable_x64", False)
+
+
+def _num_neg_conj(loss, alpha, y, ugrid):
+    """-l*(-a) = min_u [ a*u + l(u) ] evaluated on a dense u-grid."""
+    vals = alpha * ugrid + np.asarray(loss.value(jnp.asarray(ugrid), y))
+    return vals.min()
+
+
+@pytest.mark.parametrize("loss_name", ["hinge", "logistic", "square"])
+@pytest.mark.parametrize("y", [1.0, -1.0])
+def test_conjugate_matches_numeric_min(loss_name, y):
+    loss = get_loss(loss_name)
+    ugrid = np.linspace(-30, 30, 200001)
+    # sample alphas strictly inside the conjugate domain
+    for b in [0.05, 0.3, 0.5, 0.7, 0.95]:
+        alpha = y * b if loss_name != "square" else (2 * b - 1) * 3.0
+        got = float(loss.neg_conjugate(jnp.float32(alpha), jnp.float32(y)))
+        want = _num_neg_conj(loss, alpha, jnp.float32(y), ugrid)
+        assert np.isclose(got, want, atol=2e-3), (loss_name, y, b, got, want)
+
+
+@pytest.mark.parametrize("loss_name", ["hinge", "logistic", "square"])
+@pytest.mark.parametrize("y", [1.0, -1.0])
+def test_dual_grad_matches_autodiff(loss_name, y):
+    loss = get_loss(loss_name)
+    # d/da [ l*(-a) ] = -d/da [ neg_conjugate(a) ]
+    f = lambda a: -loss.neg_conjugate(a, jnp.float32(y))
+    for b in [0.1, 0.4, 0.6, 0.9]:
+        alpha = jnp.float32(y * b if loss_name != "square" else (2 * b - 1) * 2)
+        got = float(loss.dual_grad(alpha, jnp.float32(y)))
+        want = float(jax.grad(f)(alpha))
+        assert np.isclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize("loss_name", ["logistic", "square"])
+def test_primal_equals_max_over_alpha(loss_name):
+    """max_alpha f(w, alpha) = P(w): attained at alpha* = -l'(<w,x>)."""
+    prob = make_classification(m=50, d=20, density=0.3, loss=loss_name,
+                               lam=1e-2, seed=3)
+    loss = get_loss(loss_name)
+    rng = np.random.default_rng(0)
+    w = jnp.asarray(rng.normal(0, 0.3, prob.d).astype(np.float32))
+    u = prob.X @ w
+    alpha_star = -loss.grad(u, prob.y)
+    f_at_star = saddle_objective(prob, w, alpha_star)
+    p = primal_objective(prob, w)
+    assert np.isclose(float(f_at_star), float(p), rtol=1e-4, atol=1e-5)
+    # and it is a maximum: perturbations decrease f
+    for _ in range(5):
+        pert = jnp.asarray(rng.normal(0, 0.01, prob.m).astype(np.float32))
+        a2 = loss.project_alpha(alpha_star + pert, prob.y)
+        assert float(saddle_objective(prob, w, a2)) <= float(p) + 1e-5
+
+
+def test_dual_equals_min_over_w():
+    """D(alpha) = min_w f(w, alpha): attained at the closed-form argmin."""
+    prob = make_classification(m=60, d=25, density=0.3, loss="hinge",
+                               lam=1e-2, seed=4)
+    rng = np.random.default_rng(1)
+    alpha = prob.y * jnp.asarray(rng.random(prob.m).astype(np.float32))
+    wmin = argmin_w(prob, alpha)
+    f_at_min = saddle_objective(prob, wmin, alpha)
+    dd = dual_objective(prob, alpha)
+    assert np.isclose(float(f_at_min), float(dd), rtol=1e-4, atol=1e-6)
+    for _ in range(5):
+        pert = jnp.asarray(rng.normal(0, 0.01, prob.d).astype(np.float32))
+        assert float(saddle_objective(prob, wmin + pert, alpha)) >= float(dd) - 1e-6
+
+
+@given(seed=st.integers(0, 10_000), lam=st.floats(1e-5, 1e-1),
+       loss=st.sampled_from(["hinge", "logistic", "square"]))
+@settings(max_examples=25, deadline=None)
+def test_gap_nonnegative_property(seed, lam, loss):
+    """Weak duality: gap(w, alpha) >= 0 for any feasible pair."""
+    prob = make_classification(m=40, d=15, density=0.4, loss=loss, lam=lam,
+                               seed=seed % 50)
+    rng = np.random.default_rng(seed)
+    w = jnp.asarray(rng.normal(0, 1, prob.d).astype(np.float32))
+    alpha_raw = jnp.asarray(rng.normal(0, 1, prob.m).astype(np.float32))
+    alpha = prob.loss.project_alpha(alpha_raw, prob.y)
+    g = float(duality_gap(prob, w, alpha))
+    assert g >= -1e-4
+
+
+def test_f_decomposition_eq6():
+    """Eq. (6): f(w,a) equals the sum of f_ij over nonzeros."""
+    prob = make_classification(m=30, d=12, density=0.5, loss="hinge",
+                               lam=1e-2, seed=7)
+    rng = np.random.default_rng(2)
+    w = jnp.asarray(rng.normal(0, 0.5, prob.d).astype(np.float32))
+    alpha = prob.loss.project_alpha(
+        jnp.asarray(rng.normal(0, 1, prob.m).astype(np.float32)), prob.y)
+    X = np.asarray(prob.X)
+    ii, jj = np.nonzero(X)
+    total = 0.0
+    for i, j in zip(ii, jj):
+        f_ij = (prob.lam * float(prob.reg.value(w[j])) / float(prob.col_nnz[j])
+                + float(prob.loss.neg_conjugate(alpha[i], prob.y[i]))
+                / (prob.m * float(prob.row_nnz[i]))
+                - float(alpha[i]) * float(w[j]) * X[i, j] / prob.m)
+        total += f_ij
+    assert np.isclose(total, float(saddle_objective(prob, w, alpha)),
+                      rtol=1e-3, atol=1e-4)
