@@ -126,7 +126,13 @@ def run_dso_serial(prob: Problem, epochs: int = 10, eta0: float = 0.1,
 
 
 class GridData(NamedTuple):
-    """Problem data laid out on the p x p DSO grid (row-major padding)."""
+    """Problem data laid out on the p x p DSO grid (row-major padding).
+
+    The ``tile_*_nnz_g`` fields are the *static sparsity statistics* of the
+    grid: per-tile nonzero counts precomputed once here instead of being
+    re-derived from X with ``(x != 0).sum(...)`` on every tile step of every
+    epoch (they never change — X is immutable during optimization).
+    """
 
     Xg: Array        # (p, mb, d_pad)  row shard per processor, all columns
     yg: Array        # (p, mb)
@@ -136,6 +142,10 @@ class GridData(NamedTuple):
     p: int
     mb: int          # rows per processor
     db: int          # cols per block
+    # [q, s, j]: nnz of column j within row batch s of processor q's shard
+    tile_col_nnz_g: Array = None   # (p, row_batches, d_pad)
+    # [q, b, i]: nnz of row i of processor q within block b's columns
+    tile_row_nnz_g: Array = None   # (p, p, mb)
 
 
 class DSOState(NamedTuple):
@@ -146,7 +156,7 @@ class DSOState(NamedTuple):
     epoch: Array     # scalar int32
 
 
-def make_grid_data(prob: Problem, p: int) -> GridData:
+def make_grid_data(prob: Problem, p: int, row_batches: int = 1) -> GridData:
     m_pad, d_pad = pad_to_multiple(prob.m, p), pad_to_multiple(prob.d, p)
     mb, db = m_pad // p, d_pad // p
     X = np.zeros((m_pad, d_pad), np.float32)
@@ -159,13 +169,25 @@ def make_grid_data(prob: Problem, p: int) -> GridData:
     col_nnz[: prob.d] = np.asarray(prob.col_nnz)
     row_valid = np.zeros((m_pad,), np.float32)
     row_valid[: prob.m] = 1.0
+    # static per-tile sparsity statistics, computed once per run (X never
+    # changes): per-row-batch column counts and per-block row counts
+    Xr = X.reshape(p, mb, d_pad)
+    nz = Xr != 0
+    rb = max(1, mb // row_batches)
+    n_rb = mb // rb
+    tile_col_nnz = nz[:, : n_rb * rb].reshape(p, n_rb, rb, d_pad) \
+        .sum(axis=2).astype(np.float32)
+    tile_row_nnz = nz.reshape(p, mb, p, db).sum(axis=3) \
+        .transpose(0, 2, 1).astype(np.float32)
     return GridData(
-        Xg=jnp.asarray(X.reshape(p, mb, d_pad)),
+        Xg=jnp.asarray(Xr),
         yg=jnp.asarray(y.reshape(p, mb)),
         row_nnz_g=jnp.asarray(row_nnz.reshape(p, mb)),
         col_nnz=jnp.asarray(col_nnz),
         row_valid=jnp.asarray(row_valid.reshape(p, mb)),
         p=p, mb=mb, db=db,
+        tile_col_nnz_g=jnp.asarray(tile_col_nnz),
+        tile_row_nnz_g=jnp.asarray(tile_row_nnz),
     )
 
 
@@ -183,38 +205,27 @@ def init_state(prob: Problem, data: GridData, alpha0: float = 0.0) -> DSOState:
     )
 
 
-def block_tile_step_pallas(*, X_tile, y_tile, w_blk, alpha_blk, gw_blk,
-                           ga_blk, row_nnz_tile, col_nnz_blk, eta_t, lam, m,
-                           loss_name: str, reg_name: str, use_adagrad: bool,
-                           w_lo, w_hi):
-    """Pallas-kernel twin of ``block_tile_step`` (kernels/dso_update.py).
-
-    AdaGrad is always on in the kernel. On CPU this runs in interpret mode
-    (slow — used for validation); on TPU it is the production hot loop."""
-    from repro.kernels import ops
-    assert use_adagrad, "the fused kernel implements the AdaGrad step"
-    scalars = jnp.stack([eta_t, lam, m, w_lo, w_hi]).astype(jnp.float32)
-    w2, a2, gw2, ga2 = ops.dso_tile_step(
-        X_tile, y_tile, w_blk, alpha_blk, gw_blk, ga_blk, row_nnz_tile,
-        col_nnz_blk, scalars, loss_name=loss_name, reg_name=reg_name)
-    return w2, a2, gw2, ga2
-
-
 def block_tile_step(*, X_tile, y_tile, w_blk, alpha_blk, gw_blk, ga_blk,
                     row_nnz_tile, col_nnz_blk, eta_t, lam, m,
                     loss_name: str, reg_name: str, use_adagrad: bool,
-                    w_lo, w_hi):
+                    w_lo, w_hi, tile_row_nnz=None, tile_col_nnz=None):
     """One TPU-native tile step on an active block (DESIGN.md §3).
 
     Aggregates Eq. (8) over every nonzero of the tile; simultaneous
     (Jacobi) read of (w, alpha) as in Lemma 2.  Returns updated
     (w_blk, alpha_blk, gw_blk, ga_blk), with App. B projections applied.
+
+    ``tile_row_nnz``/``tile_col_nnz`` are the tile's per-row/per-column
+    nonzero counts; pass the precomputed statistics (``GridData``) to keep
+    this recomputation off the hot path — they are derived from X here only
+    when absent.
     """
     loss = get_loss(loss_name)
     reg = get_regularizer(reg_name)
-    nz = (X_tile != 0).astype(X_tile.dtype)
-    tile_col_nnz = nz.sum(axis=0)          # n_j within this tile
-    tile_row_nnz = nz.sum(axis=1)          # n_i within this tile
+    if tile_row_nnz is None or tile_col_nnz is None:
+        nz = (X_tile != 0).astype(X_tile.dtype)
+        tile_col_nnz = nz.sum(axis=0)      # n_j within this tile
+        tile_row_nnz = nz.sum(axis=1)      # n_i within this tile
     g_w = (lam * reg.grad(w_blk) * tile_col_nnz / col_nnz_blk
            - (X_tile.T @ alpha_blk) / m)
     g_a = (-loss.dual_grad(alpha_blk, y_tile) * tile_row_nnz
@@ -234,16 +245,38 @@ def block_tile_step(*, X_tile, y_tile, w_blk, alpha_blk, gw_blk, ga_blk,
     return w_blk, alpha_blk, gw_blk, ga_blk
 
 
-def _inner_iteration(prob_meta, data: GridData, blk_cols, w_blk, gw_blk,
-                     alpha_q, ga_q, X_q, y_q, row_nnz_q, eta_t,
+def _inner_iteration(prob_meta, col_nnz, blk_id, w_blk, gw_blk,
+                     alpha_q, ga_q, X_q, y_q, row_nnz_q, tcn_q, trn_q, eta_t,
                      row_batches: int, impl: str = "jnp"):
-    """All tile steps of one processor on one active block."""
+    """All tile steps of one processor on one active block.
+
+    ``tcn_q`` (>= row_batches, d_pad) / ``trn_q`` (p, mb): the processor's
+    precomputed tile sparsity statistics (``GridData`` fields, sliced per
+    processor).  ``impl='pallas'`` issues ONE fused-kernel launch covering
+    the whole block (the row-batch sub-scan folded into the kernel grid);
+    ``impl='jnp'`` scans the jnp tile step over the row batches.
+    """
+    assert impl in ("jnp", "pallas"), f"unknown impl {impl!r}"
     lam, m, loss_name, reg_name, use_adagrad, w_lo, w_hi = prob_meta
-    step_fn = block_tile_step if impl == "jnp" else block_tile_step_pallas
     db = w_blk.shape[0]
-    col_nnz_blk = jax.lax.dynamic_slice(data.col_nnz, (blk_cols,), (db,))
+    blk_cols = blk_id * db
+    col_nnz_blk = jax.lax.dynamic_slice(col_nnz, (blk_cols,), (db,))
     mb = X_q.shape[0]
     rb = mb // row_batches
+    # this block's slice of the static sparsity statistics
+    trn_blk = jax.lax.dynamic_slice(trn_q, (blk_id, 0), (1, mb))[0]
+    tcn_blk = jax.lax.dynamic_slice(tcn_q, (0, blk_cols), (row_batches, db))
+
+    if impl == "pallas":
+        from repro.kernels import ops
+        assert use_adagrad, "the fused kernel implements the AdaGrad step"
+        X_blk = jax.lax.dynamic_slice(X_q, (0, blk_cols), (mb, db))
+        scalars = jnp.stack([eta_t, lam, m, w_lo, w_hi]).astype(jnp.float32)
+        w_blk, alpha_q, gw_blk, ga_q = ops.dso_block_step(
+            X_blk, y_q, w_blk, alpha_q, gw_blk, ga_q, trn_blk, tcn_blk,
+            row_nnz_q, col_nnz_blk, scalars, row_batches=row_batches,
+            loss_name=loss_name, reg_name=reg_name)
+        return w_blk, alpha_q, gw_blk, ga_q
 
     def sub(carry, s):
         w_blk, alpha_q, gw_blk, ga_q = carry
@@ -252,11 +285,14 @@ def _inner_iteration(prob_meta, data: GridData, blk_cols, w_blk, gw_blk,
         at = jax.lax.dynamic_slice(alpha_q, (s * rb,), (rb,))
         gat = jax.lax.dynamic_slice(ga_q, (s * rb,), (rb,))
         rnt = jax.lax.dynamic_slice(row_nnz_q, (s * rb,), (rb,))
-        w_blk, at, gw_blk, gat = step_fn(
+        trn_t = jax.lax.dynamic_slice(trn_blk, (s * rb,), (rb,))
+        tcn_t = jax.lax.dynamic_slice(tcn_blk, (s, 0), (1, db))[0]
+        w_blk, at, gw_blk, gat = block_tile_step(
             X_tile=Xt, y_tile=yt, w_blk=w_blk, alpha_blk=at, gw_blk=gw_blk,
             ga_blk=gat, row_nnz_tile=rnt, col_nnz_blk=col_nnz_blk,
             eta_t=eta_t, lam=lam, m=m, loss_name=loss_name,
-            reg_name=reg_name, use_adagrad=use_adagrad, w_lo=w_lo, w_hi=w_hi)
+            reg_name=reg_name, use_adagrad=use_adagrad, w_lo=w_lo, w_hi=w_hi,
+            tile_row_nnz=trn_t, tile_col_nnz=tcn_t)
         alpha_q = jax.lax.dynamic_update_slice(alpha_q, at, (s * rb,))
         ga_q = jax.lax.dynamic_update_slice(ga_q, gat, (s * rb,))
         return (w_blk, alpha_q, gw_blk, ga_q), None
@@ -278,12 +314,21 @@ def _prob_meta(prob: Problem):
 # =====================================================================
 
 
-@functools.partial(jax.jit, static_argnames=("loss_name", "reg_name",
-                                             "use_adagrad", "row_batches",
-                                             "p", "db", "impl"))
-def _grid_epoch(data: GridData, state: DSOState, eta_t, lam, m, w_lo, w_hi,
+def check_tile_stats(data: GridData, row_batches: int):
+    """The stats' tile height must equal the epoch's tile height, or the
+    per-tile counts silently describe the wrong row grouping."""
+    assert data.tile_col_nnz_g is not None, \
+        "GridData lacks tile stats: build it with make_grid_data"
+    mb = data.Xg.shape[1]
+    assert mb // data.tile_col_nnz_g.shape[1] == mb // row_batches, \
+        (f"GridData stats built for a different row grouping: "
+         f"make_grid_data(..., row_batches={row_batches}) required")
+
+
+def _epoch_body(data: GridData, state: DSOState, eta_t, lam, m, w_lo, w_hi,
                 *, loss_name, reg_name, use_adagrad, row_batches, p, db,
                 impl="jnp"):
+    check_tile_stats(data, row_batches)
     meta = (lam, m, loss_name, reg_name, use_adagrad, w_lo, w_hi)
     qs = jnp.arange(p)
 
@@ -293,20 +338,56 @@ def _grid_epoch(data: GridData, state: DSOState, eta_t, lam, m, w_lo, w_hi,
         w_owned = jnp.take(st.w_grid, blk_ids, axis=0)    # (p, db)
         gw_owned = jnp.take(st.gw_grid, blk_ids, axis=0)
 
-        def per_q(blk_id, w_blk, gw_blk, a_q, ga_q, X_q, y_q, rn_q):
-            return _inner_iteration(meta, data, blk_id * db, w_blk, gw_blk,
-                                    a_q, ga_q, X_q, y_q, rn_q, eta_t,
-                                    row_batches, impl)
+        def per_q(blk_id, w_blk, gw_blk, a_q, ga_q, X_q, y_q, rn_q,
+                  tcn_q, trn_q):
+            return _inner_iteration(meta, data.col_nnz, blk_id, w_blk,
+                                    gw_blk, a_q, ga_q, X_q, y_q, rn_q,
+                                    tcn_q, trn_q, eta_t, row_batches, impl)
 
         w_new, a_new, gw_new, ga_new = jax.vmap(per_q)(
             blk_ids, w_owned, gw_owned, st.alpha, st.ga, data.Xg, data.yg,
-            data.row_nnz_g)
+            data.row_nnz_g, data.tile_col_nnz_g, data.tile_row_nnz_g)
         w_grid = st.w_grid.at[blk_ids].set(w_new)
         gw_grid = st.gw_grid.at[blk_ids].set(gw_new)
         return DSOState(w_grid, gw_grid, a_new, ga_new, st.epoch)
 
     state = jax.lax.fori_loop(0, p, inner, state)
     return state._replace(epoch=state.epoch + 1)
+
+
+@functools.partial(jax.jit, static_argnames=("loss_name", "reg_name",
+                                             "use_adagrad", "row_batches",
+                                             "p", "db", "impl"))
+def _grid_epoch(data: GridData, state: DSOState, eta_t, lam, m, w_lo, w_hi,
+                *, loss_name, reg_name, use_adagrad, row_batches, p, db,
+                impl="jnp"):
+    """One epoch, one dispatch (legacy path; see ``_grid_epochs``)."""
+    return _epoch_body(data, state, eta_t, lam, m, w_lo, w_hi,
+                       loss_name=loss_name, reg_name=reg_name,
+                       use_adagrad=use_adagrad, row_batches=row_batches,
+                       p=p, db=db, impl=impl)
+
+
+@functools.partial(jax.jit, static_argnames=("loss_name", "reg_name",
+                                             "use_adagrad", "row_batches",
+                                             "p", "db", "impl"),
+                   donate_argnums=(1,))
+def _grid_epochs(data: GridData, state: DSOState, etas, lam, m, w_lo, w_hi,
+                 *, loss_name, reg_name, use_adagrad, row_batches, p, db,
+                 impl="jnp"):
+    """``len(etas)`` epochs in ONE dispatch: a ``lax.scan`` over epochs with
+    the (w, alpha, gw, ga) state donated, so epoch state is updated in place
+    instead of round-tripping host dispatch (and copies) per epoch."""
+
+    def step(st, eta_t):
+        st = _epoch_body(data, st, eta_t, lam, m, w_lo, w_hi,
+                         loss_name=loss_name, reg_name=reg_name,
+                         use_adagrad=use_adagrad, row_batches=row_batches,
+                         p=p, db=db, impl=impl)
+        return st, None
+
+    state, _ = jax.lax.scan(step, state, etas)
+    return state
 
 
 def gather_w(state: DSOState, d: int) -> Array:
@@ -317,29 +398,54 @@ def gather_alpha(state: DSOState, m: int) -> Array:
     return state.alpha.reshape(-1)[:m]
 
 
+def _eta_schedule(eta0: float, t0: int, n: int, use_adagrad: bool):
+    """Per-epoch step sizes for epochs t0+1 .. t0+n (1/sqrt(t) when the
+    AdaGrad scaling is off — Theorem 1's schedule)."""
+    return jnp.asarray([eta0 if use_adagrad else eta0 / np.sqrt(t)
+                        for t in range(t0 + 1, t0 + n + 1)], jnp.float32)
+
+
 def run_dso_grid(prob: Problem, p: int = 4, epochs: int = 10,
                  eta0: float = 0.1, use_adagrad: bool = True,
                  row_batches: int = 1, alpha0: float = 0.0,
-                 eval_every: int = 1, impl: str = "jnp"):
-    """Single-device simulation of Algorithm 1 with p processors."""
-    data = make_grid_data(prob, p)
+                 eval_every: int = 1, impl: str = "jnp",
+                 scan_epochs: bool = True):
+    """Single-device simulation of Algorithm 1 with p processors.
+
+    ``scan_epochs=True`` (default) runs each evaluation chunk of epochs as
+    one donated ``lax.scan`` dispatch; ``False`` keeps the legacy
+    one-dispatch-per-epoch loop (benchmark baseline). Identical math.
+    Each distinct chunk length traces once, so when ``eval_every`` does not
+    divide ``epochs`` the ragged final chunk costs one extra compile —
+    prefer ``epochs % eval_every == 0`` for long runs.
+    """
+    assert eval_every >= 1, f"eval_every must be >= 1, got {eval_every}"
+    data = make_grid_data(prob, p, row_batches)
     state = init_state(prob, data, alpha0)
     lam, m, loss_name, reg_name, _, w_lo, w_hi = _prob_meta(prob)
+    kw = dict(loss_name=prob.loss_name, reg_name=prob.reg_name,
+              use_adagrad=use_adagrad, row_batches=row_batches, p=p,
+              db=data.db, impl=impl)
     history = []
-    for t in range(1, epochs + 1):
-        eta_t = eta0 if use_adagrad else eta0 / np.sqrt(t)
-        state = _grid_epoch(
-            data, state, jnp.float32(eta_t), lam, m, w_lo, w_hi,
-            loss_name=prob.loss_name, reg_name=prob.reg_name,
-            use_adagrad=use_adagrad, row_batches=row_batches, p=p,
-            db=data.db, impl=impl)
-        if t % eval_every == 0 or t == epochs:
-            w = gather_w(state, prob.d)
-            alpha = gather_alpha(state, prob.m)
-            history.append(dict(
-                epoch=t,
-                primal=float(primal_objective(prob, w)),
-                gap=float(duality_gap(prob, w, alpha)),
-                saddle=float(saddle_objective(prob, w, alpha)),
-            ))
+    t = 0
+    while t < epochs:
+        n = min(eval_every, epochs - t)
+        if scan_epochs:
+            state = _grid_epochs(data, state,
+                                 _eta_schedule(eta0, t, n, use_adagrad),
+                                 lam, m, w_lo, w_hi, **kw)
+        else:
+            for k in range(1, n + 1):
+                eta_t = eta0 if use_adagrad else eta0 / np.sqrt(t + k)
+                state = _grid_epoch(data, state, jnp.float32(eta_t),
+                                    lam, m, w_lo, w_hi, **kw)
+        t += n
+        w = gather_w(state, prob.d)
+        alpha = gather_alpha(state, prob.m)
+        history.append(dict(
+            epoch=t,
+            primal=float(primal_objective(prob, w)),
+            gap=float(duality_gap(prob, w, alpha)),
+            saddle=float(saddle_objective(prob, w, alpha)),
+        ))
     return gather_w(state, prob.d), gather_alpha(state, prob.m), history

@@ -27,7 +27,7 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
-from repro.core.dso import (DSOState, GridData, _inner_iteration, _prob_meta,
+from repro.core.dso import (_eta_schedule, _inner_iteration, _prob_meta,
                             init_state, make_grid_data)
 from repro.core.losses import get_loss
 from repro.core.saddle import Problem, duality_gap, primal_objective
@@ -43,41 +43,51 @@ def make_dso_mesh(p: int | None = None) -> Mesh:
 
 def _epoch_shardmap(mesh: Mesh, p: int, db: int, loss_name: str,
                     reg_name: str, use_adagrad: bool, row_batches: int):
-    """Builds the jitted sharded epoch function for a fixed problem shape."""
+    """Builds the jitted sharded multi-epoch function for a fixed problem
+    shape: ``etas`` (one step size per epoch) drives a ``lax.scan`` over
+    epochs INSIDE the shard_map, and the travelling/resident state
+    (w, gw, alpha, ga) is donated — epoch state updates in place, with no
+    per-epoch host dispatch."""
 
-    def epoch_body(Xq, yq, rnq, col_nnz, w_blk, gw_blk, alpha_q, ga_q,
-                   eta_t, lam, m, w_lo, w_hi):
+    def epochs_body(Xq, yq, rnq, tcnq, trnq, col_nnz, w_blk, gw_blk,
+                    alpha_q, ga_q, etas, lam, m, w_lo, w_hi):
         # Inside shard_map: Xq (1, mb, d), w_blk (1, db), ... per device.
         q = jax.lax.axis_index("dso")
         Xq, yq, rnq = Xq[0], yq[0], rnq[0]
+        tcnq, trnq = tcnq[0], trnq[0]
         w_blk, gw_blk = w_blk[0], gw_blk[0]
         alpha_q, ga_q = alpha_q[0], ga_q[0]
         meta = (lam, m, loss_name, reg_name, use_adagrad, w_lo, w_hi)
-        data = GridData(Xg=None, yg=None, row_nnz_g=None, col_nnz=col_nnz,
-                        row_valid=None, p=p, mb=Xq.shape[0], db=db)
         perm = [(i, (i - 1) % p) for i in range(p)]
 
-        def inner(r, carry):
-            w_blk, gw_blk, alpha_q, ga_q = carry
-            blk_id = (q + r) % p
-            w_blk, alpha_q, gw_blk, ga_q = _inner_iteration(
-                meta, data, blk_id * db, w_blk, gw_blk, alpha_q, ga_q,
-                Xq, yq, rnq, eta_t, row_batches)
-            # bulk synchronization: pass the block to the ring neighbour
-            w_blk, gw_blk = jax.lax.ppermute((w_blk, gw_blk), "dso", perm)
-            return (w_blk, gw_blk, alpha_q, ga_q)
+        def inner_factory(eta_t):
+            def inner(r, carry):
+                w_blk, gw_blk, alpha_q, ga_q = carry
+                blk_id = (q + r) % p
+                w_blk, alpha_q, gw_blk, ga_q = _inner_iteration(
+                    meta, col_nnz, blk_id, w_blk, gw_blk, alpha_q, ga_q,
+                    Xq, yq, rnq, tcnq, trnq, eta_t, row_batches)
+                # bulk synchronization: pass the block to the ring neighbour
+                w_blk, gw_blk = jax.lax.ppermute((w_blk, gw_blk), "dso",
+                                                 perm)
+                return (w_blk, gw_blk, alpha_q, ga_q)
+            return inner
 
-        w_blk, gw_blk, alpha_q, ga_q = jax.lax.fori_loop(
-            0, p, inner, (w_blk, gw_blk, alpha_q, ga_q))
+        def epoch(carry, eta_t):
+            return jax.lax.fori_loop(0, p, inner_factory(eta_t), carry), None
+
+        (w_blk, gw_blk, alpha_q, ga_q), _ = jax.lax.scan(
+            epoch, (w_blk, gw_blk, alpha_q, ga_q), etas)
         return (w_blk[None], gw_blk[None], alpha_q[None], ga_q[None])
 
     sharded = shard_map(
-        epoch_body, mesh=mesh,
-        in_specs=(P("dso"), P("dso"), P("dso"), P(None), P("dso"), P("dso"),
-                  P("dso"), P("dso"), P(), P(), P(), P(), P()),
+        epochs_body, mesh=mesh,
+        in_specs=(P("dso"), P("dso"), P("dso"), P("dso"), P("dso"), P(None),
+                  P("dso"), P("dso"), P("dso"), P("dso"), P(), P(), P(),
+                  P(), P()),
         out_specs=(P("dso"), P("dso"), P("dso"), P("dso")),
     )
-    return jax.jit(sharded)
+    return jax.jit(sharded, donate_argnums=(6, 7, 8, 9))
 
 
 class ShardedDSO:
@@ -89,7 +99,7 @@ class ShardedDSO:
         self.prob = prob
         self.mesh = mesh or make_dso_mesh()
         self.p = self.mesh.devices.size
-        self.data = make_grid_data(prob, self.p)
+        self.data = make_grid_data(prob, self.p, row_batches)
         state = init_state(prob, self.data, alpha0)
         self.use_adagrad = use_adagrad
         (self.lam, self.m_f, _, _, _, self.w_lo, self.w_hi) = _prob_meta(prob)
@@ -99,6 +109,9 @@ class ShardedDSO:
         self.Xg = jax.device_put(self.data.Xg, shard)
         self.yg = jax.device_put(self.data.yg, shard)
         self.rng_ = jax.device_put(self.data.row_nnz_g, shard)
+        # static sparsity statistics, resident next to each row shard
+        self.tcn = jax.device_put(self.data.tile_col_nnz_g, shard)
+        self.trn = jax.device_put(self.data.tile_row_nnz_g, shard)
         self.col_nnz = jax.device_put(self.data.col_nnz, repl)
         # state.w_grid is indexed by block id; device q starts owning block q
         self.w = jax.device_put(state.w_grid, shard)
@@ -106,18 +119,21 @@ class ShardedDSO:
         self.alpha = jax.device_put(state.alpha, shard)
         self.ga = jax.device_put(state.ga, shard)
         self.epochs_done = 0
-        self._epoch_fn = _epoch_shardmap(
+        self._epochs_fn = _epoch_shardmap(
             self.mesh, self.p, self.data.db, prob.loss_name, prob.reg_name,
             use_adagrad, row_batches)
 
-    def epoch(self, eta0: float = 0.1):
-        t = self.epochs_done + 1
-        eta_t = eta0 if self.use_adagrad else eta0 / np.sqrt(t)
-        self.w, self.gw, self.alpha, self.ga = self._epoch_fn(
-            self.Xg, self.yg, self.rng_, self.col_nnz, self.w, self.gw,
-            self.alpha, self.ga, jnp.float32(eta_t), self.lam, self.m_f,
+    def run_epochs(self, n: int, eta0: float = 0.1):
+        """Run ``n`` epochs in one donated-scan dispatch."""
+        etas = _eta_schedule(eta0, self.epochs_done, n, self.use_adagrad)
+        self.w, self.gw, self.alpha, self.ga = self._epochs_fn(
+            self.Xg, self.yg, self.rng_, self.tcn, self.trn, self.col_nnz,
+            self.w, self.gw, self.alpha, self.ga, etas, self.lam, self.m_f,
             self.w_lo, self.w_hi)
-        self.epochs_done = t
+        self.epochs_done += n
+
+    def epoch(self, eta0: float = 0.1):
+        self.run_epochs(1, eta0)
 
     # -- evaluation helpers ------------------------------------------------
     def w_full(self):
@@ -145,10 +161,10 @@ def run_dso_sharded(prob: Problem, epochs: int = 10, eta0: float = 0.1,
                     mesh: Mesh | None = None, row_batches: int = 1,
                     use_adagrad: bool = True, alpha0: float = 0.0,
                     eval_every: int = 1):
+    assert eval_every >= 1, f"eval_every must be >= 1, got {eval_every}"
     opt = ShardedDSO(prob, mesh, row_batches, use_adagrad, alpha0)
     history = []
-    for t in range(1, epochs + 1):
-        opt.epoch(eta0)
-        if t % eval_every == 0 or t == epochs:
-            history.append(opt.metrics())
+    while opt.epochs_done < epochs:
+        opt.run_epochs(min(eval_every, epochs - opt.epochs_done), eta0)
+        history.append(opt.metrics())
     return opt.w_full(), opt.alpha_full(), history

@@ -1,0 +1,1 @@
+"""Distribution helpers: sharding rules shared by train / serve / dry-run."""

@@ -1,0 +1,151 @@
+"""Sharding rules mapping parameter/batch pytrees onto the production mesh.
+
+The rules are *path- and shape-driven*, not per-architecture: every module
+(training, serving, dry-run) derives its shardings from the same three
+entry points so a new architecture gets a sane layout for free.
+
+  * ``param_specs(sds_tree)``      — abstract ``PartitionSpec`` per parameter,
+    assuming the production axis sizes (pod=2, data=16, model=16).
+  * ``param_shardings(mesh, sds)`` — the same rules re-validated against a
+    *concrete* mesh (axes that are absent or do not divide are dropped), each
+    leaf wrapped in a ``NamedSharding``.
+  * ``data_specs`` / ``batch_spec`` — batch pytrees: leading (batch) dim over
+    the data-parallel axes, everything else replicated.
+
+Rules (in order):
+  1. norm scales, 1-D params, and the small SSM/bias leaves (``A_log``, ``D``,
+     ``dt_bias``, ``conv_b``, ``bq``/``bk``/``bv``) are replicated.
+  2. MoE expert stacks (``moe/w_*``: (L, E, d, ff)) shard the expert dim
+     over ``model`` — expert parallelism.
+  3. Any other matrix shards its last 16-divisible dim over ``model``
+     (tensor parallelism: ff / vocab / head projections).
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+# production axis sizes assumed by the abstract rules (launch/mesh.py)
+PROD_AXIS_SIZES = {"pod": 2, "data": 16, "model": 16}
+_MODEL = PROD_AXIS_SIZES["model"]
+
+_REPLICATED_SUFFIXES = ("A_log", "D", "dt_bias", "conv_b", "bq", "bk", "bv",
+                        "scale")
+
+
+def _path_str(path) -> str:
+    """'layers/moe/w_up'-style string from a jax tree path."""
+    parts = []
+    for k in path:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "name"):
+            parts.append(str(k.name))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+        else:
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+def _spec_for(path: str, shape: tuple[int, ...]) -> P:
+    if len(shape) < 2:
+        return P()
+    if "norm" in path or path.endswith(_REPLICATED_SUFFIXES):
+        return P()
+    axes: list = [None] * len(shape)
+    if "moe/w_" in path and len(shape) >= 2 and shape[1] % _MODEL == 0:
+        axes[1] = "model"  # expert parallelism over the (L, E, ...) stack
+        return P(*axes)
+    # tensor parallelism: last dim that divides the model axis
+    for i in range(len(shape) - 1, -1, -1):
+        if shape[i] % _MODEL == 0:
+            axes[i] = "model"
+            return P(*axes)
+    return P()
+
+
+def param_specs(sds_tree):
+    """PartitionSpec tree for a parameter ShapeDtypeStruct tree (abstract:
+    assumes the production axis sizes, no mesh needed)."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(sds_tree)
+    specs = [_spec_for(_path_str(p), tuple(d.shape)) for p, d in flat]
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def _fit_to_mesh(mesh, spec: P, shape: tuple[int, ...]) -> P:
+    """Drop spec axes that the mesh lacks or that do not divide the dim."""
+    fitted = []
+    for dim, ax in zip(shape, tuple(spec) + (None,) * len(shape)):
+        if ax is None:
+            fitted.append(None)
+            continue
+        axes = ax if isinstance(ax, tuple) else (ax,)
+        if all(a in mesh.axis_names for a in axes):
+            n = math.prod(mesh.shape[a] for a in axes)
+            if n > 0 and dim % n == 0:
+                fitted.append(ax)
+                continue
+        fitted.append(None)
+    while fitted and fitted[-1] is None:
+        fitted.pop()
+    return P(*fitted)
+
+
+def param_shardings(mesh, sds_tree):
+    """NamedSharding tree for ``sds_tree`` on a concrete ``mesh``: the
+    abstract rules, re-validated against the mesh's axes and sizes."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(sds_tree)
+    out = []
+    for p, d in flat:
+        spec = _spec_for(_path_str(p), tuple(d.shape))
+        out.append(NamedSharding(mesh, _fit_to_mesh(mesh, spec,
+                                                    tuple(d.shape))))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def _data_axes(mesh, batch: int):
+    """Largest data-parallel axis group whose size divides ``batch``."""
+    for cand in (("pod", "data"), ("data",)):
+        if all(a in mesh.axis_names for a in cand):
+            n = math.prod(mesh.shape[a] for a in cand)
+            if n > 0 and batch % n == 0:
+                return cand
+    return None
+
+
+def batch_spec(mesh, batch: int) -> P:
+    """Spec for a leading batch dimension of size ``batch``."""
+    axes = _data_axes(mesh, batch)
+    return P(axes) if axes is not None else P(None)
+
+
+def data_specs(mesh, batch_shapes: dict) -> dict:
+    """Batch-pytree specs: dim 0 over the data axes, rest replicated."""
+    out = {}
+    for k, sds in batch_shapes.items():
+        shape = tuple(sds.shape)
+        bspec = batch_spec(mesh, shape[0]) if shape else P()
+        out[k] = P(*(tuple(bspec) + (None,) * (len(shape) - 1)))
+    return out
+
+
+def decode_state_specs_tree(mesh, state_sds, global_batch: int):
+    """Decode-cache specs: shard the batch dim (matched by size) over the
+    data axes; everything else replicated. Leaves are PartitionSpecs."""
+    axes = _data_axes(mesh, global_batch)
+
+    def leaf_spec(sds):
+        shape = tuple(sds.shape)
+        parts: list = [None] * len(shape)
+        if axes is not None:
+            for i, dim in enumerate(shape):
+                if dim == global_batch:
+                    parts[i] = axes
+                    break
+        return P(*parts)
+
+    return jax.tree.map(leaf_spec, state_sds)

@@ -30,9 +30,21 @@ def _pad_axis(x, axis: int, mult: int):
 
 def dso_tile_step(X, y, w, alpha, gw, ga, row_nnz, col_nnz, scalars, *,
                   loss_name: str, reg_name: str, bm: int | None = None,
-                  bd: int | None = None, interpret: bool | None = None):
-    """Padded wrapper around kernels/dso_update.py. Same contract, any M, D."""
+                  bd: int | None = None, interpret: bool | None = None,
+                  tile_row_nnz=None, tile_col_nnz=None, twopass: bool = False):
+    """Padded wrapper around kernels/dso_update.py. Same contract, any M, D.
+
+    ``tile_row_nnz``/``tile_col_nnz`` are the per-row/per-column nonzero
+    counts of X (static sparsity statistics); pass precomputed values to
+    keep them off the per-step path, else they are derived here (once,
+    outside the kernel). ``twopass=True`` selects the legacy two-kernel
+    path (X read twice) for regression/benchmark comparison.
+    """
     interpret = (not _on_tpu()) if interpret is None else interpret
+    assert not (twopass and (tile_row_nnz is not None
+                             or tile_col_nnz is not None)), \
+        "the two-pass path derives tile counts in-kernel; stats would be " \
+        "silently ignored"
     M, D = X.shape
     bm = bm or min(dso_update.DEFAULT_BM, max(8, M))
     bd = bd or min(dso_update.DEFAULT_BD, max(128, D))
@@ -46,11 +58,113 @@ def dso_tile_step(X, y, w, alpha, gw, ga, row_nnz, col_nnz, scalars, *,
     gwp, _ = _pad_axis(gw, 0, bd)
     ap, _ = _pad_axis(alpha, 0, bm)
     gap, _ = _pad_axis(ga, 0, bm)
+    if twopass:
+        w2, a2, gw2, ga2 = dso_update.dso_tile_step_pallas_twopass(
+            Xp, yp, wp, ap, gwp, gap, rnp, cnp, scalars,
+            loss_name=loss_name, reg_name=reg_name, bm=bm, bd=bd,
+            interpret=interpret)
+        return w2[:D], a2[:M], gw2[:D], ga2[:M]
+    if tile_row_nnz is None:
+        tile_row_nnz = (X != 0).astype(jnp.float32).sum(axis=1)
+    if tile_col_nnz is None:
+        tile_col_nnz = (X != 0).astype(jnp.float32).sum(axis=0)
+    # padded rows/cols have zero tile counts -> their updates are no-ops
+    trnp, _ = _pad_axis(tile_row_nnz.astype(jnp.float32), 0, bm)
+    tcnp, _ = _pad_axis(tile_col_nnz.astype(jnp.float32), 0, bd)
     w2, a2, gw2, ga2 = dso_update.dso_tile_step_pallas(
         Xp, yp, wp, ap, gwp, gap, rnp, cnp, scalars,
         loss_name=loss_name, reg_name=reg_name, bm=bm, bd=bd,
-        interpret=interpret)
+        interpret=interpret, tile_row_nnz=trnp, tile_col_nnz=tcnp)
     return w2[:D], a2[:M], gw2[:D], ga2[:M]
+
+
+# largest X block a single block-kernel launch may keep resident in VMEM
+# (conservative slice of the ~16 MB budget; scratch needs room too)
+_SINGLE_LAUNCH_BYTES = 4 << 20
+
+
+def dso_block_step(X, y, w, alpha, gw, ga, tile_row_nnz, tile_col_nnz,
+                   row_nnz, col_nnz, scalars, *, row_batches: int,
+                   loss_name: str, reg_name: str, bd: int | None = None,
+                   interpret: bool | None = None, force_scan: bool = False):
+    """All ``row_batches`` sequential tile steps of an active block.
+
+    Matches the semantics of scanning ``core.dso.block_tile_step`` over
+    ``row_batches`` row tiles of ``M // row_batches`` rows each: trailing
+    rows beyond ``row_batches * (M // row_batches)`` are left untouched
+    (exactly like the sub-scan's truncation). ``tile_col_nnz`` has shape
+    (row_batches, D); ``tile_row_nnz`` (M,).
+
+    Fast path: ONE ``dso_block_step_pallas`` launch covering the whole
+    block. Its row-tile height bm = M // row_batches is not padded
+    (padding would move rows across sequential-update boundaries), so on a
+    real TPU (interpret=False) the fast path requires bm sublane-aligned
+    (bm % 8 == 0) and the (bm, bd) X block within the VMEM budget; other
+    shapes fall back to a ``lax.scan`` of the fused ``dso_tile_step``
+    kernel per row batch — still one X read per tile step, just one
+    launch per batch. ``force_scan`` selects the fallback explicitly
+    (used by tests to exercise it in interpret mode).
+    """
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    M, D = X.shape
+    bd = bd or min(dso_update.DEFAULT_BD, max(128, D))
+    rb = M // row_batches
+    Mk = rb * row_batches
+    # VMEM for a single launch: the (rb, bd) X block plus the kernel's
+    # (n_dt, bd) x2 travelling w-state scratch (8 bytes per padded column)
+    Dp = -(-D // bd) * bd
+    single_launch = not force_scan and (
+        interpret or (rb % 8 == 0
+                      and rb * bd * 4 + 8 * Dp <= _SINGLE_LAUNCH_BYTES))
+
+    if single_launch:
+        Xk = X[:Mk]
+        Xp, _ = _pad_axis(Xk, 1, bd)
+        cnp = jnp.concatenate([col_nnz,
+                               jnp.ones(Xp.shape[1] - D, col_nnz.dtype)])
+        wp, _ = _pad_axis(w, 0, bd)
+        gwp, _ = _pad_axis(gw, 0, bd)
+        tcnp, _ = _pad_axis(tile_col_nnz.astype(jnp.float32), 1, bd)
+        w2, a2, gw2, ga2 = dso_update.dso_block_step_pallas(
+            Xp, y[:Mk], wp, alpha[:Mk], gwp, ga[:Mk],
+            tile_row_nnz[:Mk].astype(jnp.float32), tcnp, row_nnz[:Mk], cnp,
+            scalars, row_batches=row_batches, loss_name=loss_name,
+            reg_name=reg_name, bd=bd, interpret=interpret)
+    else:
+        # fallback: fused tile-step kernel per row batch (it pads and
+        # row-tiles internally, so any rb works on TPU). Mirrors the jnp
+        # sub-scan in core/dso._inner_iteration — that path is the
+        # reference these sequencing/truncation semantics must match
+        # (pinned by test_block_step_scan_fallback_matches_single_launch)
+        trn = tile_row_nnz.astype(jnp.float32)
+        tcn = tile_col_nnz.astype(jnp.float32)
+
+        def sub(carry, s):
+            w_c, a_c, gw_c, ga_c = carry
+            sl = s * rb
+            Xt = jax.lax.dynamic_slice(X, (sl, 0), (rb, D))
+            yt = jax.lax.dynamic_slice(y, (sl,), (rb,))
+            at = jax.lax.dynamic_slice(a_c, (sl,), (rb,))
+            gat = jax.lax.dynamic_slice(ga_c, (sl,), (rb,))
+            rnt = jax.lax.dynamic_slice(row_nnz, (sl,), (rb,))
+            trnt = jax.lax.dynamic_slice(trn, (sl,), (rb,))
+            tcnt = jax.lax.dynamic_slice(tcn, (s, 0), (1, D))[0]
+            w_c, at, gw_c, gat = dso_tile_step(
+                Xt, yt, w_c, at, gw_c, gat, rnt, col_nnz, scalars,
+                loss_name=loss_name, reg_name=reg_name, bd=bd,
+                interpret=interpret, tile_row_nnz=trnt, tile_col_nnz=tcnt)
+            a_c = jax.lax.dynamic_update_slice(a_c, at, (sl,))
+            ga_c = jax.lax.dynamic_update_slice(ga_c, gat, (sl,))
+            return (w_c, a_c, gw_c, ga_c), None
+
+        (w2, a2, gw2, ga2), _ = jax.lax.scan(
+            sub, (w, alpha, gw, ga), jnp.arange(row_batches))
+        return w2, a2, gw2, ga2
+
+    if Mk < M:  # truncated trailing rows pass through unchanged
+        a2 = jnp.concatenate([a2, alpha[Mk:]])
+        ga2 = jnp.concatenate([ga2, ga[Mk:]])
+    return w2[:D], a2, gw2[:D], ga2
 
 
 def swa_attention(q, k, v, *, window: int, causal: bool = True,

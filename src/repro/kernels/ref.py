@@ -27,6 +27,29 @@ def dso_tile_step_ref(X, y, w, alpha, gw, ga, row_nnz, col_nnz, scalars, *,
     return w_new, a_new, gw_new, ga_new
 
 
+def dso_block_step_ref(X, y, w, alpha, gw, ga, row_nnz, col_nnz, scalars, *,
+                       row_batches: int, loss_name: str, reg_name: str):
+    """Oracle for ``dso_block_step_pallas``: a plain Python scan of the core
+    tile step over ``row_batches`` sequential row tiles (trailing rows
+    beyond ``row_batches * (M // row_batches)`` untouched)."""
+    eta, lam, m, w_lo, w_hi = [scalars[k] for k in range(5)]
+    M = X.shape[0]
+    rb = M // row_batches
+    alpha_new = alpha
+    ga_new = ga
+    for s in range(row_batches):
+        sl = slice(s * rb, (s + 1) * rb)
+        w, a_s, gw, ga_s = block_tile_step(
+            X_tile=X[sl], y_tile=y[sl], w_blk=w, alpha_blk=alpha_new[sl],
+            gw_blk=gw, ga_blk=ga_new[sl], row_nnz_tile=row_nnz[sl],
+            col_nnz_blk=col_nnz, eta_t=eta, lam=lam, m=m,
+            loss_name=loss_name, reg_name=reg_name, use_adagrad=True,
+            w_lo=w_lo, w_hi=w_hi)
+        alpha_new = alpha_new.at[sl].set(a_s)
+        ga_new = ga_new.at[sl].set(ga_s)
+    return w, alpha_new, gw, ga_new
+
+
 def swa_attention_ref(q, k, v, *, window: int, causal: bool = True,
                       q_offset: int = 0):
     """Sliding-window attention oracle.

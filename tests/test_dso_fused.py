@@ -1,0 +1,217 @@
+"""Fused single-pass DSO kernel coverage (interpret mode).
+
+Three equivalences, swept over all loss/reg pairs and ragged shapes:
+
+  1. fused tile step == legacy two-pass kernel (same Jacobi update, the
+     fused one just streams X once; numerically equal to <= 1e-5 — the
+     reduction order of the X^T alpha accumulator differs in low bits),
+  2. fused tile step == pure-jnp oracle (kernels/ref.py),
+  3. fused block step (row_batches folded into the kernel grid, w state in
+     VMEM scratch) == sequential scan of the jnp ``block_tile_step``.
+
+Plus the degenerate cases: an all-zero tile must be a pure no-op on w/gw
+(and only project alpha), and padded rows/cols must never change.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core.dso import block_tile_step
+from repro.kernels import ops
+from repro.kernels.ref import dso_block_step_ref, dso_tile_step_ref
+
+LOSSES = ["hinge", "logistic", "square"]
+REGS = ["l2", "l1"]
+
+
+def _dso_inputs(M, D, density, seed=0):
+    rng = np.random.default_rng(seed)
+    X = (rng.random((M, D)) < density).astype(np.float32)
+    X *= rng.normal(0, 1, (M, D)).astype(np.float32)
+    y = np.where(rng.random(M) < 0.5, 1.0, -1.0).astype(np.float32)
+    w = rng.normal(0, 0.1, D).astype(np.float32)
+    alpha = (y * rng.random(M)).astype(np.float32)
+    gw = np.abs(rng.normal(0, 0.01, D)).astype(np.float32)
+    ga = np.abs(rng.normal(0, 0.01, M)).astype(np.float32)
+    rn = np.maximum((X != 0).sum(1), 1).astype(np.float32)
+    cn = np.maximum((X != 0).sum(0), 1).astype(np.float32)
+    sc = np.array([0.5, 1e-3, M, -31.6, 31.6], np.float32)
+    return tuple(jnp.asarray(a) for a in (X, y, w, alpha, gw, ga, rn, cn, sc))
+
+
+def _tile_stats(X, row_batches):
+    Xn = np.asarray(X)
+    rb = Xn.shape[0] // row_batches
+    trn = (Xn != 0).sum(1).astype(np.float32)
+    tcn = np.stack([(Xn[s * rb:(s + 1) * rb] != 0).sum(0)
+                    for s in range(row_batches)]).astype(np.float32)
+    return jnp.asarray(trn), jnp.asarray(tcn)
+
+
+# ------------------------------------------------- fused tile step (Jacobi) --
+
+
+@pytest.mark.parametrize("loss", LOSSES)
+@pytest.mark.parametrize("reg", REGS)
+def test_fused_matches_twopass_all_pairs(loss, reg):
+    """Acceptance gate: fused == legacy two-kernel path to <= 1e-5 (same
+    math; low-order float32 bits differ with the accumulation order)."""
+    args = _dso_inputs(256, 384, 0.15, seed=11)
+    fused = ops.dso_tile_step(*args, loss_name=loss, reg_name=reg,
+                              bm=128, bd=128, interpret=True)
+    two = ops.dso_tile_step(*args, loss_name=loss, reg_name=reg,
+                            bm=128, bd=128, interpret=True, twopass=True)
+    for name, a, b in zip("w alpha gw ga".split(), fused, two):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=1e-5, err_msg=f"{loss}/{reg} {name}")
+
+
+@pytest.mark.parametrize("M,D,bm,bd", [
+    (256, 512, 256, 512),    # single block
+    (512, 1024, 256, 512),   # multi block both axes
+    (300, 700, 128, 256),    # ragged -> padding path
+    (64, 128, 32, 128),      # small
+])
+def test_fused_matches_ref_shapes(M, D, bm, bd):
+    args = _dso_inputs(M, D, 0.1, seed=M + D)
+    fused = ops.dso_tile_step(*args, loss_name="logistic", reg_name="l2",
+                              bm=bm, bd=bd, interpret=True)
+    ref = dso_tile_step_ref(*args, loss_name="logistic", reg_name="l2")
+    for name, a, b in zip("w alpha gw ga".split(), fused, ref):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=2e-5, atol=2e-6, err_msg=name)
+
+
+def test_fused_precomputed_stats_match_derived():
+    """Passing GridData-style precomputed nnz vectors is identical to the
+    kernel-wrapper deriving them from X."""
+    args = _dso_inputs(128, 256, 0.2, seed=3)
+    trn, tcn = _tile_stats(args[0], 1)
+    derived = ops.dso_tile_step(*args, loss_name="hinge", reg_name="l2",
+                                bm=64, bd=128, interpret=True)
+    given = ops.dso_tile_step(*args, loss_name="hinge", reg_name="l2",
+                              bm=64, bd=128, interpret=True,
+                              tile_row_nnz=trn, tile_col_nnz=tcn[0])
+    for a, b in zip(derived, given):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_fused_all_zero_tile_is_noop():
+    """Degenerate all-zero X: w/gw untouched, alpha only projected (the
+    padded-row/col no-op property the padding path relies on)."""
+    X, y, w, alpha, gw, ga, rn, cn, sc = _dso_inputs(96, 160, 0.2, seed=5)
+    X = jnp.zeros_like(X)
+    rn = jnp.ones_like(rn)   # callers clamp counts of empty rows/cols to 1
+    cn = jnp.ones_like(cn)
+    for loss in LOSSES:
+        w2, a2, gw2, ga2 = ops.dso_tile_step(
+            X, y, w, alpha, gw, ga, rn, cn, sc, loss_name=loss,
+            reg_name="l2", bm=32, bd=128, interpret=True)
+        np.testing.assert_array_equal(np.asarray(w2), np.asarray(w))
+        np.testing.assert_array_equal(np.asarray(gw2), np.asarray(gw))
+        np.testing.assert_array_equal(np.asarray(ga2), np.asarray(ga))
+        # alpha: zero step, then the App. B projection
+        from repro.core.losses import get_loss
+        a_want = get_loss(loss).project_alpha(alpha, y)
+        np.testing.assert_allclose(np.asarray(a2), np.asarray(a_want),
+                                   atol=1e-7)
+
+
+# ------------------------------------- fused block step (sequential tiles) --
+
+
+@pytest.mark.parametrize("loss", LOSSES)
+@pytest.mark.parametrize("reg", REGS)
+def test_block_step_matches_scan_oracle(loss, reg):
+    M, D, rbs = 120, 250, 3
+    X, y, w, alpha, gw, ga, rn, cn, sc = _dso_inputs(M, D, 0.15, seed=7)
+    trn, tcn = _tile_stats(X, rbs)
+    out_k = ops.dso_block_step(X, y, w, alpha, gw, ga, trn, tcn, rn, cn, sc,
+                               row_batches=rbs, loss_name=loss,
+                               reg_name=reg, bd=128, interpret=True)
+    out_r = dso_block_step_ref(X, y, w, alpha, gw, ga, rn, cn, sc,
+                               row_batches=rbs, loss_name=loss, reg_name=reg)
+    for name, a, b in zip("w alpha gw ga".split(), out_k, out_r):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=3e-5, atol=3e-6,
+                                   err_msg=f"{loss}/{reg} {name}")
+
+
+@pytest.mark.parametrize("M,D,rbs", [
+    (128, 96, 1),    # one batch == one Jacobi tile step
+    (128, 96, 4),
+    (130, 300, 4),   # ragged: 2 trailing rows truncated (pass through)
+])
+def test_block_step_shapes_and_truncation(M, D, rbs):
+    X, y, w, alpha, gw, ga, rn, cn, sc = _dso_inputs(M, D, 0.2, seed=M + rbs)
+    trn, tcn = _tile_stats(X, rbs)
+    out_k = ops.dso_block_step(X, y, w, alpha, gw, ga, trn, tcn, rn, cn, sc,
+                               row_batches=rbs, loss_name="square",
+                               reg_name="l1", bd=128, interpret=True)
+    out_r = dso_block_step_ref(X, y, w, alpha, gw, ga, rn, cn, sc,
+                               row_batches=rbs, loss_name="square",
+                               reg_name="l1")
+    for name, a, b in zip("w alpha gw ga".split(), out_k, out_r):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=3e-5, atol=3e-6, err_msg=name)
+    Mk = (M // rbs) * rbs
+    if Mk < M:  # truncated rows untouched
+        np.testing.assert_array_equal(np.asarray(out_k[1])[Mk:],
+                                      np.asarray(alpha)[Mk:])
+
+
+def test_block_step_scan_fallback_matches_single_launch():
+    """The TPU-shape fallback (scan of fused tile steps per row batch) is
+    numerically the same block step as the single-launch kernel."""
+    M, D, rbs = 100, 200, 4   # rb=25: sublane-misaligned on real TPU
+    X, y, w, alpha, gw, ga, rn, cn, sc = _dso_inputs(M, D, 0.2, seed=21)
+    trn, tcn = _tile_stats(X, rbs)
+    kw = dict(row_batches=rbs, loss_name="logistic", reg_name="l2",
+              bd=128, interpret=True)
+    single = ops.dso_block_step(X, y, w, alpha, gw, ga, trn, tcn, rn, cn,
+                                sc, **kw)
+    fallback = ops.dso_block_step(X, y, w, alpha, gw, ga, trn, tcn, rn, cn,
+                                  sc, force_scan=True, **kw)
+    oracle = dso_block_step_ref(X, y, w, alpha, gw, ga, rn, cn, sc,
+                                row_batches=rbs, loss_name="logistic",
+                                reg_name="l2")
+    for name, a, b, c in zip("w alpha gw ga".split(), single, fallback,
+                             oracle):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=3e-5, atol=3e-6, err_msg=name)
+        np.testing.assert_allclose(np.asarray(b), np.asarray(c),
+                                   rtol=3e-5, atol=3e-6, err_msg=name)
+
+
+def test_block_step_single_batch_equals_tile_step():
+    """row_batches=1: the block kernel degenerates to the fused tile step."""
+    args = _dso_inputs(64, 160, 0.2, seed=9)
+    X, y, w, alpha, gw, ga, rn, cn, sc = args
+    trn, tcn = _tile_stats(X, 1)
+    blk = ops.dso_block_step(X, y, w, alpha, gw, ga, trn, tcn, rn, cn, sc,
+                             row_batches=1, loss_name="hinge", reg_name="l2",
+                             bd=128, interpret=True)
+    tile = ops.dso_tile_step(*args, loss_name="hinge", reg_name="l2",
+                             bm=64, bd=128, interpret=True)
+    for name, a, b in zip("w alpha gw ga".split(), blk, tile):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-6, atol=1e-7, err_msg=name)
+
+
+def test_jnp_inner_iteration_matches_pallas_block():
+    """End to end through Algorithm 1: impl='pallas' (one fused launch per
+    active block) == impl='jnp' (sub-scan), with row batching on."""
+    from repro.core.dso import run_dso_grid
+    from repro.data.synthetic import make_classification
+    prob = make_classification(m=120, d=90, density=0.2, loss="hinge",
+                               lam=1e-3, seed=1)
+    w1, a1, h1 = run_dso_grid(prob, p=2, epochs=2, eta0=0.5,
+                              row_batches=3, impl="jnp")
+    w2, a2, h2 = run_dso_grid(prob, p=2, epochs=2, eta0=0.5,
+                              row_batches=3, impl="pallas")
+    np.testing.assert_allclose(np.asarray(w1), np.asarray(w2), rtol=1e-4,
+                               atol=1e-5)
+    np.testing.assert_allclose(np.asarray(a1), np.asarray(a2), rtol=1e-4,
+                               atol=1e-5)
+    assert abs(h1[-1]["gap"] - h2[-1]["gap"]) < 1e-3

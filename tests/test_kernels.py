@@ -5,7 +5,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+# hypothesis is optional: without it the property tests collect as SKIPPED
+from _hypothesis_compat import given, settings, st
 
 from repro.kernels import ops
 from repro.kernels.ref import dso_tile_step_ref, ssd_scan_ref, swa_attention_ref

@@ -13,10 +13,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from jax.sharding import AxisType
 
 from repro.configs.registry import ARCH_IDS, OPTIMIZED_KNOBS, get_config, \
     get_smoke_config
+from repro.launch.mesh import make_host_mesh
 from repro.models import mamba2 as mm
 from repro.models.model import forward, init_params
 
@@ -24,8 +24,8 @@ KEY = jax.random.PRNGKey(0)
 
 
 def _mesh11():
-    return jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(AxisType.Auto, AxisType.Auto))
+    # make_host_mesh handles jax versions without jax.sharding.AxisType
+    return make_host_mesh(1, 1)
 
 
 @pytest.mark.parametrize("arch", [a for a in ARCH_IDS

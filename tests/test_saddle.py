@@ -4,7 +4,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+# hypothesis is optional: without it the property tests collect as SKIPPED
+from _hypothesis_compat import given, settings, st
 
 from repro.core.losses import LOSSES, get_loss
 from repro.core.saddle import (argmin_w, dual_objective, duality_gap,

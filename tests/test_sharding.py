@@ -63,8 +63,8 @@ def test_moe_experts_shard_over_model():
 
 
 def test_batch_spec_fallbacks():
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.launch.mesh import make_host_mesh
+    mesh = make_host_mesh(1, 1)
     spec = shd.batch_spec(mesh, 8)
     assert spec[0] in ("data", ("data",))  # sharded over the data axis
     # B=1 on a 1-element axis still divides evenly
@@ -73,8 +73,8 @@ def test_batch_spec_fallbacks():
 SHARDED_TRAIN = textwrap.dedent("""
     import jax, numpy as np
     import jax.numpy as jnp
-    from jax.sharding import AxisType
     from repro.configs.registry import get_smoke_config
+    from repro.launch.mesh import make_host_mesh
     from repro.training.train import (init_state, make_sharded_train_step,
                                       make_train_step, init_state)
     from repro.training.optimizer import AdamWConfig
@@ -83,8 +83,7 @@ SHARDED_TRAIN = textwrap.dedent("""
 
     cfg = get_smoke_config('granite-3-8b')
     ocfg = AdamWConfig(lr=1e-3, warmup_steps=2, total_steps=10)
-    mesh = jax.make_mesh((2, 2), ('data', 'model'),
-                         axis_types=(AxisType.Auto, AxisType.Auto))
+    mesh = make_host_mesh(2, 2)
     B, T = 4, 32
     import jax.numpy as jnp
     bshapes = {'tokens': jax.ShapeDtypeStruct((B, T), jnp.int32),
