@@ -37,8 +37,30 @@ from repro.core.regularizers import get_regularizer
 from repro.core.saddle import (Problem, duality_gap, primal_objective,
                                project_alpha, saddle_objective)
 from repro.core.schedule import pad_to_multiple
+from repro.sparse.format import (SparseGridData, SPARSE_DENSITY_THRESHOLD,
+                                 density, make_sparse_grid_data)
 
 Array = jax.Array
+
+#: run_dso_grid / ShardedDSO layout-and-kernel selectors: dense jnp tile
+#: steps, dense fused Pallas kernel, sparse (block-ELL) gather tile steps,
+#: the sparse gather Pallas kernel, and density-based automatic choice
+IMPLS = ("jnp", "pallas", "sparse", "sparse_pallas", "auto")
+
+
+def resolve_impl(impl: str, density: float) -> tuple[str, str]:
+    """(layout, kernel) for an ``impl`` selector.
+
+    ``auto`` picks the sparse layout when the problem density is below
+    ``sparse.format.SPARSE_DENSITY_THRESHOLD`` (the paper's datasets are
+    well below it; dense synthetic ones are not).
+    """
+    assert impl in IMPLS, f"unknown impl {impl!r}, expected one of {IMPLS}"
+    if impl == "auto":
+        impl = "sparse" if density < SPARSE_DENSITY_THRESHOLD else "jnp"
+    if impl.startswith("sparse"):
+        return "sparse", ("pallas" if impl == "sparse_pallas" else "jnp")
+    return "dense", impl
 
 
 # =====================================================================
@@ -191,10 +213,17 @@ def make_grid_data(prob: Problem, p: int, row_batches: int = 1) -> GridData:
     )
 
 
-def init_state(prob: Problem, data: GridData, alpha0: float = 0.0) -> DSOState:
+def init_state(prob: Problem, data, alpha0: float = 0.0) -> DSOState:
+    return init_state_data(prob.loss_name, data, alpha0)
+
+
+def init_state_data(loss_name: str, data, alpha0: float = 0.0) -> DSOState:
+    """State init from grid data alone (dense ``GridData`` or sparse
+    ``SparseGridData``) — no ``Problem`` needed, so the out-of-core path
+    can start from an ingested grid directly."""
     p, mb, db = data.p, data.mb, data.db
     alpha = jnp.full((p, mb), alpha0, jnp.float32)
-    alpha = get_loss(prob.loss_name).project_alpha(alpha, data.yg)
+    alpha = get_loss(loss_name).project_alpha(alpha, data.yg)
     alpha = alpha * data.row_valid
     return DSOState(
         w_grid=jnp.zeros((p, db), jnp.float32),
@@ -231,6 +260,17 @@ def block_tile_step(*, X_tile, y_tile, w_blk, alpha_blk, gw_blk, ga_blk,
     g_a = (-loss.dual_grad(alpha_blk, y_tile) * tile_row_nnz
            / (m * row_nnz_tile)
            - (X_tile @ w_blk) / m)
+    # rows with no nonzero in this tile have g_a = 0 automatically
+    # (tile_row_nnz = 0 and the X_tile @ w term vanishes).
+    return _eq8_apply(loss, w_blk, alpha_blk, gw_blk, ga_blk, y_tile,
+                      g_w, g_a, eta_t, use_adagrad, w_lo, w_hi)
+
+
+def _eq8_apply(loss, w_blk, alpha_blk, gw_blk, ga_blk, y_tile, g_w, g_a,
+               eta_t, use_adagrad, w_lo, w_hi):
+    """Shared Eq.-(8) update tail: AdaGrad scaling, step, App. B projection.
+    Used by both the dense and the sparse (gather) tile steps so the two
+    layouts share every op after the mat-vecs."""
     if use_adagrad:
         gw_blk = gw_blk + g_w * g_w
         ga_blk = ga_blk + g_a * g_a
@@ -239,10 +279,45 @@ def block_tile_step(*, X_tile, y_tile, w_blk, alpha_blk, gw_blk, ga_blk,
     else:
         dw, da = eta_t * g_w, eta_t * g_a
     w_blk = jnp.clip(w_blk - dw, w_lo, w_hi)
-    # rows with no nonzero in this tile have g_a = 0 automatically
-    # (tile_row_nnz = 0 and the X_tile @ w term vanishes).
     alpha_blk = loss.project_alpha(alpha_blk + da, y_tile)
     return w_blk, alpha_blk, gw_blk, ga_blk
+
+
+def sparse_tile_step(*, cols, vals, y_tile, w_blk, alpha_blk, gw_blk, ga_blk,
+                     row_nnz_tile, col_nnz_blk, eta_t, lam, m,
+                     loss_name: str, reg_name: str, use_adagrad: bool,
+                     w_lo, w_hi, tile_row_nnz=None, tile_col_nnz=None):
+    """``block_tile_step`` on a packed block-ELL tile (sparse.format).
+
+    ``cols``/``vals`` are (rows, K) with *block-local* column indices, so
+    both Eq.-(8) mat-vecs become nnz-proportional index ops on the
+    travelling w block:
+
+        X w       -> sum_k vals[i, k] * w[cols[i, k]]          (gather)
+        X^T alpha -> scatter-add of vals[i, k] * alpha[i]      (segment sum)
+
+    Padding slots carry val 0 at col 0 — their gather term is exactly 0 and
+    their scatter-add is a no-op, so the result equals the dense tile step
+    up to float32 reduction order.  The tile sparsity statistics default to
+    being derived from ``vals != 0`` (oracle use); runners pass the
+    precomputed ``SparseGridData`` fields.
+    """
+    loss = get_loss(loss_name)
+    reg = get_regularizer(reg_name)
+    if tile_row_nnz is None:
+        tile_row_nnz = (vals != 0).astype(vals.dtype).sum(axis=1)
+    if tile_col_nnz is None:
+        tile_col_nnz = jnp.zeros_like(w_blk).at[cols.reshape(-1)] \
+            .add((vals != 0).astype(vals.dtype).reshape(-1))
+    xw = jnp.sum(vals * jnp.take(w_blk, cols, axis=0), axis=1)
+    xta = jnp.zeros_like(w_blk) \
+        .at[cols.reshape(-1)].add((vals * alpha_blk[:, None]).reshape(-1))
+    g_w = lam * reg.grad(w_blk) * tile_col_nnz / col_nnz_blk - xta / m
+    g_a = (-loss.dual_grad(alpha_blk, y_tile) * tile_row_nnz
+           / (m * row_nnz_tile)
+           - xw / m)
+    return _eq8_apply(loss, w_blk, alpha_blk, gw_blk, ga_blk, y_tile,
+                      g_w, g_a, eta_t, use_adagrad, w_lo, w_hi)
 
 
 def _inner_iteration(prob_meta, col_nnz, blk_id, w_blk, gw_blk,
@@ -302,6 +377,67 @@ def _inner_iteration(prob_meta, col_nnz, blk_id, w_blk, gw_blk,
     return w_blk, alpha_q, gw_blk, ga_q
 
 
+def _inner_iteration_sparse(prob_meta, col_nnz, blk_id, w_blk, gw_blk,
+                            alpha_q, ga_q, cols_q, vals_q, y_q, row_nnz_q,
+                            tcn_q, trn_q, eta_t, row_batches: int,
+                            impl: str = "jnp"):
+    """Sparse-layout ``_inner_iteration``: the processor's row of block-ELL
+    tiles ``cols_q``/``vals_q`` (p, mb, K) replaces the dense ``X_q`` shard;
+    the active tile is selected by ``blk_id`` and its column indices are
+    block-local, so they index the travelling ``w_blk`` directly.
+
+    ``impl='pallas'`` issues one gather-kernel launch covering the whole
+    block (kernels/dso_sparse.py); ``impl='jnp'`` scans the jnp gather tile
+    step over the row batches — both mirror the dense path's sequencing
+    exactly.
+    """
+    assert impl in ("jnp", "pallas"), f"unknown impl {impl!r}"
+    lam, m, loss_name, reg_name, use_adagrad, w_lo, w_hi = prob_meta
+    db = w_blk.shape[0]
+    _, mb, K = cols_q.shape
+    blk_cols = blk_id * db
+    col_nnz_blk = jax.lax.dynamic_slice(col_nnz, (blk_cols,), (db,))
+    cols_blk = jax.lax.dynamic_slice(cols_q, (blk_id, 0, 0), (1, mb, K))[0]
+    vals_blk = jax.lax.dynamic_slice(vals_q, (blk_id, 0, 0), (1, mb, K))[0]
+    trn_blk = jax.lax.dynamic_slice(trn_q, (blk_id, 0), (1, mb))[0]
+    tcn_blk = jax.lax.dynamic_slice(tcn_q, (0, blk_cols), (row_batches, db))
+    rb = mb // row_batches
+
+    if impl == "pallas":
+        from repro.kernels import ops
+        assert use_adagrad, "the sparse kernel implements the AdaGrad step"
+        scalars = jnp.stack([eta_t, lam, m, w_lo, w_hi]).astype(jnp.float32)
+        w_blk, alpha_q, gw_blk, ga_q = ops.dso_sparse_block_step(
+            cols_blk, vals_blk, y_q, w_blk, alpha_q, gw_blk, ga_q, trn_blk,
+            tcn_blk, row_nnz_q, col_nnz_blk, scalars,
+            row_batches=row_batches, loss_name=loss_name, reg_name=reg_name)
+        return w_blk, alpha_q, gw_blk, ga_q
+
+    def sub(carry, s):
+        w_blk, alpha_q, gw_blk, ga_q = carry
+        ct = jax.lax.dynamic_slice(cols_blk, (s * rb, 0), (rb, K))
+        vt = jax.lax.dynamic_slice(vals_blk, (s * rb, 0), (rb, K))
+        yt = jax.lax.dynamic_slice(y_q, (s * rb,), (rb,))
+        at = jax.lax.dynamic_slice(alpha_q, (s * rb,), (rb,))
+        gat = jax.lax.dynamic_slice(ga_q, (s * rb,), (rb,))
+        rnt = jax.lax.dynamic_slice(row_nnz_q, (s * rb,), (rb,))
+        trn_t = jax.lax.dynamic_slice(trn_blk, (s * rb,), (rb,))
+        tcn_t = jax.lax.dynamic_slice(tcn_blk, (s, 0), (1, db))[0]
+        w_blk, at, gw_blk, gat = sparse_tile_step(
+            cols=ct, vals=vt, y_tile=yt, w_blk=w_blk, alpha_blk=at,
+            gw_blk=gw_blk, ga_blk=gat, row_nnz_tile=rnt,
+            col_nnz_blk=col_nnz_blk, eta_t=eta_t, lam=lam, m=m,
+            loss_name=loss_name, reg_name=reg_name, use_adagrad=use_adagrad,
+            w_lo=w_lo, w_hi=w_hi, tile_row_nnz=trn_t, tile_col_nnz=tcn_t)
+        alpha_q = jax.lax.dynamic_update_slice(alpha_q, at, (s * rb,))
+        ga_q = jax.lax.dynamic_update_slice(ga_q, gat, (s * rb,))
+        return (w_blk, alpha_q, gw_blk, ga_q), None
+
+    (w_blk, alpha_q, gw_blk, ga_q), _ = jax.lax.scan(
+        sub, (w_blk, alpha_q, gw_blk, ga_q), jnp.arange(row_batches))
+    return w_blk, alpha_q, gw_blk, ga_q
+
+
 def _prob_meta(prob: Problem):
     loss = get_loss(prob.loss_name)
     box = loss.w_box(prob.lam) if loss.w_box is not None else np.inf
@@ -314,23 +450,30 @@ def _prob_meta(prob: Problem):
 # =====================================================================
 
 
-def check_tile_stats(data: GridData, row_batches: int):
+def check_tile_stats(data, row_batches: int):
     """The stats' tile height must equal the epoch's tile height, or the
     per-tile counts silently describe the wrong row grouping."""
+    sparse = isinstance(data, SparseGridData)
+    builder = "sparse_grid_from_csr" if sparse else "make_grid_data"
     assert data.tile_col_nnz_g is not None, \
-        "GridData lacks tile stats: build it with make_grid_data"
-    mb = data.Xg.shape[1]
+        f"grid data lacks tile stats: build it with {builder}"
+    mb = data.cols_g.shape[2] if sparse else data.Xg.shape[1]
     assert mb // data.tile_col_nnz_g.shape[1] == mb // row_batches, \
-        (f"GridData stats built for a different row grouping: "
-         f"make_grid_data(..., row_batches={row_batches}) required")
+        (f"grid stats built for a different row grouping: "
+         f"{builder}(..., row_batches={row_batches}) required")
 
 
-def _epoch_body(data: GridData, state: DSOState, eta_t, lam, m, w_lo, w_hi,
+def _epoch_body(data, state: DSOState, eta_t, lam, m, w_lo, w_hi,
                 *, loss_name, reg_name, use_adagrad, row_batches, p, db,
                 impl="jnp"):
     check_tile_stats(data, row_batches)
     meta = (lam, m, loss_name, reg_name, use_adagrad, w_lo, w_hi)
     qs = jnp.arange(p)
+    if isinstance(data, SparseGridData):
+        step_fn, data_arrays = _inner_iteration_sparse, (data.cols_g,
+                                                         data.vals_g)
+    else:
+        step_fn, data_arrays = _inner_iteration, (data.Xg,)
 
     def inner(r, st: DSOState) -> DSOState:
         blk_ids = (qs + r) % p                      # sigma(q, r)
@@ -338,15 +481,16 @@ def _epoch_body(data: GridData, state: DSOState, eta_t, lam, m, w_lo, w_hi,
         w_owned = jnp.take(st.w_grid, blk_ids, axis=0)    # (p, db)
         gw_owned = jnp.take(st.gw_grid, blk_ids, axis=0)
 
-        def per_q(blk_id, w_blk, gw_blk, a_q, ga_q, X_q, y_q, rn_q,
-                  tcn_q, trn_q):
-            return _inner_iteration(meta, data.col_nnz, blk_id, w_blk,
-                                    gw_blk, a_q, ga_q, X_q, y_q, rn_q,
-                                    tcn_q, trn_q, eta_t, row_batches, impl)
+        def per_q(blk_id, w_blk, gw_blk, a_q, ga_q, *rest):
+            # rest: the layout's data arrays (X_q | cols_q, vals_q),
+            # then y_q, rn_q, tcn_q, trn_q
+            return step_fn(meta, data.col_nnz, blk_id, w_blk, gw_blk,
+                           a_q, ga_q, *rest, eta_t, row_batches, impl)
 
         w_new, a_new, gw_new, ga_new = jax.vmap(per_q)(
-            blk_ids, w_owned, gw_owned, st.alpha, st.ga, data.Xg, data.yg,
-            data.row_nnz_g, data.tile_col_nnz_g, data.tile_row_nnz_g)
+            blk_ids, w_owned, gw_owned, st.alpha, st.ga, *data_arrays,
+            data.yg, data.row_nnz_g, data.tile_col_nnz_g,
+            data.tile_row_nnz_g)
         w_grid = st.w_grid.at[blk_ids].set(w_new)
         gw_grid = st.gw_grid.at[blk_ids].set(gw_new)
         return DSOState(w_grid, gw_grid, a_new, ga_new, st.epoch)
@@ -412,6 +556,12 @@ def run_dso_grid(prob: Problem, p: int = 4, epochs: int = 10,
                  scan_epochs: bool = True):
     """Single-device simulation of Algorithm 1 with p processors.
 
+    ``impl`` selects layout and kernel (see ``IMPLS``): dense ``"jnp"`` /
+    ``"pallas"``, nnz-proportional ``"sparse"`` / ``"sparse_pallas"``
+    (block-ELL tiles + gather tile steps, same trajectory to float32
+    reduction order), or ``"auto"`` picking the sparse layout below the
+    density threshold.
+
     ``scan_epochs=True`` (default) runs each evaluation chunk of epochs as
     one donated ``lax.scan`` dispatch; ``False`` keeps the legacy
     one-dispatch-per-epoch loop (benchmark baseline). Identical math.
@@ -420,12 +570,14 @@ def run_dso_grid(prob: Problem, p: int = 4, epochs: int = 10,
     prefer ``epochs % eval_every == 0`` for long runs.
     """
     assert eval_every >= 1, f"eval_every must be >= 1, got {eval_every}"
-    data = make_grid_data(prob, p, row_batches)
+    layout, kernel = resolve_impl(impl, density(prob))
+    data = (make_sparse_grid_data(prob, p, row_batches)
+            if layout == "sparse" else make_grid_data(prob, p, row_batches))
     state = init_state(prob, data, alpha0)
     lam, m, loss_name, reg_name, _, w_lo, w_hi = _prob_meta(prob)
     kw = dict(loss_name=prob.loss_name, reg_name=prob.reg_name,
               use_adagrad=use_adagrad, row_batches=row_batches, p=p,
-              db=data.db, impl=impl)
+              db=data.db, impl=kernel)
     history = []
     t = 0
     while t < epochs:
@@ -449,3 +601,35 @@ def run_dso_grid(prob: Problem, p: int = 4, epochs: int = 10,
             saddle=float(saddle_objective(prob, w, alpha)),
         ))
     return gather_w(state, prob.d), gather_alpha(state, prob.m), history
+
+
+def run_dso_grid_from_data(data, *, loss_name: str, reg_name: str,
+                           lam: float, m: int, d: int, epochs: int = 10,
+                           eta0: float = 0.1, use_adagrad: bool = True,
+                           row_batches: int = 1, alpha0: float = 0.0,
+                           impl: str = "jnp"):
+    """Algorithm 1 on pre-built grid data — the out-of-core entry point.
+
+    Takes dense ``GridData`` or sparse ``SparseGridData`` directly (e.g.
+    from ``sparse.ingest.ingest_libsvm`` + ``sparse_grid_from_csr``), so no
+    dense ``Problem`` — and no (m, d) dense matrix — ever exists.  ``m``/
+    ``d`` are the real (unpadded) problem sizes; ``impl`` is the *kernel*
+    ("jnp"/"pallas"), the layout being fixed by the data's type.  Returns
+    (w, alpha) — evaluate objectives through ``sparse.ingest.
+    csr_primal_objective`` to stay nnz-proportional.
+    """
+    assert impl in ("jnp", "pallas"), (
+        f"impl={impl!r}: this entry point takes the KERNEL name only — "
+        "the layout is fixed by the data's type (pass SparseGridData for "
+        "the sparse path); the 'sparse'/'auto' selectors belong to "
+        "run_dso_grid, which builds its own grid data")
+    loss = get_loss(loss_name)
+    box = loss.w_box(lam) if loss.w_box is not None else np.inf
+    state = init_state_data(loss_name, data, alpha0)
+    state = _grid_epochs(
+        data, state, _eta_schedule(eta0, 0, epochs, use_adagrad),
+        jnp.float32(lam), jnp.float32(m), jnp.float32(-box),
+        jnp.float32(box), loss_name=loss_name, reg_name=reg_name,
+        use_adagrad=use_adagrad, row_batches=row_batches, p=data.p,
+        db=data.db, impl=impl)
+    return gather_w(state, d), gather_alpha(state, m)

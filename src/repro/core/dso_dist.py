@@ -27,10 +27,12 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
-from repro.core.dso import (_eta_schedule, _inner_iteration, _prob_meta,
-                            init_state, make_grid_data)
+from repro.core.dso import (_eta_schedule, _inner_iteration,
+                            _inner_iteration_sparse, _prob_meta, init_state,
+                            make_grid_data, resolve_impl)
 from repro.core.losses import get_loss
 from repro.core.saddle import Problem, duality_gap, primal_objective
+from repro.sparse.format import density, make_sparse_grid_data
 
 
 def make_dso_mesh(p: int | None = None) -> Mesh:
@@ -42,18 +44,33 @@ def make_dso_mesh(p: int | None = None) -> Mesh:
 
 
 def _epoch_shardmap(mesh: Mesh, p: int, db: int, loss_name: str,
-                    reg_name: str, use_adagrad: bool, row_batches: int):
+                    reg_name: str, use_adagrad: bool, row_batches: int,
+                    sparse: bool = False, impl: str = "jnp"):
     """Builds the jitted sharded multi-epoch function for a fixed problem
     shape: ``etas`` (one step size per epoch) drives a ``lax.scan`` over
     epochs INSIDE the shard_map, and the travelling/resident state
     (w, gw, alpha, ga) is donated — epoch state updates in place, with no
-    per-epoch host dispatch."""
+    per-epoch host dispatch.
 
-    def epochs_body(Xq, yq, rnq, tcnq, trnq, col_nnz, w_blk, gw_blk,
-                    alpha_q, ga_q, etas, lam, m, w_lo, w_hi):
-        # Inside shard_map: Xq (1, mb, d), w_blk (1, db), ... per device.
+    ``sparse=True`` swaps the resident dense X shard for the processor's
+    row of block-ELL tiles (cols/vals, two leading data args instead of
+    one); the ring communication pattern is unchanged — only w travels.
+    """
+
+    def epochs_body(*args):
+        if sparse:
+            (colsq, valsq, yq, rnq, tcnq, trnq, col_nnz, w_blk, gw_blk,
+             alpha_q, ga_q, etas, lam, m, w_lo, w_hi) = args
+            data_args = (colsq[0], valsq[0])   # this proc's (p, mb, K) tiles
+            step_fn = _inner_iteration_sparse
+        else:
+            (Xq, yq, rnq, tcnq, trnq, col_nnz, w_blk, gw_blk,
+             alpha_q, ga_q, etas, lam, m, w_lo, w_hi) = args
+            data_args = (Xq[0],)               # the (mb, d) dense row shard
+            step_fn = _inner_iteration
+        # Inside shard_map: per-device views with a leading axis of 1.
         q = jax.lax.axis_index("dso")
-        Xq, yq, rnq = Xq[0], yq[0], rnq[0]
+        yq, rnq = yq[0], rnq[0]
         tcnq, trnq = tcnq[0], trnq[0]
         w_blk, gw_blk = w_blk[0], gw_blk[0]
         alpha_q, ga_q = alpha_q[0], ga_q[0]
@@ -64,9 +81,10 @@ def _epoch_shardmap(mesh: Mesh, p: int, db: int, loss_name: str,
             def inner(r, carry):
                 w_blk, gw_blk, alpha_q, ga_q = carry
                 blk_id = (q + r) % p
-                w_blk, alpha_q, gw_blk, ga_q = _inner_iteration(
+                w_blk, alpha_q, gw_blk, ga_q = step_fn(
                     meta, col_nnz, blk_id, w_blk, gw_blk, alpha_q, ga_q,
-                    Xq, yq, rnq, tcnq, trnq, eta_t, row_batches)
+                    *data_args, yq, rnq, tcnq, trnq, eta_t, row_batches,
+                    impl)
                 # bulk synchronization: pass the block to the ring neighbour
                 w_blk, gw_blk = jax.lax.ppermute((w_blk, gw_blk), "dso",
                                                  perm)
@@ -80,14 +98,15 @@ def _epoch_shardmap(mesh: Mesh, p: int, db: int, loss_name: str,
             epoch, (w_blk, gw_blk, alpha_q, ga_q), etas)
         return (w_blk[None], gw_blk[None], alpha_q[None], ga_q[None])
 
+    n_data = 2 if sparse else 1   # cols+vals vs the dense X shard
     sharded = shard_map(
         epochs_body, mesh=mesh,
-        in_specs=(P("dso"), P("dso"), P("dso"), P("dso"), P("dso"), P(None),
-                  P("dso"), P("dso"), P("dso"), P("dso"), P(), P(), P(),
-                  P(), P()),
+        in_specs=(P("dso"),) * (n_data + 4) + (P(None),)
+        + (P("dso"),) * 4 + (P(), P(), P(), P(), P()),
         out_specs=(P("dso"), P("dso"), P("dso"), P("dso")),
     )
-    return jax.jit(sharded, donate_argnums=(6, 7, 8, 9))
+    donate = tuple(range(n_data + 5, n_data + 9))   # w, gw, alpha, ga
+    return jax.jit(sharded, donate_argnums=donate)
 
 
 class ShardedDSO:
@@ -95,18 +114,28 @@ class ShardedDSO:
 
     def __init__(self, prob: Problem, mesh: Mesh | None = None,
                  row_batches: int = 1, use_adagrad: bool = True,
-                 alpha0: float = 0.0):
+                 alpha0: float = 0.0, impl: str = "jnp"):
         self.prob = prob
         self.mesh = mesh or make_dso_mesh()
         self.p = self.mesh.devices.size
-        self.data = make_grid_data(prob, self.p, row_batches)
+        layout, kernel = resolve_impl(impl, density(prob))
+        self.sparse = layout == "sparse"
+        self.data = (make_sparse_grid_data(prob, self.p, row_batches)
+                     if self.sparse
+                     else make_grid_data(prob, self.p, row_batches))
         state = init_state(prob, self.data, alpha0)
         self.use_adagrad = use_adagrad
         (self.lam, self.m_f, _, _, _, self.w_lo, self.w_hi) = _prob_meta(prob)
 
         shard = NamedSharding(self.mesh, P("dso"))
         repl = NamedSharding(self.mesh, P(None))
-        self.Xg = jax.device_put(self.data.Xg, shard)
+        if self.sparse:
+            # resident packed tiles: device q holds its (p, mb, K) tile row
+            self._data_shards = (
+                jax.device_put(self.data.cols_g, shard),
+                jax.device_put(self.data.vals_g, shard))
+        else:
+            self._data_shards = (jax.device_put(self.data.Xg, shard),)
         self.yg = jax.device_put(self.data.yg, shard)
         self.rng_ = jax.device_put(self.data.row_nnz_g, shard)
         # static sparsity statistics, resident next to each row shard
@@ -118,18 +147,26 @@ class ShardedDSO:
         self.gw = jax.device_put(state.gw_grid, shard)
         self.alpha = jax.device_put(state.alpha, shard)
         self.ga = jax.device_put(state.ga, shard)
+        # the sharded device_put copies above are now the only live data;
+        # drop the builder's unsharded arrays so resident memory stays one
+        # grid (nnz-proportional on the sparse path), keeping the metadata
+        self.data = self.data._replace(
+            **({"cols_g": None, "vals_g": None} if self.sparse
+               else {"Xg": None}),
+            yg=None, row_nnz_g=None, tile_col_nnz_g=None,
+            tile_row_nnz_g=None)
         self.epochs_done = 0
         self._epochs_fn = _epoch_shardmap(
             self.mesh, self.p, self.data.db, prob.loss_name, prob.reg_name,
-            use_adagrad, row_batches)
+            use_adagrad, row_batches, sparse=self.sparse, impl=kernel)
 
     def run_epochs(self, n: int, eta0: float = 0.1):
         """Run ``n`` epochs in one donated-scan dispatch."""
         etas = _eta_schedule(eta0, self.epochs_done, n, self.use_adagrad)
         self.w, self.gw, self.alpha, self.ga = self._epochs_fn(
-            self.Xg, self.yg, self.rng_, self.tcn, self.trn, self.col_nnz,
-            self.w, self.gw, self.alpha, self.ga, etas, self.lam, self.m_f,
-            self.w_lo, self.w_hi)
+            *self._data_shards, self.yg, self.rng_, self.tcn, self.trn,
+            self.col_nnz, self.w, self.gw, self.alpha, self.ga, etas,
+            self.lam, self.m_f, self.w_lo, self.w_hi)
         self.epochs_done += n
 
     def epoch(self, eta0: float = 0.1):
@@ -160,9 +197,9 @@ class ShardedDSO:
 def run_dso_sharded(prob: Problem, epochs: int = 10, eta0: float = 0.1,
                     mesh: Mesh | None = None, row_batches: int = 1,
                     use_adagrad: bool = True, alpha0: float = 0.0,
-                    eval_every: int = 1):
+                    eval_every: int = 1, impl: str = "jnp"):
     assert eval_every >= 1, f"eval_every must be >= 1, got {eval_every}"
-    opt = ShardedDSO(prob, mesh, row_batches, use_adagrad, alpha0)
+    opt = ShardedDSO(prob, mesh, row_batches, use_adagrad, alpha0, impl)
     history = []
     while opt.epochs_done < epochs:
         opt.run_epochs(min(eval_every, epochs - opt.epochs_done), eta0)

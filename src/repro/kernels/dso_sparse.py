@@ -1,0 +1,152 @@
+"""Gather-based Pallas kernel for the sparse (block-ELL) DSO tile step.
+
+Mirrors the dense ``_fused_block_kernel`` of ``dso_update.py`` on the packed
+tile format of ``repro.sparse.format``: one launch covers the whole active
+block, with the ``row_batches`` sub-scan folded into the kernel grid and the
+travelling w block + its AdaGrad accumulator living in VMEM scratch across
+the launch.  The difference is what streams from HBM: instead of the dense
+(mb, db) X block (4*mb*db bytes), the kernel reads the packed (mb, K)
+column-index + value arrays — 8*mb*K bytes, nnz-proportional (K is the
+padded max row nnz of the tile, sublane-aligned; sparse.format.choose_k).
+
+Data flow per grid step ``mi`` (row tiles = sequential minibatch steps):
+
+    cols (rb, K) i32 ──┐          packed tile: the ONLY HBM matrix read
+    vals (rb, K) f32 ──┤          (8*rb*K bytes vs dense 4*rb*db)
+                       ├─> gather   sum_k vals*w_st[cols]  -> X w    (rb, 1)
+    w_st (1, db) VMEM ─┤               └ dual update of this alpha slice
+                       └─> scatter  add   vals*alpha at cols -> X^T a (1, db)
+    alpha (rb, 1) ─────┘               └ primal update, w_st advances
+
+Both mat-vecs read the *pre-update* (w_st, alpha) of the step — the same
+Jacobi/Lemma-2 form as the dense kernels — so a ``row_batches=1`` launch is
+exactly the fused tile step and the general case equals scanning
+``core.dso.sparse_tile_step`` (which in turn equals the dense
+``block_tile_step`` to float32 reduction order).
+
+The scatter-add (``.at[].add``) and the 2-D gather lower through the Pallas
+interpreter on CPU (this container) and through XLA under ``interpret=True``
+everywhere; on a real TPU Mosaic's scatter support is the gating feature —
+the jnp path (``impl='sparse'``) provides the same nnz-proportional math
+through XLA's native scatter/gather in the meantime.
+
+The per-tile nonzero counts are precomputed (``SparseGridData``) and passed
+in, exactly like the dense kernels.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.dso_update import _dual_update, _primal_update
+
+
+def _sparse_block_kernel(cols_ref, vals_ref, y_ref, w_ref, alpha_ref,
+                         gw_ref, ga_ref, trn_ref, tcn_ref, rn_ref, cn_ref,
+                         scal_ref, w_out_ref, a_out_ref, gw_out_ref,
+                         ga_out_ref, w_st_ref, gw_st_ref,
+                         *, loss_name: str, reg_name: str):
+    """One active block: each grid step is one sequential minibatch step on
+    a packed (rb, K) row tile; the whole block width db sits in VMEM."""
+    mi = pl.program_id(0)   # row tiles = sequential minibatch steps
+
+    @pl.when(mi == 0)
+    def _load_state():
+        w_st_ref[...] = w_ref[...]
+        gw_st_ref[...] = gw_ref[...]
+
+    cols = cols_ref[...]                # (rb, K) int32 — packed tile read
+    vals = vals_ref[...]                # (rb, K), 0.0 in padding slots
+    a = alpha_ref[...]                  # (rb, 1), pre-update
+    w = w_st_ref[...]                   # (1, db), state BEFORE this step
+
+    # dual mat-vec: gather the travelling w at the packed column indices
+    # (padding gathers w[0] * 0 = 0 exactly)
+    xw = jnp.sum(vals * jnp.take(w[0], cols, axis=0), axis=1,
+                 keepdims=True)         # (rb, 1) partial X w
+    a_new, ga_new = _dual_update(
+        loss_name, a, ga_ref[...], y_ref[...], xw, trn_ref[...],
+        rn_ref[...], scal_ref[...])
+    a_out_ref[...] = a_new
+    ga_out_ref[...] = ga_new
+
+    # primal mat-vec: scatter-add vals * alpha into the w-block accumulator
+    # (padding adds 0 at column 0 — a no-op)
+    acc = jnp.zeros_like(w).at[0, cols.reshape(-1)] \
+        .add((vals * a).reshape(-1))    # (1, db) X^T alpha of this tile
+    w_new, gw_new = _primal_update(
+        reg_name, w, gw_st_ref[...], acc, tcn_ref[...], cn_ref[...],
+        scal_ref[...])
+    w_st_ref[...] = w_new
+    gw_st_ref[...] = gw_new
+    w_out_ref[...] = w_new              # last row tile's flush is the result
+    gw_out_ref[...] = gw_new
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("row_batches", "loss_name", "reg_name", "interpret"))
+def dso_sparse_block_step_pallas(cols, vals, y, w, alpha, gw, ga,
+                                 tile_row_nnz, tile_col_nnz, row_nnz,
+                                 col_nnz, scalars, *, row_batches: int,
+                                 loss_name: str, reg_name: str,
+                                 interpret: bool = True):
+    """All ``row_batches`` sequential tile steps of one active block from
+    its packed block-ELL tile.  cols/vals (M, K) with block-local column
+    indices; w/gw/col_nnz (db,); alpha/ga/y/row_nnz/tile_row_nnz (M,);
+    ``tile_col_nnz`` (row_batches, db); scalars = [eta, lam, m, w_lo, w_hi].
+
+    M % row_batches == 0 (the ops wrapper truncates like the dense path).
+    Equivalent to scanning ``core.dso.sparse_tile_step`` over the row tiles.
+    """
+    M, K = cols.shape
+    db = w.shape[0]
+    assert M % row_batches == 0, (M, row_batches)
+    bm = M // row_batches
+    n_mt = row_batches
+
+    import jax.experimental.pallas.tpu as pltpu
+    scratch = [pltpu.VMEM((1, db), jnp.float32),   # travelling w state
+               pltpu.VMEM((1, db), jnp.float32)]   # its AdaGrad acc
+    w2, a2, gw2, ga2 = pl.pallas_call(
+        functools.partial(_sparse_block_kernel, loss_name=loss_name,
+                          reg_name=reg_name),
+        grid=(n_mt,),
+        in_specs=[
+            pl.BlockSpec((bm, K), lambda mi: (mi, 0)),    # cols
+            pl.BlockSpec((bm, K), lambda mi: (mi, 0)),    # vals
+            pl.BlockSpec((bm, 1), lambda mi: (mi, 0)),    # y
+            pl.BlockSpec((1, db), lambda mi: (0, 0)),     # w
+            pl.BlockSpec((bm, 1), lambda mi: (mi, 0)),    # alpha
+            pl.BlockSpec((1, db), lambda mi: (0, 0)),     # gw
+            pl.BlockSpec((bm, 1), lambda mi: (mi, 0)),    # ga
+            pl.BlockSpec((bm, 1), lambda mi: (mi, 0)),    # tile row nnz
+            pl.BlockSpec((1, db), lambda mi: (mi, 0)),    # tile col nnz
+            pl.BlockSpec((bm, 1), lambda mi: (mi, 0)),    # |Omega_i|
+            pl.BlockSpec((1, db), lambda mi: (0, 0)),     # |Omega-bar_j|
+            pl.BlockSpec((1, 5), lambda mi: (0, 0)),      # scalars
+        ],
+        out_specs=[
+            pl.BlockSpec((1, db), lambda mi: (0, 0)),     # w
+            pl.BlockSpec((bm, 1), lambda mi: (mi, 0)),    # alpha
+            pl.BlockSpec((1, db), lambda mi: (0, 0)),     # gw
+            pl.BlockSpec((bm, 1), lambda mi: (mi, 0)),    # ga
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((1, db), jnp.float32),
+            jax.ShapeDtypeStruct((M, 1), jnp.float32),
+            jax.ShapeDtypeStruct((1, db), jnp.float32),
+            jax.ShapeDtypeStruct((M, 1), jnp.float32),
+        ],
+        scratch_shapes=scratch,
+        interpret=interpret,
+    )(cols, vals, y.reshape(M, 1), w.reshape(1, db), alpha.reshape(M, 1),
+      gw.reshape(1, db), ga.reshape(M, 1),
+      tile_row_nnz.reshape(M, 1).astype(jnp.float32),
+      tile_col_nnz.reshape(n_mt, db).astype(jnp.float32),
+      row_nnz.reshape(M, 1), col_nnz.reshape(1, db), scalars.reshape(1, 5))
+    return (w2.reshape(db), a2.reshape(M), gw2.reshape(db), ga2.reshape(M))

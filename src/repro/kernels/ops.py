@@ -167,6 +167,41 @@ def dso_block_step(X, y, w, alpha, gw, ga, tile_row_nnz, tile_col_nnz,
     return w2[:D], a2, gw2[:D], ga2
 
 
+def dso_sparse_block_step(cols, vals, y, w, alpha, gw, ga, tile_row_nnz,
+                          tile_col_nnz, row_nnz, col_nnz, scalars, *,
+                          row_batches: int, loss_name: str, reg_name: str,
+                          interpret: bool | None = None):
+    """Sparse (block-ELL) counterpart of ``dso_block_step``: all
+    ``row_batches`` sequential tile steps of an active block from its
+    packed (M, K) ``cols``/``vals`` tile (kernels/dso_sparse.py).
+
+    Same truncation semantics as the dense path: trailing rows beyond
+    ``row_batches * (M // row_batches)`` pass through unchanged.  The
+    packed tile needs no shape padding — K is already aligned by the
+    tiler (sparse.format.choose_k) and db is whatever the grid uses.
+
+    Unlike the dense wrappers, ``interpret`` defaults to True on EVERY
+    backend: the kernel's scatter-add / 2-D gather do not lower through
+    Mosaic yet (kernels/dso_sparse.py), so compiled mode would be a TPU
+    lowering error, not a fast path.  Pass ``interpret=False`` explicitly
+    once Mosaic scatter lands.
+    """
+    interpret = True if interpret is None else interpret
+    from repro.kernels import dso_sparse
+    M = cols.shape[0]
+    rb = M // row_batches
+    Mk = rb * row_batches
+    w2, a2, gw2, ga2 = dso_sparse.dso_sparse_block_step_pallas(
+        cols[:Mk], vals[:Mk], y[:Mk], w, alpha[:Mk], gw, ga[:Mk],
+        tile_row_nnz[:Mk], tile_col_nnz, row_nnz[:Mk], col_nnz, scalars,
+        row_batches=row_batches, loss_name=loss_name, reg_name=reg_name,
+        interpret=interpret)
+    if Mk < M:  # truncated trailing rows pass through unchanged
+        a2 = jnp.concatenate([a2, alpha[Mk:]])
+        ga2 = jnp.concatenate([ga2, ga[Mk:]])
+    return w2, a2, gw2, ga2
+
+
 def swa_attention(q, k, v, *, window: int, causal: bool = True,
                   q_offset: int = 0, bq: int | None = None,
                   bk: int | None = None, interpret: bool | None = None):

@@ -10,7 +10,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core.dso import block_tile_step
+from repro.core.dso import block_tile_step, sparse_tile_step
 
 _NEG_INF = -1e30
 
@@ -45,6 +45,32 @@ def dso_block_step_ref(X, y, w, alpha, gw, ga, row_nnz, col_nnz, scalars, *,
             col_nnz_blk=col_nnz, eta_t=eta, lam=lam, m=m,
             loss_name=loss_name, reg_name=reg_name, use_adagrad=True,
             w_lo=w_lo, w_hi=w_hi)
+        alpha_new = alpha_new.at[sl].set(a_s)
+        ga_new = ga_new.at[sl].set(ga_s)
+    return w, alpha_new, gw, ga_new
+
+
+def dso_sparse_block_step_ref(cols, vals, y, w, alpha, gw, ga, row_nnz,
+                              col_nnz, scalars, *, row_batches: int,
+                              loss_name: str, reg_name: str):
+    """Oracle for ``dso_sparse_block_step_pallas``: a plain Python scan of
+    the core *sparse* tile step (jnp segment-sum gathers) over
+    ``row_batches`` sequential (rows, K) packed row tiles — the block-ELL
+    mirror of ``dso_block_step_ref``.  Tile sparsity statistics are derived
+    from ``vals != 0`` here (the runners pass precomputed ones)."""
+    eta, lam, m, w_lo, w_hi = [scalars[k] for k in range(5)]
+    M = cols.shape[0]
+    rb = M // row_batches
+    alpha_new = alpha
+    ga_new = ga
+    for s in range(row_batches):
+        sl = slice(s * rb, (s + 1) * rb)
+        w, a_s, gw, ga_s = sparse_tile_step(
+            cols=cols[sl], vals=vals[sl], y_tile=y[sl], w_blk=w,
+            alpha_blk=alpha_new[sl], gw_blk=gw, ga_blk=ga_new[sl],
+            row_nnz_tile=row_nnz[sl], col_nnz_blk=col_nnz, eta_t=eta,
+            lam=lam, m=m, loss_name=loss_name, reg_name=reg_name,
+            use_adagrad=True, w_lo=w_lo, w_hi=w_hi)
         alpha_new = alpha_new.at[sl].set(a_s)
         ga_new = ga_new.at[sl].set(ga_s)
     return w, alpha_new, gw, ga_new

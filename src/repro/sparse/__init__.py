@@ -1,0 +1,27 @@
+"""Block-sparse data subsystem: streaming libsvm ingestion, padded
+block-ELL grid tiles, and the nnz-proportional DSO path.
+
+Layout/format:      ``repro.sparse.format``   (CSRMatrix, SparseTile,
+                                               SparseGridData, tilers)
+Out-of-core ingest: ``repro.sparse.ingest``   (two-pass libsvm -> CSR)
+Pallas kernel:      ``repro.kernels.dso_sparse`` (gather-based tile step)
+Runners:            ``core.dso.run_dso_grid(impl='sparse')`` and
+                    ``core.dso_dist.ShardedDSO(impl='sparse')``.
+"""
+
+from repro.sparse.format import (CSRMatrix, SparseGridData, SparseTile,
+                                 SPARSE_DENSITY_THRESHOLD, choose_k,
+                                 density, grid_nbytes,
+                                 make_sparse_grid_data,
+                                 sparse_grid_from_csr)
+from repro.sparse.ingest import (ScanStats, csr_primal_objective,
+                                 ingest_libsvm, iter_csr_shards,
+                                 scan_libsvm)
+
+__all__ = [
+    "CSRMatrix", "SparseGridData", "SparseTile",
+    "SPARSE_DENSITY_THRESHOLD", "choose_k", "density", "grid_nbytes",
+    "make_sparse_grid_data", "sparse_grid_from_csr",
+    "ScanStats", "csr_primal_objective", "ingest_libsvm",
+    "iter_csr_shards", "scan_libsvm",
+]

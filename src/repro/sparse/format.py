@@ -1,0 +1,331 @@
+"""Block-sparse data layouts for DSO: CSR + padded block-ELL grid tiles.
+
+The paper's entire value proposition is stochastic saddle-point optimization
+over *sparse* data (Table 2's datasets are well under 1% dense), and DSO's
+per-epoch cost is proportional to |Omega| = nnz.  The dense ``GridData``
+layout streams 4*mb*db bytes of X per tile step regardless of density; the
+formats here keep both resident memory and per-step HBM traffic
+nnz-proportional:
+
+``CSRMatrix``
+    Plain compressed-sparse-rows in numpy (indptr/indices/values), the
+    interchange format produced by the streaming libsvm ingester
+    (``repro.sparse.ingest``).  Column indices are ascending within each
+    row, which makes the grid tiler below a pure vectorized pass and keeps
+    sparse accumulation order identical to the dense matmul's (zeros add
+    exactly, so the dense row dot product visits the same nonzeros in the
+    same order).
+
+``SparseTile``
+    One (rows, db) grid tile packed as ELL: ``cols``/``vals`` of shape
+    (rows, K) with per-tile K >= max row nnz.  Padding slots carry
+    ``val = 0`` and ``col = 0`` so gathers contribute exactly zero and
+    scatter-adds are no-ops.  K is padded up to the sublane multiple (8) by
+    default — on TPU the lane (128) dimension is supplied by the row axis,
+    so tiles stay nnz-proportional instead of ballooning to a 128-wide K;
+    ``choose_k(..., pow2=True)`` gives power-of-two K for allocators that
+    want it.
+
+``SparseGridData``
+    The p x p DSO grid in block-ELL: ``cols_g``/``vals_g`` of shape
+    (p, p, mb, K) where ``[q, b]`` is processor q's tile of w-block b with
+    *block-local* column indices (gathers index the travelling w block
+    directly).  K is the max over tiles (uniform so the epoch vmaps over
+    processors); the per-tile K values are kept in ``k_per_tile`` for
+    inspection and the traffic model.  All scaling statistics (row_nnz,
+    col_nnz, per-tile counts) match ``core.dso.make_grid_data`` exactly,
+    so the sparse trajectory equals the dense one.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+
+def pad_to_multiple(n: int, p: int) -> int:
+    # core.schedule.pad_to_multiple, duplicated one-liner: importing any
+    # repro.core module here would close an import cycle (core.dso imports
+    # this module for the SparseGridData dispatch)
+    return ((n + p - 1) // p) * p
+
+SUBLANE = 8    # float32 sublane multiple (second-to-last dim on TPU)
+LANE = 128     # lane multiple (last dim on TPU)
+
+#: below this nnz/(m*d) density the sparse layout wins (ELL padding + index
+#: traffic overhead break even around 1/2 density; 0.1 leaves headroom for
+#: row-nnz skew inflating K)
+SPARSE_DENSITY_THRESHOLD = 0.1
+
+
+def choose_k(max_row_nnz: int, *, align: int = SUBLANE,
+             pow2: bool = False) -> int:
+    """Packed width K for a tile whose densest row has ``max_row_nnz``.
+
+    Rounded up to ``align`` (sublane multiple by default — the lane-aligned
+    128 dimension is the row axis, so K stays nnz-proportional); ``pow2``
+    additionally rounds to the next power of two.
+    """
+    k = max(int(max_row_nnz), 1)
+    k = -(-k // align) * align
+    if pow2:
+        k = 1 << (k - 1).bit_length()
+    return k
+
+
+class CSRMatrix(NamedTuple):
+    """Compressed sparse rows (numpy, host-side interchange format)."""
+
+    indptr: np.ndarray   # (m + 1,) int64
+    indices: np.ndarray  # (nnz,) int32, ascending within each row
+    values: np.ndarray   # (nnz,) float32
+    shape: tuple[int, int]
+
+    @property
+    def m(self) -> int:
+        return self.shape[0]
+
+    @property
+    def d(self) -> int:
+        return self.shape[1]
+
+    @property
+    def nnz(self) -> int:
+        return int(self.indices.shape[0])
+
+    @property
+    def density(self) -> float:
+        return self.nnz / float(max(1, self.m * self.d))
+
+    def row_ids(self) -> np.ndarray:
+        """(nnz,) row index of every stored entry."""
+        return np.repeat(np.arange(self.m, dtype=np.int64),
+                         np.diff(self.indptr))
+
+    def row_nnz(self) -> np.ndarray:
+        return np.diff(self.indptr).astype(np.float32)
+
+    def col_nnz(self) -> np.ndarray:
+        return np.bincount(self.indices, minlength=self.d) \
+            .astype(np.float32)
+
+    def matvec(self, w) -> np.ndarray:
+        """X @ w without densifying."""
+        w = np.asarray(w)
+        contrib = self.values * w[self.indices]
+        return np.bincount(self.row_ids(), weights=contrib,
+                           minlength=self.m).astype(np.float32)
+
+    def rmatvec(self, a) -> np.ndarray:
+        """X.T @ a without densifying."""
+        a = np.asarray(a)
+        contrib = self.values * a[self.row_ids()]
+        return np.bincount(self.indices, weights=contrib,
+                           minlength=self.d).astype(np.float32)
+
+    def toarray(self) -> np.ndarray:
+        """Densify — tests/debugging only, defeats the whole point."""
+        X = np.zeros(self.shape, np.float32)
+        X[self.row_ids(), self.indices] = self.values
+        return X
+
+    @classmethod
+    def from_dense(cls, X) -> "CSRMatrix":
+        X = np.asarray(X)
+        ii, jj = np.nonzero(X)
+        indptr = np.zeros(X.shape[0] + 1, np.int64)
+        np.cumsum(np.bincount(ii, minlength=X.shape[0]), out=indptr[1:])
+        return cls(indptr=indptr, indices=jj.astype(np.int32),
+                   values=X[ii, jj].astype(np.float32), shape=X.shape)
+
+    @classmethod
+    def from_shards(cls, shards, d: int) -> "CSRMatrix":
+        """Concatenate row-shard CSRMatrices (all with ``d`` columns)."""
+        indptr = [np.zeros(1, np.int64)]
+        for s in shards:
+            assert s.d == d, (s.d, d)
+            indptr.append(s.indptr[1:] + indptr[-1][-1])
+        m = sum(len(p) for p in indptr[1:])  # one entry per shard row
+        return cls(indptr=np.concatenate(indptr),
+                   indices=np.concatenate([s.indices for s in shards]),
+                   values=np.concatenate([s.values for s in shards]),
+                   shape=(m, d))
+
+
+class SparseTile(NamedTuple):
+    """One (rows, db) grid tile in padded ELL form."""
+
+    cols: Array     # (rows, K) int32 tile-local column indices, 0 in pads
+    vals: Array     # (rows, K) float32, 0.0 in pads
+    row_nnz: Array  # (rows,) float32 — nnz per row *within this tile*
+    db: int         # tile width (gather target size)
+
+    @property
+    def K(self) -> int:
+        return self.cols.shape[1]
+
+    def toarray(self) -> np.ndarray:
+        dense = np.zeros((self.cols.shape[0], self.db), np.float32)
+        cols = np.asarray(self.cols)
+        vals = np.asarray(self.vals)
+        rows = np.arange(cols.shape[0])[:, None]
+        # pads carry val 0 at col 0 — scatter of 0 is a no-op even when a
+        # real entry lives at column 0
+        np.add.at(dense, (np.broadcast_to(rows, cols.shape), cols), vals)
+        return dense
+
+    @classmethod
+    def from_dense(cls, X_tile, *, k_align: int = SUBLANE,
+                   pow2: bool = False) -> "SparseTile":
+        X_tile = np.asarray(X_tile)
+        rows, db = X_tile.shape
+        ii, jj = np.nonzero(X_tile)
+        rn = np.bincount(ii, minlength=rows)
+        K = choose_k(rn.max() if rows else 0, align=k_align, pow2=pow2)
+        cols = np.zeros((rows, K), np.int32)
+        vals = np.zeros((rows, K), np.float32)
+        starts = np.zeros(rows + 1, np.int64)
+        np.cumsum(rn, out=starts[1:])
+        pos = np.arange(len(ii)) - starts[ii]
+        cols[ii, pos] = jj
+        vals[ii, pos] = X_tile[ii, jj]
+        return cls(cols=jnp.asarray(cols), vals=jnp.asarray(vals),
+                   row_nnz=jnp.asarray(rn.astype(np.float32)), db=db)
+
+
+class SparseGridData(NamedTuple):
+    """Problem data on the p x p DSO grid in block-ELL form.
+
+    Mirrors ``core.dso.GridData`` field-for-field except that the dense
+    ``Xg`` row shards are replaced by packed ``cols_g``/``vals_g`` tiles
+    with block-local column indices.  The scaling statistics are identical
+    to ``make_grid_data``'s, so the sparse trajectory matches the dense one
+    to float32 reduction-order noise.
+    """
+
+    cols_g: Array    # (p, p, mb, K) int32 — [q, b]: proc q's tile of blk b
+    vals_g: Array    # (p, p, mb, K) float32
+    yg: Array        # (p, mb)
+    row_nnz_g: Array  # (p, mb)   |Omega_i|, >= 1
+    col_nnz: Array   # (d_pad,)   |Omega-bar_j|, >= 1
+    row_valid: Array  # (p, mb)  1.0 for real rows, 0.0 padding
+    p: int
+    mb: int          # rows per processor
+    db: int          # cols per block
+    K: int           # uniform packed width (max over tiles)
+    # [q, s, j]: nnz of column j within row batch s of processor q's shard
+    tile_col_nnz_g: Array = None   # (p, row_batches, d_pad)
+    # [q, b, i]: nnz of row i of processor q within block b's columns
+    tile_row_nnz_g: Array = None   # (p, p, mb)
+    # per-tile packed widths before uniform padding (host-side, stats only)
+    k_per_tile: np.ndarray = None  # (p, p) int
+
+
+def density(prob) -> float:
+    """nnz / (m * d) of a ``Problem``."""
+    return float(prob.nnz) / float(max(1, prob.m * prob.d))
+
+
+def sparse_grid_from_csr(csr: CSRMatrix, y, p: int, row_batches: int = 1,
+                         *, k_align: int = SUBLANE,
+                         pow2: bool = False) -> SparseGridData:
+    """Tile a CSR matrix onto the p x p grid without ever densifying.
+
+    One vectorized pass per processor shard: every stored entry's
+    (block, local row, rank-within-row-and-block) address is computed from
+    the CSR stream directly (entries are ascending by (row, col), so the
+    per-(row, block) segments are contiguous) and scattered into the packed
+    arrays.  Cost and memory are O(nnz + p*p*mb*K).
+    """
+    m, d = csr.shape
+    m_pad, d_pad = pad_to_multiple(m, p), pad_to_multiple(d, p)
+    mb, db = m_pad // p, d_pad // p
+    rb = max(1, mb // row_batches)
+    n_rb = mb // rb
+
+    y_pad = np.zeros(m_pad, np.float32)
+    y_pad[:m] = np.asarray(y, np.float32)
+    row_nnz = np.ones(m_pad, np.float32)
+    row_nnz[:m] = np.maximum(csr.row_nnz(), 1.0)
+    col_nnz = np.ones(d_pad, np.float32)
+    col_nnz[:d] = np.maximum(csr.col_nnz(), 1.0)
+    row_valid = np.zeros(m_pad, np.float32)
+    row_valid[:m] = 1.0
+
+    # per-processor packing
+    per_q_cols, per_q_vals = [], []
+    tile_row_nnz = np.zeros((p, p, mb), np.float32)
+    tile_col_nnz = np.zeros((p, n_rb, d_pad), np.float32)
+    k_raw = np.zeros((p, p), np.int64)
+    counts_list, addr_list = [], []
+    for q in range(p):
+        # clamp to m: with heavy padding a whole trailing shard can start
+        # past the last real row, where indptr has no entry
+        r0, r1 = min(q * mb, m), min((q + 1) * mb, m)
+        lo, hi = csr.indptr[r0], csr.indptr[r1]
+        idx = csr.indices[lo:hi].astype(np.int64)
+        local_rows = np.repeat(np.arange(r1 - r0, dtype=np.int64),
+                               np.diff(csr.indptr[r0:r1 + 1])) \
+            if r1 > r0 else np.zeros(0, np.int64)
+        blk = idx // db
+        seg = local_rows * p + blk           # ascending: rows asc, blk asc
+        counts = np.bincount(seg, minlength=mb * p)
+        k_raw[q] = counts.reshape(mb, p).max(axis=0)
+        counts_list.append(counts)
+        addr_list.append((idx, local_rows, blk, seg, lo, hi))
+        tile_row_nnz[q] = counts.reshape(mb, p).T
+        # per-row-batch per-column counts (global column index)
+        if r1 > r0:
+            batch = local_rows // rb
+            keep = batch < n_rb              # trailing truncated rows
+            tc = np.bincount(batch[keep] * d_pad + idx[keep],
+                             minlength=n_rb * d_pad)
+            tile_col_nnz[q] = tc.reshape(n_rb, d_pad)
+
+    K = choose_k(int(k_raw.max()), align=k_align, pow2=pow2)
+    cols_g = np.zeros((p, p, mb, K), np.int32)
+    vals_g = np.zeros((p, p, mb, K), np.float32)
+    for q in range(p):
+        idx, local_rows, blk, seg, lo, hi = addr_list[q]
+        if hi <= lo:
+            continue
+        starts = np.zeros(mb * p + 1, np.int64)
+        np.cumsum(counts_list[q], out=starts[1:])
+        pos = np.arange(len(seg)) - starts[seg]
+        cols_g[q, blk, local_rows, pos] = (idx - blk * db).astype(np.int32)
+        vals_g[q, blk, local_rows, pos] = csr.values[lo:hi]
+
+    return SparseGridData(
+        cols_g=jnp.asarray(cols_g), vals_g=jnp.asarray(vals_g),
+        yg=jnp.asarray(y_pad.reshape(p, mb)),
+        row_nnz_g=jnp.asarray(row_nnz.reshape(p, mb)),
+        col_nnz=jnp.asarray(col_nnz),
+        row_valid=jnp.asarray(row_valid.reshape(p, mb)),
+        p=p, mb=mb, db=db, K=K,
+        tile_col_nnz_g=jnp.asarray(tile_col_nnz),
+        tile_row_nnz_g=jnp.asarray(tile_row_nnz),
+        k_per_tile=k_raw,
+    )
+
+
+def make_sparse_grid_data(prob, p: int, row_batches: int = 1,
+                          **kw) -> SparseGridData:
+    """Sparse-layout equivalent of ``core.dso.make_grid_data`` — built from
+    a dense ``Problem`` (tests / small data).  Out-of-core data should come
+    through ``sparse_grid_from_csr`` on an ingested ``CSRMatrix`` instead.
+    """
+    csr = CSRMatrix.from_dense(np.asarray(prob.X))
+    return sparse_grid_from_csr(csr, np.asarray(prob.y), p, row_batches,
+                                **kw)
+
+
+def grid_nbytes(data: SparseGridData) -> int:
+    """Resident bytes of the packed tile arrays (the nnz-proportional
+    replacement for the dense grid's 4 * m_pad * d_pad).  Computed from
+    shape/dtype — no device-to-host copy."""
+    return int(data.cols_g.nbytes + data.vals_g.nbytes)

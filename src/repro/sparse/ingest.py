@@ -1,0 +1,246 @@
+"""Streaming, two-pass, out-of-core libsvm ingestion.
+
+``data.libsvm.parse_libsvm`` densifies to an (m, d) float32 array — memory
+O(m*d) — which caps it at toy sizes for the paper's datasets (Table 2:
+millions of features at < 1% density).  This module never materializes the
+dense matrix; peak memory is O(nnz + m):
+
+  pass 1  ``scan_libsvm``     — count rows, nnz per row, and the max feature
+                                index (fixing ``n_features`` for every split
+                                of the dataset consistently).
+  pass 2  ``iter_csr_shards`` — re-read the file in bounded row shards,
+                                parsing straight into exact-size CSR arrays.
+
+``ingest_libsvm`` glues the two passes together into one ``CSRMatrix``
+(still O(nnz), no densification); ``sparse.format.sparse_grid_from_csr``
+then tiles the CSR onto the p x p block-ELL grid for the DSO runners.
+
+Labels stay raw by default (regression targets must survive untouched and
+per-shard normalization would be unsound — see ``iter_csr_shards``);
+classification callers opt in with ``ingest_libsvm(...,
+normalize_labels=True)``, which applies ``data.libsvm.
+normalize_binary_labels`` once over the full label vector.
+"""
+
+from __future__ import annotations
+
+import os
+from typing import Iterator, NamedTuple
+
+import numpy as np
+
+from repro.sparse.format import CSRMatrix
+
+
+class ScanStats(NamedTuple):
+    """Pass-1 result: everything needed to preallocate the CSR exactly."""
+
+    n_rows: int
+    n_features: int      # max feature index seen (1-based count)
+    nnz: int
+    row_nnz: np.ndarray  # (n_rows,) int64
+
+
+def _open_lines(source):
+    """Paths open lazily; iterables (tests) pass through."""
+    if isinstance(source, (str, bytes, os.PathLike)):
+        return open(source)
+    return source
+
+
+def _split_line(line: str):
+    """(label_token, feature_tokens) or None for blanks/comments."""
+    line = line.strip()
+    if not line or line.startswith("#"):
+        return None
+    parts = line.split()
+    return parts[0], parts[1:]
+
+
+def scan_libsvm(source, max_rows: int | None = None) -> ScanStats:
+    """Pass 1: counts only — O(m) memory, no indices or values stored."""
+    row_nnz: list[int] = []
+    d = 0
+    f = _open_lines(source)
+    try:
+        for line in f:
+            parsed = _split_line(line)
+            if parsed is None:
+                continue
+            _, toks = parsed
+            k = 0
+            for tok in toks:
+                idx, val = tok.split(":", 1)
+                j = int(idx)
+                d = max(d, j)
+                # explicit zeros are not nonzeros: the dense path's
+                # statistics come from X != 0, and Eq. (8)'s scalings
+                # must agree between the two layouts
+                if float(val) != 0.0:
+                    k += 1
+            row_nnz.append(k)
+            if max_rows is not None and len(row_nnz) >= max_rows:
+                break
+    finally:
+        if hasattr(f, "close") and f is not source:
+            f.close()
+    rn = np.asarray(row_nnz, np.int64)
+    return ScanStats(n_rows=len(row_nnz), n_features=d,
+                     nnz=int(rn.sum()), row_nnz=rn)
+
+
+def iter_csr_shards(source, n_features: int, shard_rows: int = 8192,
+                    max_rows: int | None = None,
+                    ) -> Iterator[tuple[CSRMatrix, np.ndarray]]:
+    """Single streaming pass yielding (CSR shard, *raw* label shard) pairs
+    of at most ``shard_rows`` rows each.  ``n_features`` must be known up
+    front (pass 1, or an explicit dataset-wide value shared by every
+    split); an index beyond it raises ``ValueError``.
+
+    Labels are deliberately NOT normalized here: the {0,1}/{1,2} -> +-1
+    mapping depends on the *full* label set, and a shard that happens to
+    contain one class would pick a different convention than its
+    neighbours, sign-flipping a whole shard.  Normalize once over the
+    assembled vector (``ingest_libsvm`` / ``normalize_binary_labels``).
+    """
+    indptr = [0]
+    indices: list[int] = []
+    values: list[float] = []
+    labels: list[float] = []
+    rows_emitted = 0
+
+    def _flush():
+        nonlocal indptr, indices, values, labels
+        shard = CSRMatrix(
+            indptr=np.asarray(indptr, np.int64),
+            indices=np.asarray(indices, np.int32),
+            values=np.asarray(values, np.float32),
+            shape=(len(labels), n_features))
+        y = np.asarray(labels, np.float32)
+        indptr, indices, values, labels = [0], [], [], []
+        return shard, y
+
+    f = _open_lines(source)
+    try:
+        for line in f:
+            parsed = _split_line(line)
+            if parsed is None:
+                continue
+            lab, toks = parsed
+            labels.append(float(lab))
+            prev_j = -1
+            for tok in toks:
+                idx, val = tok.split(":", 1)
+                j = int(idx) - 1
+                if j < 0:
+                    raise ValueError(
+                        f"feature index {idx} is not 1-based (libsvm "
+                        "indices start at 1)")
+                if j >= n_features:
+                    raise ValueError(
+                        f"feature index {j + 1} exceeds "
+                        f"n_features={n_features}")
+                if j <= prev_j:
+                    raise ValueError(
+                        f"libsvm row has non-ascending feature index "
+                        f"{j + 1} (CSR tiling requires sorted rows)")
+                prev_j = j
+                v = float(val)
+                if v == 0.0:
+                    continue   # explicit zero: not a nonzero (see pass 1)
+                indices.append(j)
+                values.append(v)
+            indptr.append(len(indices))
+            rows_emitted += 1
+            if len(labels) >= shard_rows:
+                yield _flush()
+            if max_rows is not None and rows_emitted >= max_rows:
+                break
+    finally:
+        if hasattr(f, "close") and f is not source:
+            f.close()
+    if labels:
+        yield _flush()
+
+
+def ingest_libsvm(path: str, n_features: int | None = None,
+                  shard_rows: int = 8192, max_rows: int | None = None,
+                  normalize_labels: bool = False,
+                  ) -> tuple[CSRMatrix, np.ndarray]:
+    """Two-pass out-of-core ingest: returns (CSRMatrix, labels).
+
+    Pass 1 fixes the exact allocation (rows, nnz) and, when ``n_features``
+    is not given, the feature dimension; pass 2 streams shards straight
+    into the preallocated CSR arrays.  Peak memory O(nnz + m) — the dense
+    (m, d) matrix is never materialized.
+
+    Labels default to raw (regression / ``loss='square'`` must keep its
+    targets, mirroring ``load_libsvm``); classification callers pass
+    ``normalize_labels=True`` (applied once over the full vector) or call
+    ``normalize_binary_labels(y, strict=True)`` themselves for the loud
+    version.
+    """
+    if not isinstance(path, (str, bytes, os.PathLike)):
+        raise TypeError(
+            "ingest_libsvm makes two passes and needs a re-readable path; "
+            "for an in-memory iterable use scan_libsvm + iter_csr_shards "
+            "(the iterable would be exhausted by pass 1)")
+    stats = scan_libsvm(path, max_rows=max_rows)
+    if n_features is None:
+        n_features = stats.n_features
+    elif stats.n_features > n_features:
+        raise ValueError(
+            f"file has feature index {stats.n_features} > "
+            f"n_features={n_features}")
+
+    indptr = np.zeros(stats.n_rows + 1, np.int64)
+    np.cumsum(stats.row_nnz, out=indptr[1:])
+    indices = np.empty(stats.nnz, np.int32)
+    values = np.empty(stats.nnz, np.float32)
+    y = np.empty(stats.n_rows, np.float32)
+
+    row = 0
+    for shard, ys in iter_csr_shards(path, n_features,
+                                     shard_rows=shard_rows,
+                                     max_rows=max_rows):
+        r, z = shard.m, shard.nnz
+        lo = indptr[row]
+        if row + r > stats.n_rows or z != indptr[row + r] - lo:
+            raise ValueError(
+                "file changed between the two ingest passes (pass-2 shard "
+                f"at row {row} has {z} nonzeros, pass-1 counted "
+                f"{int(indptr[min(row + r, stats.n_rows)] - lo)}); "
+                "re-run on a quiescent file")
+        indices[lo:lo + z] = shard.indices
+        values[lo:lo + z] = shard.values
+        y[row:row + r] = ys
+        row += r
+    if row != stats.n_rows:
+        raise ValueError(
+            f"file changed between the two ingest passes (pass 2 saw "
+            f"{row} rows, pass 1 counted {stats.n_rows})")
+
+    if normalize_labels:
+        # function-local import: data.libsvm imports core.saddle, whose
+        # package pulls core.dso -> sparse.format -> this module — a
+        # module-level import here closes that cycle when data.libsvm is
+        # the entry point
+        from repro.data.libsvm import normalize_binary_labels
+        # strict: the caller asked for +-1 labels (classification), so an
+        # un-normalizable set must fail loudly, matching load_libsvm
+        y = normalize_binary_labels(y, strict=True)
+    csr = CSRMatrix(indptr=indptr, indices=indices, values=values,
+                    shape=(stats.n_rows, n_features))
+    return csr, y
+
+
+def csr_primal_objective(csr: CSRMatrix, y, w, lam: float,
+                         loss: str = "hinge", reg: str = "l2") -> float:
+    """P(w) evaluated through the CSR matvec — no densification."""
+    import jax.numpy as jnp
+    from repro.core.losses import get_loss
+    from repro.core.regularizers import get_regularizer
+    u = jnp.asarray(csr.matvec(w))
+    risk = jnp.mean(get_loss(loss).value(u, jnp.asarray(y)))
+    return float(lam * jnp.sum(get_regularizer(reg).value(jnp.asarray(w)))
+                 + risk)

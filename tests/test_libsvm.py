@@ -1,0 +1,219 @@
+"""libsvm reader/writer contract: round-trips, the explicit ``n_features``
+dimension (train/test splits of one dataset must agree on shape), both
+binary label conventions, and the strict label validation in
+``load_libsvm`` (multiclass data must fail loudly, regression targets must
+pass through untouched)."""
+
+import os
+import tempfile
+
+import numpy as np
+import pytest
+
+from repro.data.libsvm import (dump_libsvm, load_libsvm,
+                               normalize_binary_labels, parse_libsvm)
+from repro.data.synthetic import make_classification, make_regression
+
+
+def _roundtrip(X, y, **load_kw):
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "data.libsvm")
+        dump_libsvm(path, X, y)
+        return load_libsvm(path, **load_kw)
+
+
+# ------------------------------------------------------------ round trips --
+
+
+def test_roundtrip_with_comments_and_empty_rows():
+    lines = [
+        "# header comment",
+        "+1 1:0.5 4:1.25",
+        "",
+        "-1 2:2.0",
+        "# interior comment",
+        "-1",                      # empty row: label only, no features
+        "+1 4:0.1",
+    ]
+    X, y = parse_libsvm(lines)
+    assert X.shape == (4, 4)
+    assert X[0, 0] == 0.5 and X[0, 3] == 1.25 and X[1, 1] == 2.0
+    assert np.all(X[2] == 0.0)     # the empty row parsed, all zeros
+    assert list(y) == [1.0, -1.0, -1.0, 1.0]
+
+
+def test_roundtrip_explicit_n_features_padding():
+    prob = make_classification(m=40, d=25, density=0.2, seed=0)
+    X = np.asarray(prob.X)
+    loaded = _roundtrip(X, np.asarray(prob.y), n_features=64)
+    assert loaded.d == 64          # padded out to the declared dimension
+    np.testing.assert_allclose(np.asarray(loaded.X)[:, :25], X,
+                               rtol=1e-4, atol=1e-5)
+    assert np.all(np.asarray(loaded.X)[:, 25:] == 0.0)
+
+
+def test_n_features_makes_splits_agree():
+    """The original bug: per-file max-index inference gives train/test
+    different widths whenever the top feature is missing from one split."""
+    train = ["+1 1:1.0 9:0.5", "-1 2:1.0"]
+    test = ["-1 3:2.0"]            # max index 3 -> would infer d=3
+    Xtr, _ = parse_libsvm(train, n_features=9)
+    Xte, _ = parse_libsvm(test, n_features=9)
+    assert Xtr.shape[1] == Xte.shape[1] == 9
+    # and without the pin they disagree (the failure mode being fixed)
+    assert parse_libsvm(test)[0].shape[1] == 3
+
+
+def test_n_features_too_small_raises():
+    with pytest.raises(ValueError, match="exceeds n_features"):
+        parse_libsvm(["+1 5:1.0"], n_features=3)
+
+
+def test_zero_based_index_raises_instead_of_wrapping():
+    """A 0-based file must fail loudly — j = -1 would otherwise write
+    feature 0 into the LAST column via numpy negative indexing."""
+    with pytest.raises(ValueError, match="not 1-based"):
+        parse_libsvm(["+1 0:5.0 3:1.0"])
+    from repro.sparse.ingest import iter_csr_shards
+    with pytest.raises(ValueError, match="not 1-based"):
+        list(iter_csr_shards(["+1 0:5.0 3:1.0"], n_features=4))
+
+
+def test_ingest_rejects_non_path_sources():
+    """Two-pass ingest would silently exhaust an iterable in pass 1."""
+    from repro.sparse.ingest import ingest_libsvm
+    with pytest.raises(TypeError, match="re-readable path"):
+        ingest_libsvm(["+1 1:1.0"])
+
+
+def test_ingest_detects_file_changed_between_passes():
+    """Pass-1 counts size the preallocated CSR exactly; a file mutated
+    before pass 2 must fail loudly instead of writing misaligned data."""
+    from repro.sparse import ingest as ing
+    real_scan = ing.scan_libsvm
+
+    def stale_scan(source, max_rows=None):
+        st = real_scan(source, max_rows=max_rows)
+        rn = st.row_nnz.copy()
+        rn[0] += 1                       # pretend row 0 had one more entry
+        return ing.ScanStats(st.n_rows, st.n_features, st.nnz + 1, rn)
+
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "mut.libsvm")
+        with open(path, "w") as f:
+            f.write("+1 1:1.0\n-1 2:2.0\n")
+        ing.scan_libsvm = stale_scan
+        try:
+            with pytest.raises(ValueError, match="changed between"):
+                ing.ingest_libsvm(path)
+        finally:
+            ing.scan_libsvm = real_scan
+
+
+def test_ingest_accepts_pathlib_path():
+    from pathlib import Path
+    from repro.sparse.ingest import ingest_libsvm
+    with tempfile.TemporaryDirectory() as d:
+        p = Path(d) / "x.libsvm"
+        p.write_text("+1 1:1.0 3:0.5\n-1 2:2.0\n")
+        csr, y = ingest_libsvm(p)
+        assert csr.shape == (2, 3) and csr.nnz == 3
+
+
+def test_ingest_skips_explicit_zeros_matching_dense_stats():
+    """'3:0.0' entries must not count as nonzeros: the dense path's
+    Eq.-(8) scalings come from X != 0, and a stored zero would skew
+    row_nnz/col_nnz and split the trajectories."""
+    from repro.sparse.ingest import ingest_libsvm, scan_libsvm
+    lines = "1 1:1.0 3:0.0\n-1 2:2.0 3:1.0\n"
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "z.libsvm")
+        with open(path, "w") as f:
+            f.write(lines)
+        assert scan_libsvm(path).nnz == 3
+        csr, _ = ingest_libsvm(path)
+    assert csr.nnz == 3
+    np.testing.assert_array_equal(csr.row_nnz(), [1.0, 2.0])
+
+
+# ------------------------------------------------------------------ labels --
+
+
+@pytest.mark.parametrize("raw,expect", [
+    ([0.0, 1.0, 0.0], [-1.0, 1.0, -1.0]),     # {0,1} convention
+    ([1.0, 2.0, 2.0], [-1.0, 1.0, 1.0]),      # {1,2} convention
+    ([-1.0, 1.0, -1.0], [-1.0, 1.0, -1.0]),   # already +-1
+])
+def test_label_conventions_normalize(raw, expect):
+    lines = [f"{lab:g} 1:1.0" for lab in raw]
+    _, y = parse_libsvm(lines)
+    assert y.tolist() == expect
+
+
+def test_load_libsvm_multiclass_raises():
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "multi.libsvm")
+        with open(path, "w") as f:
+            f.write("1 1:1.0\n2 2:1.0\n3 1:0.5 2:0.5\n")
+        with pytest.raises(ValueError, match="cannot normalize label set"):
+            load_libsvm(path, loss="hinge")
+        with pytest.raises(ValueError, match="cannot normalize label set"):
+            load_libsvm(path, loss="logistic")
+
+
+def test_load_libsvm_square_keeps_regression_targets():
+    prob = make_regression(m=30, d=20, density=0.3, seed=1)
+    X, y = np.asarray(prob.X), np.asarray(prob.y)
+    loaded = _roundtrip(X, y, loss="square", reg="l1", lam=1e-3)
+    np.testing.assert_allclose(np.asarray(loaded.y), y, rtol=1e-4,
+                               atol=1e-5)
+
+
+def test_normalize_binary_labels_strict_message_names_labels():
+    with pytest.raises(ValueError, match=r"\[1\.0, 2\.0, 3\.0\]"):
+        normalize_binary_labels(np.array([1.0, 2.0, 3.0]), strict=True)
+
+
+def test_normalize_one_class_label_set_is_ambiguous():
+    """{1} fits the {0,1} and {1,2} conventions with opposite signs — a
+    one-class split of a {1,2} dataset must fail loudly under strict."""
+    with pytest.raises(ValueError, match="ambiguous"):
+        normalize_binary_labels(np.array([1.0, 1.0]), strict=True)
+    # non-strict keeps it as already +1 (agrees with {0,1} and +-1 rules)
+    np.testing.assert_array_equal(
+        normalize_binary_labels(np.array([1.0, 1.0])), [1.0, 1.0])
+    # unambiguous singletons still normalize
+    np.testing.assert_array_equal(
+        normalize_binary_labels(np.array([0.0]), strict=True), [-1.0])
+    np.testing.assert_array_equal(
+        normalize_binary_labels(np.array([2.0]), strict=True), [1.0])
+
+
+def test_ingest_labels_stay_raw_per_shard():
+    """Shards must never normalize independently: a one-class shard of a
+    {1,2} file would pick the {0,1} convention and sign-flip itself."""
+    from repro.sparse.ingest import ingest_libsvm, iter_csr_shards
+    lines = ["1 1:1.0", "1 2:1.0", "2 1:0.5"]   # shard 1 = {1,1}, 2 = {2}
+    ys = [y for _, y in iter_csr_shards(lines, n_features=2, shard_rows=2)]
+    np.testing.assert_array_equal(np.concatenate(ys), [1.0, 1.0, 2.0])
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "two.libsvm")
+        with open(path, "w") as f:
+            f.write("\n".join(lines) + "\n")
+        _, y_raw = ingest_libsvm(path, shard_rows=2)
+        np.testing.assert_array_equal(y_raw, [1.0, 1.0, 2.0])
+        _, y_norm = ingest_libsvm(path, shard_rows=2,
+                                  normalize_labels=True)
+        np.testing.assert_array_equal(y_norm, [-1.0, -1.0, 1.0])
+
+
+def test_ingest_normalize_is_strict_on_multiclass():
+    """Asking for +-1 labels on a multiclass file must fail loudly,
+    matching load_libsvm's classification behavior."""
+    from repro.sparse.ingest import ingest_libsvm
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "multi.libsvm")
+        with open(path, "w") as f:
+            f.write("1 1:1.0\n2 2:1.0\n3 1:0.5\n")
+        with pytest.raises(ValueError, match="cannot normalize"):
+            ingest_libsvm(path, normalize_labels=True)
