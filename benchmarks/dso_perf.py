@@ -56,7 +56,8 @@ def _run(fn, epochs, **kw):
     }
 
 
-def bench_epoch_scan_vs_loop(epochs: int = 200, repeats: int = 5):
+def bench_epoch_scan_vs_loop(epochs: int = 200, repeats: int = 5,
+                             sizes=None):
     """Donated-scan epochs vs per-epoch Python dispatch — identical math.
     Data layout, state init, and evaluation are built OUTSIDE the timed
     region so only the dispatch strategy is measured (min over repeats;
@@ -64,33 +65,39 @@ def bench_epoch_scan_vs_loop(epochs: int = 200, repeats: int = 5):
     dispatch-bound size, where the structural win is largest)."""
     import jax
     import jax.numpy as jnp
-    from repro.core.dso import (_eta_schedule, _grid_epoch, _grid_epochs,
-                                _prob_meta, init_state, make_grid_data)
     from repro.data.synthetic import make_classification
+    from repro.engine import (as_tile_data, cyclic_perms, eta_schedule,
+                              init_state, make_grid_data, prob_meta,
+                              run_epoch, run_epochs)
 
     out = {}
-    for tag, m, d in [("m2000_d512", 2000, 512), ("m512_d256", 512, 256),
-                      ("m256_d128", 256, 128)]:
+    for tag, m, d in sizes or [("m2000_d512", 2000, 512),
+                               ("m512_d256", 512, 256),
+                               ("m256_d128", 256, 128)]:
         prob = make_classification(m=m, d=d, density=0.05, loss="hinge",
                                    lam=1e-4, seed=0)
         data = make_grid_data(prob, 4)
+        tile = as_tile_data(data)
         state0 = init_state(prob, data)
-        lam, mf, _, _, _, w_lo, w_hi = _prob_meta(prob)
+        lam, mf, _, _, _, w_lo, w_hi = prob_meta(prob)
         kw = dict(loss_name=prob.loss_name, reg_name=prob.reg_name,
                   use_adagrad=True, row_batches=1, p=4, db=data.db,
-                  impl="jnp")
-        etas = _eta_schedule(0.5, 0, epochs, True)
-        eta1 = jnp.float32(0.5)
+                  backend="dense_jnp")
+        etas = eta_schedule(0.5, 0, epochs, True)
+        perms = cyclic_perms(epochs, 4)
+        perm1, eta1 = perms[0], jnp.float32(0.5)
 
         def scan_run():
             st = jax.tree.map(jnp.copy, state0)  # donated -> fresh copy
             return jax.block_until_ready(
-                _grid_epochs(data, st, etas, lam, mf, w_lo, w_hi, **kw))
+                run_epochs(tile, st, perms, etas, lam, mf, w_lo, w_hi,
+                           **kw))
 
         def loop_run():
             st = state0
             for _ in range(epochs):
-                st = _grid_epoch(data, st, eta1, lam, mf, w_lo, w_hi, **kw)
+                st = run_epoch(tile, st, perm1, eta1, lam, mf, w_lo, w_hi,
+                               **kw)
             return jax.block_until_ready(st)
 
         rec = {}
@@ -137,8 +144,8 @@ def bench_kernel_fused_vs_twopass(M=1024, D=1024, steps=3):
         np.maximum((X != 0).sum(1), 1).astype(np.float32),
         np.maximum((X != 0).sum(0), 1).astype(np.float32),
         np.array([0.5, 1e-3, M, -31.6, 31.6], np.float32)))
-    kw = dict(loss_name="hinge", reg_name="l2", bm=256, bd=512,
-              interpret=True)
+    kw = dict(loss_name="hinge", reg_name="l2", bm=min(256, M),
+              bd=min(512, max(128, D)), interpret=True)
     # production passes precomputed stats (GridData); match it so the fused
     # timing excludes the one-time (X != 0) derivation
     stats = dict(tile_row_nnz=jnp.asarray((X != 0).sum(1).astype(np.float32)),
@@ -156,7 +163,7 @@ def bench_kernel_fused_vs_twopass(M=1024, D=1024, steps=3):
 
     fused, two = timed(False), timed(True)
     return {"note": "CPU interpret mode — trend only, not gated",
-            "tile": [M, D], "block": [256, 512],
+            "tile": [M, D], "block": [kw["bm"], kw["bd"]],
             "fused_s_per_step": fused, "twopass_s_per_step": two,
             "speedup": two / fused}
 
@@ -285,7 +292,29 @@ def main(argv=None):
                     help="also run the slow pointwise-vs-tile comparison")
     ap.add_argument("--sparse", action="store_true",
                     help="also run the dense-vs-sparse traffic comparison")
+    ap.add_argument("--smoke", action="store_true",
+                    help="no-gate dry run at toy sizes: exercises every "
+                         "benchmarked code path (kernel wrappers, donated "
+                         "epoch scan, sparse tiler) so CI catches wrapper "
+                         "rot, but records NOTHING — BENCH_dso.json and the "
+                         "results dir are left untouched and no gate is "
+                         "evaluated")
     args = ap.parse_args(argv)
+
+    if args.smoke:
+        out = {
+            "mode": "smoke — no-gate dry run, nothing written",
+            "epoch_scan_vs_loop": bench_epoch_scan_vs_loop(
+                epochs=2, repeats=1, sizes=[("m64_d32", 64, 32)]),
+            "kernel_fused_vs_twopass": bench_kernel_fused_vs_twopass(
+                M=64, D=64, steps=1),
+            "hbm_roofline": hbm_roofline(),
+            "dso_sparse": bench_sparse_vs_dense(
+                m=256, d=256, density=0.05, p=4, timed_m=64, timed_d=32,
+                epochs=2),
+        }
+        print(json.dumps(out, indent=1))
+        return
 
     out = {
         "epoch_scan_vs_loop": bench_epoch_scan_vs_loop(),

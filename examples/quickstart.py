@@ -7,8 +7,8 @@ import sys, os
 sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(
     os.path.abspath(__file__))), "src"))
 
-from repro.core.dso import run_dso_grid
 from repro.data.synthetic import make_classification
+from repro.engine import solve
 
 
 def main():
@@ -17,8 +17,10 @@ def main():
                                lam=1e-4, seed=0)
     print(f"m={prob.m} d={prob.d} |Omega|={int(prob.nnz)} lam={prob.lam}")
     print("running DSO (4 simulated processors, block-cyclic schedule)...")
-    w, alpha, hist = run_dso_grid(prob, p=4, epochs=30, eta0=0.5,
-                                  eval_every=5)
+    # backend="auto" picks the block-ELL sparse layout at this density;
+    # schedule/backend are pluggable — see repro/engine/__init__.py
+    w, alpha, hist = solve(prob, backend="auto", schedule="cyclic", p=4,
+                           epochs=30, eta0=0.5, eval_every=5)[:3]
     for h in hist:
         print(f"  epoch {h['epoch']:3d}  primal={h['primal']:.5f}  "
               f"duality gap={h['gap']:.5f}")

@@ -1,50 +1,53 @@
 """DSO — Distributed Stochastic Optimization of the saddle objective (Alg. 1).
 
-Three implementations, in increasing order of hardware realism; all share the
-Eq.-(8) update math from ``saddle.py``:
+API-compatibility surface over :mod:`repro.engine` (the layered
+backend/schedule/driver implementation — see ``repro/engine/__init__.py``
+for the architecture diagram).  Three execution modes, in increasing order
+of hardware realism; all share the Eq.-(8) update math from
+``engine.update``:
 
 1. ``run_dso_serial``      — the paper-exact pointwise algorithm: one (i,j)
-   nonzero per update, sequential ``lax.scan``. Ground truth for faithfulness.
+   nonzero per update, sequential ``lax.scan``. Ground truth for
+   faithfulness (``engine.solve_serial``).
 2. ``run_dso_grid``        — a single-device simulator of the p-processor
-   block-cyclic schedule with *tile* (minibatch) updates: every anti-diagonal
-   block of the p x p grid is updated simultaneously, exactly as the p devices
-   would.  This is bit-identical to the ``shard_map`` version in
-   ``dso_dist.py`` and is what the tests compare against.
-3. ``dso_dist.run_dso_sharded`` — the real distributed version: ``shard_map``
-   over a ring mesh axis, ``lax.ppermute`` moving w-shards (the paper's bulk
-   synchronization), one device per processor.
+   block-cyclic schedule with *tile* (minibatch) updates: every
+   anti-diagonal block of the p x p grid is updated simultaneously, exactly
+   as the p devices would (``engine.solve``).  This is bit-identical to the
+   ``shard_map`` version in ``dso_dist.py`` and is what the tests compare
+   against.
+3. ``dso_dist.run_dso_sharded`` — the real distributed version:
+   ``shard_map`` over a ring mesh axis, ``lax.ppermute`` moving w-shards
+   (the paper's bulk synchronization), one device per processor.
 
-TPU adaptation (see DESIGN.md §3): instead of the paper's one-nonzero-at-a-
-time updates (pointer chasing, hostile to the MXU), each inner iteration
-performs ``row_batches`` *tile steps* on the active block — dense mat-vecs
-X_tile^T alpha and X_tile w on the MXU, with the paper's 1/|Omega-bar_j| and
-1/(m |Omega_i|) scalings carried by count vectors.  Block-disjointness (the
-paper's key observation) is unchanged, so the serializability argument of
-Lemma 2 holds at tile granularity.
+``impl`` selects a registered engine backend — the canonical names
+(``engine.registered_backends()``) or the legacy selectors below; unknown
+names raise ``ValueError``.
 """
 
 from __future__ import annotations
 
-import functools
-from typing import NamedTuple
-
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro.core.losses import get_loss
-from repro.core.regularizers import get_regularizer
-from repro.core.saddle import (Problem, duality_gap, primal_objective,
-                               project_alpha, saddle_objective)
-from repro.core.schedule import pad_to_multiple
-from repro.sparse.format import (SparseGridData, SPARSE_DENSITY_THRESHOLD,
-                                 density, make_sparse_grid_data)
-
-Array = jax.Array
+from repro.core.saddle import Problem
+from repro.engine.backends import (LEGACY_IMPLS,  # noqa: F401
+                                   resolve_backend,
+                                   resolve_backend_for_layout)
+# re-exports: the legacy flat-module surface of the layered engine
+from repro.engine.data import (DSOState, GridData, as_tile_data,  # noqa: F401
+                               check_tile_stats, gather_alpha, gather_w,
+                               init_state, init_state_data, make_grid_data,
+                               tile_dims)
+from repro.engine.data import eta_schedule as _eta_schedule  # noqa: F401
+from repro.engine.data import prob_meta as _prob_meta  # noqa: F401
+from repro.engine.driver import (SolveResult, run_epoch,  # noqa: F401
+                                 run_epochs, solve, solve_serial)
+from repro.engine.schedules import cyclic_perms
+from repro.engine.update import (block_tile_step,  # noqa: F401
+                                 sparse_tile_step)
+from repro.engine.update import eq8_apply as _eq8_apply  # noqa: F401
 
 #: run_dso_grid / ShardedDSO layout-and-kernel selectors: dense jnp tile
 #: steps, dense fused Pallas kernel, sparse (block-ELL) gather tile steps,
-#: the sparse gather Pallas kernel, and density-based automatic choice
+#: the sparse gather Pallas kernel, and density-based automatic choice.
+#: Canonical engine backend names are accepted everywhere too.
 IMPLS = ("jnp", "pallas", "sparse", "sparse_pallas", "auto")
 
 
@@ -53,583 +56,108 @@ def resolve_impl(impl: str, density: float) -> tuple[str, str]:
 
     ``auto`` picks the sparse layout when the problem density is below
     ``sparse.format.SPARSE_DENSITY_THRESHOLD`` (the paper's datasets are
-    well below it; dense synthetic ones are not).
+    well below it; dense synthetic ones are not).  Unknown selectors raise
+    ``ValueError`` naming the registered backends.
     """
-    assert impl in IMPLS, f"unknown impl {impl!r}, expected one of {IMPLS}"
-    if impl == "auto":
-        impl = "sparse" if density < SPARSE_DENSITY_THRESHOLD else "jnp"
-    if impl.startswith("sparse"):
-        return "sparse", ("pallas" if impl == "sparse_pallas" else "jnp")
-    return "dense", impl
-
-
-# =====================================================================
-# 1. Paper-exact serial DSO (pointwise Eq. 8 + Algorithm 1 schedule)
-# =====================================================================
-
-
-def _coords(prob: Problem) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
-    Xn = np.asarray(prob.X)
-    ii, jj = np.nonzero(Xn)
-    return ii.astype(np.int32), jj.astype(np.int32), Xn[ii, jj].astype(np.float32)
-
-
-@functools.partial(jax.jit, static_argnames=("loss_name", "reg_name", "m",
-                                             "use_adagrad"))
-def _serial_epoch(ii, jj, vv, perm, w, alpha, gw, ga, y, row_nnz, col_nnz,
-                  eta_t, lam, w_lo, w_hi, *, loss_name, reg_name, m,
-                  use_adagrad):
-    loss = get_loss(loss_name)
-    reg = get_regularizer(reg_name)
-
-    def body(carry, k):
-        w, alpha, gw, ga = carry
-        i, j, x = ii[perm[k]], jj[perm[k]], vv[perm[k]]
-        wj, ai, yi = w[j], alpha[i], y[i]
-        # Eq. (8), simultaneous read of (w_j, alpha_i) — the Lemma 2 form
-        g_w = lam * reg.grad(wj) / col_nnz[j] - ai * x / m
-        g_a = (-loss.dual_grad(ai, yi) / (m * row_nnz[i]) - wj * x / m)
-        if use_adagrad:
-            gw_i = gw[j] + g_w * g_w
-            ga_i = ga[i] + g_a * g_a
-            dw = eta_t * g_w * jax.lax.rsqrt(gw_i + 1e-8)
-            da = eta_t * g_a * jax.lax.rsqrt(ga_i + 1e-8)
-            gw = gw.at[j].set(gw_i)
-            ga = ga.at[i].set(ga_i)
-        else:
-            dw, da = eta_t * g_w, eta_t * g_a
-        # App. B projections, applied to the touched coordinates
-        w = w.at[j].set(jnp.clip(wj - dw, w_lo, w_hi))
-        ai_new = jnp.squeeze(loss.project_alpha(ai + da, yi))
-        alpha = alpha.at[i].set(ai_new)
-        return (w, alpha, gw, ga), None
-
-    (w, alpha, gw, ga), _ = jax.lax.scan(body, (w, alpha, gw, ga),
-                                         jnp.arange(ii.shape[0]))
-    return w, alpha, gw, ga
+    backend = resolve_backend(impl, density)
+    return backend.layout, ("pallas" if "pallas" in backend.name else "jnp")
 
 
 def run_dso_serial(prob: Problem, epochs: int = 10, eta0: float = 0.1,
                    seed: int = 0, use_adagrad: bool = True,
                    alpha0: float = 0.0, eval_every: int = 1):
     """Paper-exact Algorithm 1 with p=1 (sequential pointwise updates)."""
-    ii, jj, vv = _coords(prob)
-    ii, jj, vv = jnp.asarray(ii), jnp.asarray(jj), jnp.asarray(vv)
-    w = jnp.zeros(prob.d, jnp.float32)
-    alpha = project_alpha(prob, jnp.full(prob.m, alpha0, jnp.float32))
-    gw = jnp.zeros_like(w)
-    ga = jnp.zeros_like(alpha)
-    key = jax.random.PRNGKey(seed)
-    history = []
-    loss = get_loss(prob.loss_name)
-    box = loss.w_box(prob.lam) if loss.w_box is not None else np.inf
-    for t in range(1, epochs + 1):
-        key, sk = jax.random.split(key)
-        perm = jax.random.permutation(sk, ii.shape[0])
-        eta_t = eta0 if use_adagrad else eta0 / np.sqrt(t)
-        w, alpha, gw, ga = _serial_epoch(
-            ii, jj, vv, perm, w, alpha, gw, ga, prob.y, prob.row_nnz,
-            prob.col_nnz, jnp.float32(eta_t), jnp.float32(prob.lam),
-            jnp.float32(-box), jnp.float32(box), loss_name=prob.loss_name,
-            reg_name=prob.reg_name, m=prob.m, use_adagrad=use_adagrad)
-        if t % eval_every == 0 or t == epochs:
-            history.append(dict(
-                epoch=t,
-                primal=float(primal_objective(prob, w)),
-                gap=float(duality_gap(prob, w, alpha)),
-                saddle=float(saddle_objective(prob, w, alpha)),
-            ))
-    return w, alpha, history
-
-
-# =====================================================================
-# 2. Grid data layout shared by the simulator and the sharded version
-# =====================================================================
-
-
-class GridData(NamedTuple):
-    """Problem data laid out on the p x p DSO grid (row-major padding).
-
-    The ``tile_*_nnz_g`` fields are the *static sparsity statistics* of the
-    grid: per-tile nonzero counts precomputed once here instead of being
-    re-derived from X with ``(x != 0).sum(...)`` on every tile step of every
-    epoch (they never change — X is immutable during optimization).
-    """
-
-    Xg: Array        # (p, mb, d_pad)  row shard per processor, all columns
-    yg: Array        # (p, mb)
-    row_nnz_g: Array  # (p, mb)   |Omega_i|, >= 1
-    col_nnz: Array   # (d_pad,)   |Omega-bar_j|, >= 1
-    row_valid: Array  # (p, mb)  1.0 for real rows, 0.0 padding
-    p: int
-    mb: int          # rows per processor
-    db: int          # cols per block
-    # [q, s, j]: nnz of column j within row batch s of processor q's shard
-    tile_col_nnz_g: Array = None   # (p, row_batches, d_pad)
-    # [q, b, i]: nnz of row i of processor q within block b's columns
-    tile_row_nnz_g: Array = None   # (p, p, mb)
-
-
-class DSOState(NamedTuple):
-    w_grid: Array    # (p, db)   w block *by block id* (not by owner)
-    gw_grid: Array   # (p, db)   AdaGrad accumulator travelling with the block
-    alpha: Array     # (p, mb)
-    ga: Array        # (p, mb)
-    epoch: Array     # scalar int32
-
-
-def make_grid_data(prob: Problem, p: int, row_batches: int = 1) -> GridData:
-    m_pad, d_pad = pad_to_multiple(prob.m, p), pad_to_multiple(prob.d, p)
-    mb, db = m_pad // p, d_pad // p
-    X = np.zeros((m_pad, d_pad), np.float32)
-    X[: prob.m, : prob.d] = np.asarray(prob.X)
-    y = np.zeros((m_pad,), np.float32)
-    y[: prob.m] = np.asarray(prob.y)
-    row_nnz = np.ones((m_pad,), np.float32)
-    row_nnz[: prob.m] = np.asarray(prob.row_nnz)
-    col_nnz = np.ones((d_pad,), np.float32)
-    col_nnz[: prob.d] = np.asarray(prob.col_nnz)
-    row_valid = np.zeros((m_pad,), np.float32)
-    row_valid[: prob.m] = 1.0
-    # static per-tile sparsity statistics, computed once per run (X never
-    # changes): per-row-batch column counts and per-block row counts
-    Xr = X.reshape(p, mb, d_pad)
-    nz = Xr != 0
-    rb = max(1, mb // row_batches)
-    n_rb = mb // rb
-    tile_col_nnz = nz[:, : n_rb * rb].reshape(p, n_rb, rb, d_pad) \
-        .sum(axis=2).astype(np.float32)
-    tile_row_nnz = nz.reshape(p, mb, p, db).sum(axis=3) \
-        .transpose(0, 2, 1).astype(np.float32)
-    return GridData(
-        Xg=jnp.asarray(Xr),
-        yg=jnp.asarray(y.reshape(p, mb)),
-        row_nnz_g=jnp.asarray(row_nnz.reshape(p, mb)),
-        col_nnz=jnp.asarray(col_nnz),
-        row_valid=jnp.asarray(row_valid.reshape(p, mb)),
-        p=p, mb=mb, db=db,
-        tile_col_nnz_g=jnp.asarray(tile_col_nnz),
-        tile_row_nnz_g=jnp.asarray(tile_row_nnz),
-    )
-
-
-def init_state(prob: Problem, data, alpha0: float = 0.0) -> DSOState:
-    return init_state_data(prob.loss_name, data, alpha0)
-
-
-def init_state_data(loss_name: str, data, alpha0: float = 0.0) -> DSOState:
-    """State init from grid data alone (dense ``GridData`` or sparse
-    ``SparseGridData``) — no ``Problem`` needed, so the out-of-core path
-    can start from an ingested grid directly."""
-    p, mb, db = data.p, data.mb, data.db
-    alpha = jnp.full((p, mb), alpha0, jnp.float32)
-    alpha = get_loss(loss_name).project_alpha(alpha, data.yg)
-    alpha = alpha * data.row_valid
-    return DSOState(
-        w_grid=jnp.zeros((p, db), jnp.float32),
-        gw_grid=jnp.zeros((p, db), jnp.float32),
-        alpha=alpha,
-        ga=jnp.zeros((p, mb), jnp.float32),
-        epoch=jnp.int32(0),
-    )
-
-
-def block_tile_step(*, X_tile, y_tile, w_blk, alpha_blk, gw_blk, ga_blk,
-                    row_nnz_tile, col_nnz_blk, eta_t, lam, m,
-                    loss_name: str, reg_name: str, use_adagrad: bool,
-                    w_lo, w_hi, tile_row_nnz=None, tile_col_nnz=None):
-    """One TPU-native tile step on an active block (DESIGN.md §3).
-
-    Aggregates Eq. (8) over every nonzero of the tile; simultaneous
-    (Jacobi) read of (w, alpha) as in Lemma 2.  Returns updated
-    (w_blk, alpha_blk, gw_blk, ga_blk), with App. B projections applied.
-
-    ``tile_row_nnz``/``tile_col_nnz`` are the tile's per-row/per-column
-    nonzero counts; pass the precomputed statistics (``GridData``) to keep
-    this recomputation off the hot path — they are derived from X here only
-    when absent.
-    """
-    loss = get_loss(loss_name)
-    reg = get_regularizer(reg_name)
-    if tile_row_nnz is None or tile_col_nnz is None:
-        nz = (X_tile != 0).astype(X_tile.dtype)
-        tile_col_nnz = nz.sum(axis=0)      # n_j within this tile
-        tile_row_nnz = nz.sum(axis=1)      # n_i within this tile
-    g_w = (lam * reg.grad(w_blk) * tile_col_nnz / col_nnz_blk
-           - (X_tile.T @ alpha_blk) / m)
-    g_a = (-loss.dual_grad(alpha_blk, y_tile) * tile_row_nnz
-           / (m * row_nnz_tile)
-           - (X_tile @ w_blk) / m)
-    # rows with no nonzero in this tile have g_a = 0 automatically
-    # (tile_row_nnz = 0 and the X_tile @ w term vanishes).
-    return _eq8_apply(loss, w_blk, alpha_blk, gw_blk, ga_blk, y_tile,
-                      g_w, g_a, eta_t, use_adagrad, w_lo, w_hi)
-
-
-def _eq8_apply(loss, w_blk, alpha_blk, gw_blk, ga_blk, y_tile, g_w, g_a,
-               eta_t, use_adagrad, w_lo, w_hi):
-    """Shared Eq.-(8) update tail: AdaGrad scaling, step, App. B projection.
-    Used by both the dense and the sparse (gather) tile steps so the two
-    layouts share every op after the mat-vecs."""
-    if use_adagrad:
-        gw_blk = gw_blk + g_w * g_w
-        ga_blk = ga_blk + g_a * g_a
-        dw = eta_t * g_w * jax.lax.rsqrt(gw_blk + 1e-8)
-        da = eta_t * g_a * jax.lax.rsqrt(ga_blk + 1e-8)
-    else:
-        dw, da = eta_t * g_w, eta_t * g_a
-    w_blk = jnp.clip(w_blk - dw, w_lo, w_hi)
-    alpha_blk = loss.project_alpha(alpha_blk + da, y_tile)
-    return w_blk, alpha_blk, gw_blk, ga_blk
-
-
-def sparse_tile_step(*, cols, vals, y_tile, w_blk, alpha_blk, gw_blk, ga_blk,
-                     row_nnz_tile, col_nnz_blk, eta_t, lam, m,
-                     loss_name: str, reg_name: str, use_adagrad: bool,
-                     w_lo, w_hi, tile_row_nnz=None, tile_col_nnz=None):
-    """``block_tile_step`` on a packed block-ELL tile (sparse.format).
-
-    ``cols``/``vals`` are (rows, K) with *block-local* column indices, so
-    both Eq.-(8) mat-vecs become nnz-proportional index ops on the
-    travelling w block:
-
-        X w       -> sum_k vals[i, k] * w[cols[i, k]]          (gather)
-        X^T alpha -> scatter-add of vals[i, k] * alpha[i]      (segment sum)
-
-    Padding slots carry val 0 at col 0 — their gather term is exactly 0 and
-    their scatter-add is a no-op, so the result equals the dense tile step
-    up to float32 reduction order.  The tile sparsity statistics default to
-    being derived from ``vals != 0`` (oracle use); runners pass the
-    precomputed ``SparseGridData`` fields.
-    """
-    loss = get_loss(loss_name)
-    reg = get_regularizer(reg_name)
-    if tile_row_nnz is None:
-        tile_row_nnz = (vals != 0).astype(vals.dtype).sum(axis=1)
-    if tile_col_nnz is None:
-        tile_col_nnz = jnp.zeros_like(w_blk).at[cols.reshape(-1)] \
-            .add((vals != 0).astype(vals.dtype).reshape(-1))
-    xw = jnp.sum(vals * jnp.take(w_blk, cols, axis=0), axis=1)
-    xta = jnp.zeros_like(w_blk) \
-        .at[cols.reshape(-1)].add((vals * alpha_blk[:, None]).reshape(-1))
-    g_w = lam * reg.grad(w_blk) * tile_col_nnz / col_nnz_blk - xta / m
-    g_a = (-loss.dual_grad(alpha_blk, y_tile) * tile_row_nnz
-           / (m * row_nnz_tile)
-           - xw / m)
-    return _eq8_apply(loss, w_blk, alpha_blk, gw_blk, ga_blk, y_tile,
-                      g_w, g_a, eta_t, use_adagrad, w_lo, w_hi)
-
-
-def _inner_iteration(prob_meta, col_nnz, blk_id, w_blk, gw_blk,
-                     alpha_q, ga_q, X_q, y_q, row_nnz_q, tcn_q, trn_q, eta_t,
-                     row_batches: int, impl: str = "jnp"):
-    """All tile steps of one processor on one active block.
-
-    ``tcn_q`` (>= row_batches, d_pad) / ``trn_q`` (p, mb): the processor's
-    precomputed tile sparsity statistics (``GridData`` fields, sliced per
-    processor).  ``impl='pallas'`` issues ONE fused-kernel launch covering
-    the whole block (the row-batch sub-scan folded into the kernel grid);
-    ``impl='jnp'`` scans the jnp tile step over the row batches.
-    """
-    assert impl in ("jnp", "pallas"), f"unknown impl {impl!r}"
-    lam, m, loss_name, reg_name, use_adagrad, w_lo, w_hi = prob_meta
-    db = w_blk.shape[0]
-    blk_cols = blk_id * db
-    col_nnz_blk = jax.lax.dynamic_slice(col_nnz, (blk_cols,), (db,))
-    mb = X_q.shape[0]
-    rb = mb // row_batches
-    # this block's slice of the static sparsity statistics
-    trn_blk = jax.lax.dynamic_slice(trn_q, (blk_id, 0), (1, mb))[0]
-    tcn_blk = jax.lax.dynamic_slice(tcn_q, (0, blk_cols), (row_batches, db))
-
-    if impl == "pallas":
-        from repro.kernels import ops
-        assert use_adagrad, "the fused kernel implements the AdaGrad step"
-        X_blk = jax.lax.dynamic_slice(X_q, (0, blk_cols), (mb, db))
-        scalars = jnp.stack([eta_t, lam, m, w_lo, w_hi]).astype(jnp.float32)
-        w_blk, alpha_q, gw_blk, ga_q = ops.dso_block_step(
-            X_blk, y_q, w_blk, alpha_q, gw_blk, ga_q, trn_blk, tcn_blk,
-            row_nnz_q, col_nnz_blk, scalars, row_batches=row_batches,
-            loss_name=loss_name, reg_name=reg_name)
-        return w_blk, alpha_q, gw_blk, ga_q
-
-    def sub(carry, s):
-        w_blk, alpha_q, gw_blk, ga_q = carry
-        Xt = jax.lax.dynamic_slice(X_q, (s * rb, blk_cols), (rb, db))
-        yt = jax.lax.dynamic_slice(y_q, (s * rb,), (rb,))
-        at = jax.lax.dynamic_slice(alpha_q, (s * rb,), (rb,))
-        gat = jax.lax.dynamic_slice(ga_q, (s * rb,), (rb,))
-        rnt = jax.lax.dynamic_slice(row_nnz_q, (s * rb,), (rb,))
-        trn_t = jax.lax.dynamic_slice(trn_blk, (s * rb,), (rb,))
-        tcn_t = jax.lax.dynamic_slice(tcn_blk, (s, 0), (1, db))[0]
-        w_blk, at, gw_blk, gat = block_tile_step(
-            X_tile=Xt, y_tile=yt, w_blk=w_blk, alpha_blk=at, gw_blk=gw_blk,
-            ga_blk=gat, row_nnz_tile=rnt, col_nnz_blk=col_nnz_blk,
-            eta_t=eta_t, lam=lam, m=m, loss_name=loss_name,
-            reg_name=reg_name, use_adagrad=use_adagrad, w_lo=w_lo, w_hi=w_hi,
-            tile_row_nnz=trn_t, tile_col_nnz=tcn_t)
-        alpha_q = jax.lax.dynamic_update_slice(alpha_q, at, (s * rb,))
-        ga_q = jax.lax.dynamic_update_slice(ga_q, gat, (s * rb,))
-        return (w_blk, alpha_q, gw_blk, ga_q), None
-
-    (w_blk, alpha_q, gw_blk, ga_q), _ = jax.lax.scan(
-        sub, (w_blk, alpha_q, gw_blk, ga_q), jnp.arange(row_batches))
-    return w_blk, alpha_q, gw_blk, ga_q
-
-
-def _inner_iteration_sparse(prob_meta, col_nnz, blk_id, w_blk, gw_blk,
-                            alpha_q, ga_q, cols_q, vals_q, y_q, row_nnz_q,
-                            tcn_q, trn_q, eta_t, row_batches: int,
-                            impl: str = "jnp"):
-    """Sparse-layout ``_inner_iteration``: the processor's row of block-ELL
-    tiles ``cols_q``/``vals_q`` (p, mb, K) replaces the dense ``X_q`` shard;
-    the active tile is selected by ``blk_id`` and its column indices are
-    block-local, so they index the travelling ``w_blk`` directly.
-
-    ``impl='pallas'`` issues one gather-kernel launch covering the whole
-    block (kernels/dso_sparse.py); ``impl='jnp'`` scans the jnp gather tile
-    step over the row batches — both mirror the dense path's sequencing
-    exactly.
-    """
-    assert impl in ("jnp", "pallas"), f"unknown impl {impl!r}"
-    lam, m, loss_name, reg_name, use_adagrad, w_lo, w_hi = prob_meta
-    db = w_blk.shape[0]
-    _, mb, K = cols_q.shape
-    blk_cols = blk_id * db
-    col_nnz_blk = jax.lax.dynamic_slice(col_nnz, (blk_cols,), (db,))
-    cols_blk = jax.lax.dynamic_slice(cols_q, (blk_id, 0, 0), (1, mb, K))[0]
-    vals_blk = jax.lax.dynamic_slice(vals_q, (blk_id, 0, 0), (1, mb, K))[0]
-    trn_blk = jax.lax.dynamic_slice(trn_q, (blk_id, 0), (1, mb))[0]
-    tcn_blk = jax.lax.dynamic_slice(tcn_q, (0, blk_cols), (row_batches, db))
-    rb = mb // row_batches
-
-    if impl == "pallas":
-        from repro.kernels import ops
-        assert use_adagrad, "the sparse kernel implements the AdaGrad step"
-        scalars = jnp.stack([eta_t, lam, m, w_lo, w_hi]).astype(jnp.float32)
-        w_blk, alpha_q, gw_blk, ga_q = ops.dso_sparse_block_step(
-            cols_blk, vals_blk, y_q, w_blk, alpha_q, gw_blk, ga_q, trn_blk,
-            tcn_blk, row_nnz_q, col_nnz_blk, scalars,
-            row_batches=row_batches, loss_name=loss_name, reg_name=reg_name)
-        return w_blk, alpha_q, gw_blk, ga_q
-
-    def sub(carry, s):
-        w_blk, alpha_q, gw_blk, ga_q = carry
-        ct = jax.lax.dynamic_slice(cols_blk, (s * rb, 0), (rb, K))
-        vt = jax.lax.dynamic_slice(vals_blk, (s * rb, 0), (rb, K))
-        yt = jax.lax.dynamic_slice(y_q, (s * rb,), (rb,))
-        at = jax.lax.dynamic_slice(alpha_q, (s * rb,), (rb,))
-        gat = jax.lax.dynamic_slice(ga_q, (s * rb,), (rb,))
-        rnt = jax.lax.dynamic_slice(row_nnz_q, (s * rb,), (rb,))
-        trn_t = jax.lax.dynamic_slice(trn_blk, (s * rb,), (rb,))
-        tcn_t = jax.lax.dynamic_slice(tcn_blk, (s, 0), (1, db))[0]
-        w_blk, at, gw_blk, gat = sparse_tile_step(
-            cols=ct, vals=vt, y_tile=yt, w_blk=w_blk, alpha_blk=at,
-            gw_blk=gw_blk, ga_blk=gat, row_nnz_tile=rnt,
-            col_nnz_blk=col_nnz_blk, eta_t=eta_t, lam=lam, m=m,
-            loss_name=loss_name, reg_name=reg_name, use_adagrad=use_adagrad,
-            w_lo=w_lo, w_hi=w_hi, tile_row_nnz=trn_t, tile_col_nnz=tcn_t)
-        alpha_q = jax.lax.dynamic_update_slice(alpha_q, at, (s * rb,))
-        ga_q = jax.lax.dynamic_update_slice(ga_q, gat, (s * rb,))
-        return (w_blk, alpha_q, gw_blk, ga_q), None
-
-    (w_blk, alpha_q, gw_blk, ga_q), _ = jax.lax.scan(
-        sub, (w_blk, alpha_q, gw_blk, ga_q), jnp.arange(row_batches))
-    return w_blk, alpha_q, gw_blk, ga_q
-
-
-def _prob_meta(prob: Problem):
-    loss = get_loss(prob.loss_name)
-    box = loss.w_box(prob.lam) if loss.w_box is not None else np.inf
-    return (jnp.float32(prob.lam), jnp.float32(prob.m), prob.loss_name,
-            prob.reg_name, True, jnp.float32(-box), jnp.float32(box))
-
-
-# =====================================================================
-# 3. Single-device simulator of the p-processor schedule
-# =====================================================================
-
-
-def check_tile_stats(data, row_batches: int):
-    """The stats' tile height must equal the epoch's tile height, or the
-    per-tile counts silently describe the wrong row grouping."""
-    sparse = isinstance(data, SparseGridData)
-    builder = "sparse_grid_from_csr" if sparse else "make_grid_data"
-    assert data.tile_col_nnz_g is not None, \
-        f"grid data lacks tile stats: build it with {builder}"
-    mb = data.cols_g.shape[2] if sparse else data.Xg.shape[1]
-    assert mb // data.tile_col_nnz_g.shape[1] == mb // row_batches, \
-        (f"grid stats built for a different row grouping: "
-         f"{builder}(..., row_batches={row_batches}) required")
-
-
-def _epoch_body(data, state: DSOState, eta_t, lam, m, w_lo, w_hi,
-                *, loss_name, reg_name, use_adagrad, row_batches, p, db,
-                impl="jnp"):
-    check_tile_stats(data, row_batches)
-    meta = (lam, m, loss_name, reg_name, use_adagrad, w_lo, w_hi)
-    qs = jnp.arange(p)
-    if isinstance(data, SparseGridData):
-        step_fn, data_arrays = _inner_iteration_sparse, (data.cols_g,
-                                                         data.vals_g)
-    else:
-        step_fn, data_arrays = _inner_iteration, (data.Xg,)
-
-    def inner(r, st: DSOState) -> DSOState:
-        blk_ids = (qs + r) % p                      # sigma(q, r)
-        # gather the w blocks each processor owns this inner iteration
-        w_owned = jnp.take(st.w_grid, blk_ids, axis=0)    # (p, db)
-        gw_owned = jnp.take(st.gw_grid, blk_ids, axis=0)
-
-        def per_q(blk_id, w_blk, gw_blk, a_q, ga_q, *rest):
-            # rest: the layout's data arrays (X_q | cols_q, vals_q),
-            # then y_q, rn_q, tcn_q, trn_q
-            return step_fn(meta, data.col_nnz, blk_id, w_blk, gw_blk,
-                           a_q, ga_q, *rest, eta_t, row_batches, impl)
-
-        w_new, a_new, gw_new, ga_new = jax.vmap(per_q)(
-            blk_ids, w_owned, gw_owned, st.alpha, st.ga, *data_arrays,
-            data.yg, data.row_nnz_g, data.tile_col_nnz_g,
-            data.tile_row_nnz_g)
-        w_grid = st.w_grid.at[blk_ids].set(w_new)
-        gw_grid = st.gw_grid.at[blk_ids].set(gw_new)
-        return DSOState(w_grid, gw_grid, a_new, ga_new, st.epoch)
-
-    state = jax.lax.fori_loop(0, p, inner, state)
-    return state._replace(epoch=state.epoch + 1)
-
-
-@functools.partial(jax.jit, static_argnames=("loss_name", "reg_name",
-                                             "use_adagrad", "row_batches",
-                                             "p", "db", "impl"))
-def _grid_epoch(data: GridData, state: DSOState, eta_t, lam, m, w_lo, w_hi,
-                *, loss_name, reg_name, use_adagrad, row_batches, p, db,
-                impl="jnp"):
-    """One epoch, one dispatch (legacy path; see ``_grid_epochs``)."""
-    return _epoch_body(data, state, eta_t, lam, m, w_lo, w_hi,
-                       loss_name=loss_name, reg_name=reg_name,
-                       use_adagrad=use_adagrad, row_batches=row_batches,
-                       p=p, db=db, impl=impl)
-
-
-@functools.partial(jax.jit, static_argnames=("loss_name", "reg_name",
-                                             "use_adagrad", "row_batches",
-                                             "p", "db", "impl"),
-                   donate_argnums=(1,))
-def _grid_epochs(data: GridData, state: DSOState, etas, lam, m, w_lo, w_hi,
-                 *, loss_name, reg_name, use_adagrad, row_batches, p, db,
-                 impl="jnp"):
-    """``len(etas)`` epochs in ONE dispatch: a ``lax.scan`` over epochs with
-    the (w, alpha, gw, ga) state donated, so epoch state is updated in place
-    instead of round-tripping host dispatch (and copies) per epoch."""
-
-    def step(st, eta_t):
-        st = _epoch_body(data, st, eta_t, lam, m, w_lo, w_hi,
-                         loss_name=loss_name, reg_name=reg_name,
-                         use_adagrad=use_adagrad, row_batches=row_batches,
-                         p=p, db=db, impl=impl)
-        return st, None
-
-    state, _ = jax.lax.scan(step, state, etas)
-    return state
-
-
-def gather_w(state: DSOState, d: int) -> Array:
-    return state.w_grid.reshape(-1)[:d]
-
-
-def gather_alpha(state: DSOState, m: int) -> Array:
-    return state.alpha.reshape(-1)[:m]
-
-
-def _eta_schedule(eta0: float, t0: int, n: int, use_adagrad: bool):
-    """Per-epoch step sizes for epochs t0+1 .. t0+n (1/sqrt(t) when the
-    AdaGrad scaling is off — Theorem 1's schedule)."""
-    return jnp.asarray([eta0 if use_adagrad else eta0 / np.sqrt(t)
-                        for t in range(t0 + 1, t0 + n + 1)], jnp.float32)
+    res = solve_serial(prob, epochs=epochs, eta0=eta0, seed=seed,
+                       use_adagrad=use_adagrad, alpha0=alpha0,
+                       eval_every=eval_every)
+    return res.w, res.alpha, res.history
 
 
 def run_dso_grid(prob: Problem, p: int = 4, epochs: int = 10,
                  eta0: float = 0.1, use_adagrad: bool = True,
                  row_batches: int = 1, alpha0: float = 0.0,
                  eval_every: int = 1, impl: str = "jnp",
-                 scan_epochs: bool = True):
+                 scan_epochs: bool = True, schedule: str = "cyclic"):
     """Single-device simulation of Algorithm 1 with p processors.
 
-    ``impl`` selects layout and kernel (see ``IMPLS``): dense ``"jnp"`` /
-    ``"pallas"``, nnz-proportional ``"sparse"`` / ``"sparse_pallas"``
-    (block-ELL tiles + gather tile steps, same trajectory to float32
-    reduction order), or ``"auto"`` picking the sparse layout below the
-    density threshold.
+    ``impl`` selects layout and kernel (see ``IMPLS`` / the engine backend
+    registry): dense ``"jnp"`` / ``"pallas"``, nnz-proportional
+    ``"sparse"`` / ``"sparse_pallas"`` (block-ELL tiles + gather tile
+    steps, same trajectory to float32 reduction order), or ``"auto"``
+    picking the sparse layout below the density threshold.  ``schedule``
+    is any registered engine schedule ("cyclic" is Algorithm 1).
 
     ``scan_epochs=True`` (default) runs each evaluation chunk of epochs as
     one donated ``lax.scan`` dispatch; ``False`` keeps the legacy
     one-dispatch-per-epoch loop (benchmark baseline). Identical math.
     Each distinct chunk length traces once, so when ``eval_every`` does not
     divide ``epochs`` the ragged final chunk costs one extra compile —
-    prefer ``epochs % eval_every == 0`` for long runs.
+    prefer ``epochs % eval_every == 0`` for long runs (the driver warns).
     """
-    assert eval_every >= 1, f"eval_every must be >= 1, got {eval_every}"
-    layout, kernel = resolve_impl(impl, density(prob))
-    data = (make_sparse_grid_data(prob, p, row_batches)
-            if layout == "sparse" else make_grid_data(prob, p, row_batches))
-    state = init_state(prob, data, alpha0)
-    lam, m, loss_name, reg_name, _, w_lo, w_hi = _prob_meta(prob)
-    kw = dict(loss_name=prob.loss_name, reg_name=prob.reg_name,
-              use_adagrad=use_adagrad, row_batches=row_batches, p=p,
-              db=data.db, impl=kernel)
-    history = []
-    t = 0
-    while t < epochs:
-        n = min(eval_every, epochs - t)
-        if scan_epochs:
-            state = _grid_epochs(data, state,
-                                 _eta_schedule(eta0, t, n, use_adagrad),
-                                 lam, m, w_lo, w_hi, **kw)
-        else:
-            for k in range(1, n + 1):
-                eta_t = eta0 if use_adagrad else eta0 / np.sqrt(t + k)
-                state = _grid_epoch(data, state, jnp.float32(eta_t),
-                                    lam, m, w_lo, w_hi, **kw)
-        t += n
-        w = gather_w(state, prob.d)
-        alpha = gather_alpha(state, prob.m)
-        history.append(dict(
-            epoch=t,
-            primal=float(primal_objective(prob, w)),
-            gap=float(duality_gap(prob, w, alpha)),
-            saddle=float(saddle_objective(prob, w, alpha)),
-        ))
-    return gather_w(state, prob.d), gather_alpha(state, prob.m), history
+    res = solve(prob, backend=impl, schedule=schedule, p=p, epochs=epochs,
+                eta0=eta0, use_adagrad=use_adagrad, row_batches=row_batches,
+                alpha0=alpha0, eval_every=eval_every,
+                scan_epochs=scan_epochs)
+    return res.w, res.alpha, res.history
 
 
 def run_dso_grid_from_data(data, *, loss_name: str, reg_name: str,
                            lam: float, m: int, d: int, epochs: int = 10,
                            eta0: float = 0.1, use_adagrad: bool = True,
                            row_batches: int = 1, alpha0: float = 0.0,
-                           impl: str = "jnp"):
+                           impl: str = "jnp", eval_every: int | None = None,
+                           eval_hook=None):
     """Algorithm 1 on pre-built grid data — the out-of-core entry point.
 
     Takes dense ``GridData`` or sparse ``SparseGridData`` directly (e.g.
     from ``sparse.ingest.ingest_libsvm`` + ``sparse_grid_from_csr``), so no
     dense ``Problem`` — and no (m, d) dense matrix — ever exists.  ``m``/
     ``d`` are the real (unpadded) problem sizes; ``impl`` is the *kernel*
-    ("jnp"/"pallas"), the layout being fixed by the data's type.  Returns
-    (w, alpha) — evaluate objectives through ``sparse.ingest.
-    csr_primal_objective`` to stay nnz-proportional.
+    ("jnp"/"pallas", or a canonical backend name matching the data's
+    layout), the layout being fixed by the data's type.
+
+    Returns (w, alpha) — or, when an ``eval_hook`` is supplied (e.g.
+    ``engine.make_csr_primal_eval``: a jitted chunked CSR matvec, so the
+    evaluation loop stays device-side and nnz-proportional),
+    (w, alpha, history) with the hook called every ``eval_every`` epochs.
     """
-    assert impl in ("jnp", "pallas"), (
-        f"impl={impl!r}: this entry point takes the KERNEL name only — "
-        "the layout is fixed by the data's type (pass SparseGridData for "
-        "the sparse path); the 'sparse'/'auto' selectors belong to "
-        "run_dso_grid, which builds its own grid data")
-    loss = get_loss(loss_name)
-    box = loss.w_box(lam) if loss.w_box is not None else np.inf
-    state = init_state_data(loss_name, data, alpha0)
-    state = _grid_epochs(
-        data, state, _eta_schedule(eta0, 0, epochs, use_adagrad),
-        jnp.float32(lam), jnp.float32(m), jnp.float32(-box),
-        jnp.float32(box), loss_name=loss_name, reg_name=reg_name,
-        use_adagrad=use_adagrad, row_batches=row_batches, p=data.p,
-        db=data.db, impl=impl)
-    return gather_w(state, d), gather_alpha(state, m)
+    res = solve(data, backend=impl, schedule="cyclic", epochs=epochs,
+                eta0=eta0, use_adagrad=use_adagrad, row_batches=row_batches,
+                alpha0=alpha0,
+                eval_every=epochs if eval_every is None else eval_every,
+                eval_hook=eval_hook if eval_hook is not None else "auto",
+                loss_name=loss_name, reg_name=reg_name, lam=lam, m=m, d=d)
+    if eval_hook is not None:
+        return res.w, res.alpha, res.history
+    return res.w, res.alpha
+
+
+# ------------------------------------------------------------------------
+# legacy jitted-epoch shims (benchmarks/dso_perf.py times these directly)
+# ------------------------------------------------------------------------
+
+
+def _impl_kw(data, impl, kw):
+    layout = as_tile_data(data).layout
+    backend = resolve_backend_for_layout(impl, layout)
+    out = dict(kw)
+    out["backend"] = backend.name
+    return out
+
+
+def _grid_epoch(data, state, eta_t, lam, m, w_lo, w_hi, *, impl="jnp",
+                **kw):
+    """One epoch, one dispatch (legacy path; see ``_grid_epochs``)."""
+    kw = _impl_kw(data, impl, kw)
+    perm = cyclic_perms(1, kw["p"])[0]
+    return run_epoch(as_tile_data(data), state, perm, eta_t, lam, m,
+                     w_lo, w_hi, **kw)
+
+
+def _grid_epochs(data, state, etas, lam, m, w_lo, w_hi, *, impl="jnp",
+                 **kw):
+    """``len(etas)`` cyclic epochs in ONE donated-scan dispatch."""
+    kw = _impl_kw(data, impl, kw)
+    perms = cyclic_perms(etas.shape[0], kw["p"])
+    return run_epochs(as_tile_data(data), state, perms, etas, lam, m,
+                      w_lo, w_hi, **kw)

@@ -5,122 +5,43 @@ updates* (Lemma 2), which holds for ANY schedule that assigns, at each inner
 iteration, a permutation of blocks to processors (no shared row/column).
 Algorithm 1 uses the cyclic shift sigma_r(q) = (q+r) mod p; asynchronous
 NOMAD-style execution visits blocks in a data-dependent order. We model that
-here with a *uniformly random permutation per inner iteration* — the
-schedule distribution NOMAD approaches under homogeneous processors — and
-verify (tests) that convergence matches the cyclic schedule, supporting the
+with a *uniformly random permutation per inner iteration* — the schedule
+distribution NOMAD approaches under homogeneous processors — and verify
+(tests) that convergence matches the cyclic schedule, supporting the
 paper's conjecture that the proof carries over.
+
+This module is now a thin wrapper: the random schedule lives in
+``engine.schedules`` ("random"), driven by the same jitted, state-donated
+epoch scan as every other mode (``engine.solve(schedule="random")``), and
+composes with every registered tile backend.
 
 Communication note: a random permutation is a general shuffle (all-to-all of
 w-blocks) rather than a ring step, so on real hardware NOMAD buys schedule
-freedom at the cost of less regular traffic; on the simulator both are
-gathers.
+freedom at the cost of less regular traffic; the sharded driver
+(``dso_dist.ShardedDSO(schedule="random")``) expresses it as
+all-gather + select, the simulator as gathers.
 """
 
 from __future__ import annotations
 
-import functools
-
-import jax
-import jax.numpy as jnp
-
-from repro.core.dso import (DSOState, GridData, _eta_schedule,
-                            _inner_iteration, _prob_meta, check_tile_stats,
-                            gather_alpha, gather_w, init_state,
-                            make_grid_data)
-from repro.core.saddle import Problem, duality_gap, primal_objective
-
-
-def _random_epoch_body(data: GridData, state: DSOState, perms, eta_t, lam, m,
-                       w_lo, w_hi, *, loss_name, reg_name, use_adagrad,
-                       row_batches, p, db):
-    """One epoch with per-inner-iteration random block permutations.
-
-    ``perms``: (p, p) int32 — perms[r, q] = block owned by processor q at
-    inner iteration r (each row is a permutation of 0..p-1)."""
-    check_tile_stats(data, row_batches)
-    meta = (lam, m, loss_name, reg_name, use_adagrad, w_lo, w_hi)
-
-    def inner(r, st: DSOState) -> DSOState:
-        blk_ids = perms[r]
-        w_owned = jnp.take(st.w_grid, blk_ids, axis=0)
-        gw_owned = jnp.take(st.gw_grid, blk_ids, axis=0)
-
-        def per_q(blk_id, w_blk, gw_blk, a_q, ga_q, X_q, y_q, rn_q,
-                  tcn_q, trn_q):
-            return _inner_iteration(meta, data.col_nnz, blk_id, w_blk,
-                                    gw_blk, a_q, ga_q, X_q, y_q, rn_q,
-                                    tcn_q, trn_q, eta_t, row_batches)
-
-        w_new, a_new, gw_new, ga_new = jax.vmap(per_q)(
-            blk_ids, w_owned, gw_owned, st.alpha, st.ga, data.Xg, data.yg,
-            data.row_nnz_g, data.tile_col_nnz_g, data.tile_row_nnz_g)
-        return DSOState(st.w_grid.at[blk_ids].set(w_new),
-                        st.gw_grid.at[blk_ids].set(gw_new),
-                        a_new, ga_new, st.epoch)
-
-    state = jax.lax.fori_loop(0, p, inner, state)
-    return state._replace(epoch=state.epoch + 1)
-
-
-@functools.partial(jax.jit, static_argnames=("loss_name", "reg_name",
-                                             "use_adagrad", "row_batches",
-                                             "p", "db"),
-                   donate_argnums=(1,))
-def _random_epochs(data: GridData, state: DSOState, perms, etas, lam, m,
-                   w_lo, w_hi, *, loss_name, reg_name, use_adagrad,
-                   row_batches, p, db):
-    """``len(etas)`` random-schedule epochs in one donated-scan dispatch.
-    ``perms``: (n_epochs, p, p) — one schedule per epoch."""
-
-    def step(st, xs):
-        perm_t, eta_t = xs
-        st = _random_epoch_body(data, st, perm_t, eta_t, lam, m, w_lo, w_hi,
-                                loss_name=loss_name, reg_name=reg_name,
-                                use_adagrad=use_adagrad,
-                                row_batches=row_batches, p=p, db=db)
-        return st, None
-
-    state, _ = jax.lax.scan(step, state, (perms, etas))
-    return state
+from repro.core.saddle import Problem
+from repro.engine.driver import solve
+from repro.engine.evaluate import problem_eval_hook
 
 
 def run_dso_random(prob: Problem, p: int = 4, epochs: int = 10,
                    eta0: float = 0.1, use_adagrad: bool = True,
                    row_batches: int = 1, alpha0: float = 0.0, seed: int = 0,
-                   eval_every: int = 1):
+                   eval_every: int = 1, impl: str = "jnp"):
     """DSO with uniformly random block permutations per inner iteration.
 
-    Epochs between evaluation points run as ONE donated-scan dispatch
-    (``_random_epochs``); the per-epoch schedules are drawn up front."""
-    assert eval_every >= 1, f"eval_every must be >= 1, got {eval_every}"
-    data = make_grid_data(prob, p, row_batches)
-    state = init_state(prob, data, alpha0)
-    lam, m, _, _, _, w_lo, w_hi = _prob_meta(prob)
-    key = jax.random.PRNGKey(seed)
-    history = []
-    t = 0
-    while t < epochs:
-        n = min(eval_every, epochs - t)
-        # one vmapped draw for the chunk's (n, p) schedule keys — same RNG
-        # stream as per-epoch permutation() calls, without n*p dispatches
-        chunk_keys = []
-        for _ in range(n):
-            key, sk = jax.random.split(key)
-            chunk_keys.append(jax.random.split(sk, p))
-        perms = jax.vmap(jax.vmap(
-            lambda k: jax.random.permutation(k, p)))(jnp.stack(chunk_keys))
-        etas = _eta_schedule(eta0, t, n, use_adagrad)
-        state = _random_epochs(
-            data, state, perms, etas, lam, m, w_lo, w_hi,
-            loss_name=prob.loss_name, reg_name=prob.reg_name,
-            use_adagrad=use_adagrad, row_batches=row_batches, p=p,
-            db=data.db)
-        t += n
-        w = gather_w(state, prob.d)
-        alpha = gather_alpha(state, prob.m)
-        history.append(dict(
-            epoch=t,
-            primal=float(primal_objective(prob, w)),
-            gap=float(duality_gap(prob, w, alpha)),
-        ))
-    return gather_w(state, prob.d), gather_alpha(state, prob.m), history
+    Epochs between evaluation points run as ONE donated-scan dispatch; the
+    per-epoch schedules are drawn up front by the engine's "random"
+    schedule (same RNG stream as the historical implementation).  ``impl``
+    selects any registered tile backend (dense by default).
+    """
+    res = solve(prob, backend=impl, schedule="random", p=p, epochs=epochs,
+                eta0=eta0, use_adagrad=use_adagrad, row_batches=row_batches,
+                alpha0=alpha0, eval_every=eval_every, seed=seed,
+                eval_hook=problem_eval_hook(prob, saddle=False))
+    return res.w, res.alpha, res.history

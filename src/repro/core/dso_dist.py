@@ -3,23 +3,27 @@
 ``shard_map`` over a 1-D mesh axis ``"dso"`` of p devices. Each device is one
 of the paper's processors:
 
-  resident  : its row-shard of X, labels, alpha-shard, dual AdaGrad acc.
-  travelling: one w-block + its primal AdaGrad acc, moved to the ring
-              neighbour by ``jax.lax.ppermute`` after every inner iteration —
-              this *is* the paper's bulk synchronization, expressed as an XLA
-              ``collective-permute`` (overlappable with compute).
+  resident  : its row-shard of X (dense or block-ELL), labels, alpha-shard,
+              dual AdaGrad acc.
+  travelling: one w-block + its primal AdaGrad acc, moved after every inner
+              iteration.  Under the cyclic schedule the move is a
+              ``jax.lax.ppermute`` ring step — this *is* the paper's bulk
+              synchronization, expressed as an XLA ``collective-permute``
+              (overlappable with compute).  A general permutation schedule
+              ("random" — NOMAD-style) is a shuffle, expressed as
+              all-gather + select.
 
-Only w (d/p numbers per device per inner iteration) is ever communicated;
-alpha and X never move — exactly the paper's communication pattern, giving
-the (|Omega| T_u / p + T_c) T epoch cost of Theorem 1.
+Under the cyclic schedule only w (d/p numbers per device per inner
+iteration) is ever communicated; alpha and X never move — exactly the
+paper's communication pattern, giving the (|Omega| T_u / p + T_c) T epoch
+cost of Theorem 1.
 
-The math is identical to ``dso.run_dso_grid`` (same ``_inner_iteration``);
-tests assert bit-equality between the two.
+The math is identical to ``dso.run_dso_grid`` (the engine's one
+``inner_iteration``, any registered tile backend); tests assert
+bit-equality between the two for every backend x schedule combination.
 """
 
 from __future__ import annotations
-
-import functools
 
 import jax
 import jax.numpy as jnp
@@ -27,11 +31,13 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
-from repro.core.dso import (_eta_schedule, _inner_iteration,
-                            _inner_iteration_sparse, _prob_meta, init_state,
-                            make_grid_data, resolve_impl)
-from repro.core.losses import get_loss
 from repro.core.saddle import Problem, duality_gap, primal_objective
+from repro.engine.backends import get_backend, resolve_backend
+from repro.engine.data import (as_tile_data, check_tile_stats, eta_schedule,
+                               init_state, make_grid_data, prob_meta,
+                               tile_dims)
+from repro.engine.driver import inner_iteration, warn_ragged_eval
+from repro.engine.schedules import get_schedule
 from repro.sparse.format import density, make_sparse_grid_data
 
 
@@ -45,128 +51,174 @@ def make_dso_mesh(p: int | None = None) -> Mesh:
 
 def _epoch_shardmap(mesh: Mesh, p: int, db: int, loss_name: str,
                     reg_name: str, use_adagrad: bool, row_batches: int,
-                    sparse: bool = False, impl: str = "jnp"):
+                    *, backend_name: str = "dense_jnp", ring: bool = True):
     """Builds the jitted sharded multi-epoch function for a fixed problem
-    shape: ``etas`` (one step size per epoch) drives a ``lax.scan`` over
-    epochs INSIDE the shard_map, and the travelling/resident state
-    (w, gw, alpha, ga) is donated — epoch state updates in place, with no
-    per-epoch host dispatch.
+    shape: ``etas`` (one step size per epoch) and ``perms`` (the schedule's
+    (n, p, p) block permutations) drive a ``lax.scan`` over epochs INSIDE
+    the shard_map, and the travelling/resident state (w, gw, alpha, ga) is
+    donated — epoch state updates in place, with no per-epoch host
+    dispatch.
 
-    ``sparse=True`` swaps the resident dense X shard for the processor's
-    row of block-ELL tiles (cols/vals, two leading data args instead of
-    one); the ring communication pattern is unchanged — only w travels.
+    ``ring=True`` (cyclic schedule): the w-block moves to the ring
+    neighbour by ``ppermute`` and ``perms`` is ignored (the owner map is
+    sigma_r).  ``ring=False``: the general-permutation path — blocks move
+    by all-gather + dynamic select, and the epoch ends by restoring the
+    device-q-holds-block-q invariant.
     """
+    backend = get_backend(backend_name)
+    n_data = 2 if backend.layout == "sparse" else 1
 
     def epochs_body(*args):
-        if sparse:
-            (colsq, valsq, yq, rnq, tcnq, trnq, col_nnz, w_blk, gw_blk,
-             alpha_q, ga_q, etas, lam, m, w_lo, w_hi) = args
-            data_args = (colsq[0], valsq[0])   # this proc's (p, mb, K) tiles
-            step_fn = _inner_iteration_sparse
-        else:
-            (Xq, yq, rnq, tcnq, trnq, col_nnz, w_blk, gw_blk,
-             alpha_q, ga_q, etas, lam, m, w_lo, w_hi) = args
-            data_args = (Xq[0],)               # the (mb, d) dense row shard
-            step_fn = _inner_iteration
+        arrays = args[:n_data]
+        (yq, rnq, tcnq, trnq, col_nnz, w_blk, gw_blk, alpha_q, ga_q,
+         etas, perms, lam, m, w_lo, w_hi) = args[n_data:]
         # Inside shard_map: per-device views with a leading axis of 1.
+        arrays_q = tuple(a[0] for a in arrays)
         q = jax.lax.axis_index("dso")
         yq, rnq = yq[0], rnq[0]
         tcnq, trnq = tcnq[0], trnq[0]
         w_blk, gw_blk = w_blk[0], gw_blk[0]
         alpha_q, ga_q = alpha_q[0], ga_q[0]
         meta = (lam, m, loss_name, reg_name, use_adagrad, w_lo, w_hi)
-        perm = [(i, (i - 1) % p) for i in range(p)]
+        ring_perm = [(i, (i - 1) % p) for i in range(p)]
+        qs = jnp.arange(p, dtype=jnp.int32)
 
-        def inner_factory(eta_t):
-            def inner(r, carry):
-                w_blk, gw_blk, alpha_q, ga_q = carry
-                blk_id = (q + r) % p
-                w_blk, alpha_q, gw_blk, ga_q = step_fn(
-                    meta, col_nnz, blk_id, w_blk, gw_blk, alpha_q, ga_q,
-                    *data_args, yq, rnq, tcnq, trnq, eta_t, row_batches,
-                    impl)
+        def step_block(blk_id, w_b, gw_b, alpha_q, ga_q, eta_t):
+            return inner_iteration(backend, meta, col_nnz, blk_id, w_b,
+                                   gw_b, alpha_q, ga_q, arrays_q, yq, rnq,
+                                   tcnq, trnq, eta_t, row_batches)
+
+        def cyclic_epoch(carry, xs):
+            eta_t, _ = xs
+
+            def inner(r, c):
+                w_blk, gw_blk, alpha_q, ga_q = c
+                blk_id = (q + r) % p                       # sigma(q, r)
+                w_blk, alpha_q, gw_blk, ga_q = step_block(
+                    blk_id, w_blk, gw_blk, alpha_q, ga_q, eta_t)
                 # bulk synchronization: pass the block to the ring neighbour
                 w_blk, gw_blk = jax.lax.ppermute((w_blk, gw_blk), "dso",
-                                                 perm)
+                                                 ring_perm)
                 return (w_blk, gw_blk, alpha_q, ga_q)
-            return inner
 
-        def epoch(carry, eta_t):
-            return jax.lax.fori_loop(0, p, inner_factory(eta_t), carry), None
+            return jax.lax.fori_loop(0, p, inner, carry), None
 
+        def shuffle_epoch(carry, xs):
+            eta_t, perm_e = xs
+            # own[r] = holder map BEFORE inner iteration r (devices hold
+            # their own block at epoch start); own[p] = after the last one
+            own = jnp.concatenate([qs[None, :], perm_e.astype(jnp.int32)],
+                                  axis=0)
+
+            def fetch(c, r_next):
+                # the block this device needs before inner iteration
+                # r_next — or its home block q when r_next == p (the
+                # end-of-epoch restore)
+                w_blk, gw_blk = c
+                w_all = jax.lax.all_gather(w_blk, "dso")
+                gw_all = jax.lax.all_gather(gw_blk, "dso")
+                inv = jnp.argsort(own[r_next])     # block -> holder device
+                want = jnp.where(r_next < p, perm_e[r_next % p, q], q)
+                return w_all[inv[want]], gw_all[inv[want]]
+
+            def inner(r, c):
+                w_blk, gw_blk, alpha_q, ga_q = c
+                w_blk, gw_blk = fetch((w_blk, gw_blk), r)
+                blk_id = perm_e[r, q]
+                w_blk, alpha_q, gw_blk, ga_q = step_block(
+                    blk_id, w_blk, gw_blk, alpha_q, ga_q, eta_t)
+                return (w_blk, gw_blk, alpha_q, ga_q)
+
+            carry = jax.lax.fori_loop(0, p, inner, carry)
+            # restore the epoch-start invariant: device q holds block q
+            w_blk, gw_blk, alpha_q, ga_q = carry
+            w_blk, gw_blk = fetch((w_blk, gw_blk), jnp.int32(p))
+            return (w_blk, gw_blk, alpha_q, ga_q), None
+
+        epoch = cyclic_epoch if ring else shuffle_epoch
         (w_blk, gw_blk, alpha_q, ga_q), _ = jax.lax.scan(
-            epoch, (w_blk, gw_blk, alpha_q, ga_q), etas)
+            epoch, (w_blk, gw_blk, alpha_q, ga_q), (etas, perms))
         return (w_blk[None], gw_blk[None], alpha_q[None], ga_q[None])
 
-    n_data = 2 if sparse else 1   # cols+vals vs the dense X shard
     sharded = shard_map(
         epochs_body, mesh=mesh,
         in_specs=(P("dso"),) * (n_data + 4) + (P(None),)
-        + (P("dso"),) * 4 + (P(), P(), P(), P(), P()),
+        + (P("dso"),) * 4 + (P(), P(), P(), P(), P(), P()),
         out_specs=(P("dso"), P("dso"), P("dso"), P("dso")),
+        # pallas_call has no shard_map replication rule; the outputs are
+        # all P("dso")-sharded anyway, so the check adds nothing here
+        check_rep="pallas" not in backend_name,
     )
     donate = tuple(range(n_data + 5, n_data + 9))   # w, gw, alpha, ga
     return jax.jit(sharded, donate_argnums=donate)
 
 
 class ShardedDSO:
-    """Driver object holding device-placed state for Algorithm 1."""
+    """Driver object holding device-placed state for Algorithm 1.
+
+    ``impl`` accepts any registered engine backend (or the legacy
+    selectors, including ``"auto"`` with the same density threshold as
+    ``run_dso_grid``); ``schedule`` accepts any engine schedule — "cyclic"
+    keeps the paper's ring, "random" is the NOMAD-style shuffle.
+    """
 
     def __init__(self, prob: Problem, mesh: Mesh | None = None,
                  row_batches: int = 1, use_adagrad: bool = True,
-                 alpha0: float = 0.0, impl: str = "jnp"):
+                 alpha0: float = 0.0, impl: str = "jnp",
+                 schedule: str = "cyclic", seed: int = 0):
         self.prob = prob
         self.mesh = mesh or make_dso_mesh()
         self.p = self.mesh.devices.size
-        layout, kernel = resolve_impl(impl, density(prob))
-        self.sparse = layout == "sparse"
-        self.data = (make_sparse_grid_data(prob, self.p, row_batches)
-                     if self.sparse
-                     else make_grid_data(prob, self.p, row_batches))
-        state = init_state(prob, self.data, alpha0)
+        self.backend = resolve_backend(impl, density(prob))
+        self.sparse = self.backend.layout == "sparse"
+        self.schedule = get_schedule(schedule)
+        self.key = jax.random.PRNGKey(seed)
+        data = (make_sparse_grid_data(prob, self.p, row_batches)
+                if self.sparse
+                else make_grid_data(prob, self.p, row_batches))
+        check_tile_stats(data, row_batches)
+        tile = as_tile_data(data)
+        _, _, self.db = tile_dims(tile)
+        state = init_state(prob, data, alpha0)
         self.use_adagrad = use_adagrad
-        (self.lam, self.m_f, _, _, _, self.w_lo, self.w_hi) = _prob_meta(prob)
+        (self.lam, self.m_f, _, _, _, self.w_lo, self.w_hi) = prob_meta(prob)
 
         shard = NamedSharding(self.mesh, P("dso"))
         repl = NamedSharding(self.mesh, P(None))
-        if self.sparse:
-            # resident packed tiles: device q holds its (p, mb, K) tile row
-            self._data_shards = (
-                jax.device_put(self.data.cols_g, shard),
-                jax.device_put(self.data.vals_g, shard))
-        else:
-            self._data_shards = (jax.device_put(self.data.Xg, shard),)
-        self.yg = jax.device_put(self.data.yg, shard)
-        self.rng_ = jax.device_put(self.data.row_nnz_g, shard)
+        # resident layout payload: device q holds its dense row shard or
+        # its (p, mb, K) row of packed block-ELL tiles
+        self._data_shards = tuple(jax.device_put(a, shard)
+                                  for a in tile.arrays)
+        self.yg = jax.device_put(tile.yg, shard)
+        self.rng_ = jax.device_put(tile.row_nnz_g, shard)
         # static sparsity statistics, resident next to each row shard
-        self.tcn = jax.device_put(self.data.tile_col_nnz_g, shard)
-        self.trn = jax.device_put(self.data.tile_row_nnz_g, shard)
-        self.col_nnz = jax.device_put(self.data.col_nnz, repl)
+        self.tcn = jax.device_put(tile.tile_col_nnz_g, shard)
+        self.trn = jax.device_put(tile.tile_row_nnz_g, shard)
+        self.col_nnz = jax.device_put(tile.col_nnz, repl)
         # state.w_grid is indexed by block id; device q starts owning block q
         self.w = jax.device_put(state.w_grid, shard)
         self.gw = jax.device_put(state.gw_grid, shard)
         self.alpha = jax.device_put(state.alpha, shard)
         self.ga = jax.device_put(state.ga, shard)
         # the sharded device_put copies above are now the only live data;
-        # drop the builder's unsharded arrays so resident memory stays one
-        # grid (nnz-proportional on the sparse path), keeping the metadata
-        self.data = self.data._replace(
-            **({"cols_g": None, "vals_g": None} if self.sparse
-               else {"Xg": None}),
-            yg=None, row_nnz_g=None, tile_col_nnz_g=None,
-            tile_row_nnz_g=None)
+        # the builder's unsharded arrays go out of scope here so resident
+        # memory stays one grid (nnz-proportional on the sparse path)
+        del data, tile, state
         self.epochs_done = 0
         self._epochs_fn = _epoch_shardmap(
-            self.mesh, self.p, self.data.db, prob.loss_name, prob.reg_name,
-            use_adagrad, row_batches, sparse=self.sparse, impl=kernel)
+            self.mesh, self.p, self.db, prob.loss_name, prob.reg_name,
+            use_adagrad, row_batches, backend_name=self.backend.name,
+            ring=self.schedule.ring)
 
     def run_epochs(self, n: int, eta0: float = 0.1):
         """Run ``n`` epochs in one donated-scan dispatch."""
-        etas = _eta_schedule(eta0, self.epochs_done, n, self.use_adagrad)
+        etas = eta_schedule(eta0, self.epochs_done, n, self.use_adagrad)
+        self.key, perms = self.schedule.draw(self.key, self.epochs_done, n,
+                                             self.p)
         self.w, self.gw, self.alpha, self.ga = self._epochs_fn(
             *self._data_shards, self.yg, self.rng_, self.tcn, self.trn,
             self.col_nnz, self.w, self.gw, self.alpha, self.ga, etas,
-            self.lam, self.m_f, self.w_lo, self.w_hi)
+            perms, self.lam, self.m_f, self.w_lo, self.w_hi)
         self.epochs_done += n
 
     def epoch(self, eta0: float = 0.1):
@@ -176,9 +228,10 @@ class ShardedDSO:
     def w_full(self):
         """Global w, accounting for the ring position after each epoch.
 
-        After one epoch (p inner iterations) every block has made a full trip
-        around the ring, so device q again holds block q: the gathered
-        (p, db) array is already in block-id order.
+        After one epoch every block is back on its home device — the ring
+        made a full trip under the cyclic schedule, and the shuffle path
+        restores the invariant explicitly — so device q again holds block
+        q: the gathered (p, db) array is already in block-id order.
         """
         return jnp.asarray(self.w).reshape(-1)[: self.prob.d]
 
@@ -197,9 +250,13 @@ class ShardedDSO:
 def run_dso_sharded(prob: Problem, epochs: int = 10, eta0: float = 0.1,
                     mesh: Mesh | None = None, row_batches: int = 1,
                     use_adagrad: bool = True, alpha0: float = 0.0,
-                    eval_every: int = 1, impl: str = "jnp"):
-    assert eval_every >= 1, f"eval_every must be >= 1, got {eval_every}"
-    opt = ShardedDSO(prob, mesh, row_batches, use_adagrad, alpha0, impl)
+                    eval_every: int = 1, impl: str = "jnp",
+                    schedule: str = "cyclic", seed: int = 0):
+    if eval_every < 1:
+        raise ValueError(f"eval_every must be >= 1, got {eval_every}")
+    opt = ShardedDSO(prob, mesh, row_batches, use_adagrad, alpha0, impl,
+                     schedule, seed)
+    warn_ragged_eval(epochs, eval_every)
     history = []
     while opt.epochs_done < epochs:
         opt.run_epochs(min(eval_every, epochs - opt.epochs_done), eta0)

@@ -1,0 +1,89 @@
+r"""Unified DSO engine: pluggable tile backends, a schedule layer, and one
+epoch driver behind the serial / grid / sharded / async execution modes.
+
+The paper's convergence argument (Lemma 2) only needs an *equivalent
+serial sequence of updates*: the same Eq.-(8) saddle-point block update,
+driven by any per-inner-iteration block permutation, on any data layout.
+The engine expresses that once, as three orthogonal layers, turning the
+old {dense,sparse} x {jnp,pallas} x {cyclic,random} x {grid,sharded}
+code-path *product* into a *sum*:
+
+      Problem ----------------------+        libsvm file
+        | make_grid_data /          |          | sparse.ingest (2-pass)
+        | make_sparse_grid_data     |          v
+        v                           |        CSRMatrix --- sparse_grid_from_csr
+   GridData | SparseGridData <------+--------------+
+        |
+        |  as_tile_data
+        v
+   TileData  (the common pytree: arrays=(Xg,) | (cols_g, vals_g),
+        |     labels, nnz statistics, padding masks)
+        |
+   +----+------------------- ENGINE ---------------------------------+
+   |                                                                 |
+   |  backends.py — TileBackend registry      schedules.py           |
+   |    dense_jnp            \                  cyclic  (sigma_r,    |
+   |    dense_pallas_fused    \                         ring=True)   |
+   |    dense_pallas_block     > block_step     random  (NOMAD-ish)  |
+   |    sparse_jnp            /                 fixed(perms)         |
+   |    sparse_pallas        /                    |                  |
+   |         |                                    |  draw(key,t0,n,p)|
+   |         v                                    v                  |
+   |    inner_iteration(backend, ...)  <---  perms (n_epochs, p, p)  |
+   |         |     (driver.py: the ONE Eq.-8 inner iteration)        |
+   |         v                                                       |
+   |    epoch_body --> run_epochs: jitted lax.scan over epochs,      |
+   |                   DSOState DONATED (in-place epoch state)       |
+   +--------+-----------------------+----------------------+--------+
+            |                       |                       |
+        solve()                solve_serial()          ShardedDSO
+     (grid simulator,        (paper-exact p=1         (shard_map ring;
+      cyclic/random/fixed     pointwise reference)     ppermute for the
+      schedules, out-of-core                           cyclic schedule,
+      grids, eval hooks)                               all-gather for
+            |                       |                  general perms)
+            +-----------+-----------+-----------+------+
+                        v
+                  SolveResult(w, alpha, history, state)
+                        ^
+                        |  evaluation hooks (evaluate.py):
+                        |  problem_eval_hook (dense objectives) |
+                        |  make_csr_primal_eval (jitted chunked
+                        |  CSR matvec — out-of-core, no host numpy)
+
+Legacy entry points (``core.dso.run_dso_serial`` / ``run_dso_grid`` /
+``run_dso_grid_from_data``, ``core.dso_async.run_dso_random``,
+``core.dso_dist.ShardedDSO``) are thin wrappers over these layers and
+keep their exact trajectories.  New schedules register in
+``schedules.SCHEDULES``; new layouts/kernels register a ``TileBackend``
+— nothing else changes.
+"""
+
+from repro.engine.backends import (LEGACY_IMPLS, TileBackend, get_backend,
+                                   register_backend, registered_backends,
+                                   resolve_backend,
+                                   resolve_backend_for_layout)
+from repro.engine.data import (DSOState, GridData, TileData, as_tile_data,
+                               check_tile_stats, eta_schedule, gather_alpha,
+                               gather_w, init_state, init_state_data,
+                               make_grid_data, prob_meta, tile_dims)
+from repro.engine.driver import (SolveResult, inner_iteration, run_epoch,
+                                 run_epochs, solve, solve_serial,
+                                 warn_ragged_eval)
+from repro.engine.evaluate import make_csr_primal_eval, problem_eval_hook
+from repro.engine.schedules import (SCHEDULES, Schedule, cyclic_perms,
+                                    fixed_schedule, get_schedule)
+from repro.engine.update import block_tile_step, eq8_apply, sparse_tile_step
+
+__all__ = [
+    "LEGACY_IMPLS", "TileBackend", "get_backend", "register_backend",
+    "registered_backends", "resolve_backend", "resolve_backend_for_layout",
+    "DSOState", "GridData", "TileData", "as_tile_data", "check_tile_stats",
+    "eta_schedule", "gather_alpha", "gather_w", "init_state",
+    "init_state_data", "make_grid_data", "prob_meta", "tile_dims",
+    "SolveResult", "inner_iteration", "run_epoch", "run_epochs", "solve",
+    "solve_serial", "warn_ragged_eval", "make_csr_primal_eval",
+    "problem_eval_hook", "SCHEDULES", "Schedule", "cyclic_perms",
+    "fixed_schedule", "get_schedule", "block_tile_step", "eq8_apply",
+    "sparse_tile_step",
+]

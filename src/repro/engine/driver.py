@@ -1,0 +1,374 @@
+"""Driver layer: ONE jitted, state-donated epoch function behind every
+execution mode.
+
+``run_epochs`` scans the backend-parameterized ``epoch_body`` over a chunk
+of epochs with the ``DSOState`` donated (in-place update, one dispatch per
+evaluation chunk); ``solve`` wraps it in the evaluation-chunk loop shared
+by the grid simulator, the random-schedule runner, and the out-of-core
+path, and ``solve_serial`` drives the paper-exact pointwise epochs through
+the same chunk loop.  The ``shard_map`` ring (``core.dso_dist.ShardedDSO``)
+builds its per-device body from the same ``inner_iteration``.
+
+Trace-cost note: each distinct chunk length traces the scan once, so when
+``eval_every`` does not divide ``epochs`` the ragged final chunk costs one
+extra compile — ``warn_ragged_eval`` flags it (once per shape) with a
+divisor suggestion.
+"""
+
+from __future__ import annotations
+
+import functools
+import warnings
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.losses import get_loss
+from repro.core.regularizers import get_regularizer
+from repro.core.saddle import Problem, project_alpha
+from repro.engine.backends import (TileBackend, get_backend, resolve_backend,
+                                   resolve_backend_for_layout)
+from repro.engine.data import (DSOState, TileData, as_tile_data,
+                               check_tile_stats, eta_schedule, gather_alpha,
+                               gather_w, init_state_data, make_grid_data,
+                               prob_meta, tile_dims)
+from repro.engine.evaluate import problem_eval_hook
+from repro.engine.schedules import get_schedule
+from repro.sparse.format import density, make_sparse_grid_data
+
+Array = jax.Array
+
+
+class SolveResult(NamedTuple):
+    """Unified result of every driver: gathered (unpadded) iterates, the
+    evaluation-hook history, and the final grid state (None for serial)."""
+
+    w: Array
+    alpha: Array
+    history: list
+    state: Any = None
+
+
+# ----------------------------------------------------- inner iteration --
+
+
+def inner_iteration(backend: TileBackend, meta, col_nnz, blk_id, w_blk,
+                    gw_blk, alpha_q, ga_q, arrays_q, y_q, rn_q, tcn_q, trn_q,
+                    eta_t, row_batches: int):
+    """All tile steps of one processor on one active block — the single
+    backend-parameterized inner iteration of Algorithm 1.
+
+    ``meta`` = (lam, m, loss_name, reg_name, use_adagrad, w_lo, w_hi);
+    ``arrays_q`` is processor q's slice of ``TileData.arrays``;
+    ``tcn_q`` (row_batches, d_pad) / ``trn_q`` (p, mb) are its precomputed
+    tile sparsity statistics.  The block-level slicing is shared here; the
+    layout payload slice and the kernel are the backend's two hooks.
+    """
+    db = w_blk.shape[0]
+    blk_cols = blk_id * db
+    col_nnz_blk = jax.lax.dynamic_slice(col_nnz, (blk_cols,), (db,))
+    mb = y_q.shape[0]
+    trn_blk = jax.lax.dynamic_slice(trn_q, (blk_id, 0), (1, mb))[0]
+    tcn_blk = jax.lax.dynamic_slice(tcn_q, (0, blk_cols), (row_batches, db))
+    block = backend.select_block(arrays_q, blk_id, blk_cols, db)
+    return backend.block_step(meta, block, y_q, w_blk, alpha_q, gw_blk,
+                              ga_q, rn_q, col_nnz_blk, trn_blk, tcn_blk,
+                              eta_t, row_batches)
+
+
+# ---------------------------------------------------------- epoch body --
+
+
+def epoch_body(backend: TileBackend, data: TileData, state: DSOState, perm,
+               eta_t, meta, *, row_batches: int, p: int) -> DSOState:
+    """One epoch under an explicit ``(p, p)`` permutation schedule:
+    ``perm[r, q]`` = block owned by processor q at inner iteration r.
+    All p processors update their disjoint blocks simultaneously (vmap) —
+    Lemma 2's block-disjointness makes this equal to any serial order.
+    """
+
+    def inner(r, st: DSOState) -> DSOState:
+        blk_ids = perm[r]
+        # gather the w blocks each processor owns this inner iteration
+        w_owned = jnp.take(st.w_grid, blk_ids, axis=0)    # (p, db)
+        gw_owned = jnp.take(st.gw_grid, blk_ids, axis=0)
+
+        def per_q(blk_id, w_blk, gw_blk, a_q, ga_q, *rest):
+            # rest: the layout's data arrays (X_q | cols_q, vals_q),
+            # then y_q, rn_q, tcn_q, trn_q
+            arrays_q, (y_q, rn_q, tcn_q, trn_q) = rest[:-4], rest[-4:]
+            return inner_iteration(backend, meta, data.col_nnz, blk_id,
+                                   w_blk, gw_blk, a_q, ga_q, arrays_q, y_q,
+                                   rn_q, tcn_q, trn_q, eta_t, row_batches)
+
+        w_new, a_new, gw_new, ga_new = jax.vmap(per_q)(
+            blk_ids, w_owned, gw_owned, st.alpha, st.ga, *data.arrays,
+            data.yg, data.row_nnz_g, data.tile_col_nnz_g,
+            data.tile_row_nnz_g)
+        w_grid = st.w_grid.at[blk_ids].set(w_new)
+        gw_grid = st.gw_grid.at[blk_ids].set(gw_new)
+        return DSOState(w_grid, gw_grid, a_new, ga_new, st.epoch)
+
+    state = jax.lax.fori_loop(0, p, inner, state)
+    return state._replace(epoch=state.epoch + 1)
+
+
+_EPOCH_STATICS = ("backend", "loss_name", "reg_name", "use_adagrad",
+                  "row_batches", "p", "db")
+
+
+@functools.partial(jax.jit, static_argnames=_EPOCH_STATICS)
+def run_epoch(data: TileData, state: DSOState, perm, eta_t, lam, m, w_lo,
+              w_hi, *, backend, loss_name, reg_name, use_adagrad,
+              row_batches, p, db):
+    """One epoch, one dispatch (legacy / benchmark-baseline path)."""
+    meta = (lam, m, loss_name, reg_name, use_adagrad, w_lo, w_hi)
+    return epoch_body(get_backend(backend), data, state, perm, eta_t, meta,
+                      row_batches=row_batches, p=p)
+
+
+@functools.partial(jax.jit, static_argnames=_EPOCH_STATICS,
+                   donate_argnums=(1,))
+def run_epochs(data: TileData, state: DSOState, perms, etas, lam, m, w_lo,
+               w_hi, *, backend, loss_name, reg_name, use_adagrad,
+               row_batches, p, db):
+    """``len(etas)`` epochs in ONE dispatch: a ``lax.scan`` over
+    (permutation schedule, step size) pairs with the (w, alpha, gw, ga)
+    state donated, so epoch state is updated in place instead of
+    round-tripping host dispatch (and copies) per epoch.
+    ``perms``: (n_epochs, p, p) from the Schedule layer."""
+    be = get_backend(backend)
+    meta = (lam, m, loss_name, reg_name, use_adagrad, w_lo, w_hi)
+
+    def step(st, xs):
+        perm_t, eta_t = xs
+        st = epoch_body(be, data, st, perm_t, eta_t, meta,
+                        row_batches=row_batches, p=p)
+        return st, None
+
+    state, _ = jax.lax.scan(step, state, (perms, etas))
+    return state
+
+
+# --------------------------------------------------- ragged-eval warning --
+
+_RAGGED_WARNED: set = set()
+
+
+def warn_ragged_eval(epochs: int, eval_every: int, *, stacklevel: int = 3):
+    """Warn (once per (epochs, eval_every) shape) when the evaluation
+    chunking leaves a ragged final chunk: each distinct chunk length traces
+    the donated epoch scan once more, so the ragged tail costs one extra
+    compile.  Suggests the largest chunk that divides ``epochs``."""
+    if eval_every <= 0 or eval_every >= epochs or epochs % eval_every == 0:
+        return
+    key = (epochs, eval_every)
+    if key in _RAGGED_WARNED:
+        return
+    _RAGGED_WARNED.add(key)
+    div = next(k for k in range(min(eval_every, epochs), 0, -1)
+               if epochs % k == 0)
+    warnings.warn(
+        f"epochs={epochs} is not a multiple of eval_every={eval_every}: the "
+        f"ragged final chunk of {epochs % eval_every} epoch(s) triggers an "
+        f"extra lax.scan trace of the epoch driver; prefer a chunking that "
+        f"divides epochs (e.g. eval_every={div})",
+        RuntimeWarning, stacklevel=stacklevel)
+
+
+# ------------------------------------------------------------- solve() --
+
+
+def solve(source, *, backend="auto", schedule="cyclic", p: int = 4,
+          epochs: int = 10, eta0: float = 0.1, use_adagrad: bool = True,
+          row_batches: int = 1, alpha0: float = 0.0, eval_every: int = 1,
+          seed: int = 0, eval_hook="auto", scan_epochs: bool = True,
+          loss_name: str | None = None, reg_name: str | None = None,
+          lam: float | None = None, m: int | None = None,
+          d: int | None = None) -> SolveResult:
+    """The one epoch driver behind grid / random / out-of-core execution.
+
+    ``source`` is either a dense ``Problem`` (the grid data is built here,
+    laid out for the chosen backend) or pre-built grid data (``GridData`` /
+    ``SparseGridData`` / ``TileData`` — the out-of-core entry, which then
+    needs ``loss_name``/``reg_name``/``lam``/``m``/``d`` and fixes the
+    layout, so ``backend`` is a kernel choice).
+
+    ``backend`` — canonical name, legacy impl selector, or TileBackend;
+    ``schedule`` — "cyclic", "random", or a ``Schedule`` (e.g.
+    ``fixed_schedule(perms)``); ``eval_hook`` — ``hook(t, w, alpha) ->
+    dict`` appended to the history per evaluation chunk ("auto": Problem
+    objectives for a Problem source, no evaluation for data sources).
+
+    Epochs between evaluation points run as ONE donated-scan dispatch
+    (``run_epochs``); ``scan_epochs=False`` keeps the legacy
+    one-dispatch-per-epoch loop (benchmark baseline).  Identical math.
+    """
+    if eval_every < 1:
+        raise ValueError(f"eval_every must be >= 1, got {eval_every}")
+    sched = get_schedule(schedule)
+    if isinstance(source, Problem):
+        given = [k for k, v in (("loss_name", loss_name),
+                                ("reg_name", reg_name), ("lam", lam),
+                                ("m", m), ("d", d)) if v is not None]
+        if given:
+            raise ValueError(
+                f"{given} conflict with the Problem source (its own "
+                f"loss/reg/lam/shape are used); either drop them or pass "
+                f"pre-built grid data instead of the Problem")
+        prob = source
+        be = resolve_backend(backend, density(prob))
+        data = (make_sparse_grid_data(prob, p, row_batches)
+                if be.layout == "sparse"
+                else make_grid_data(prob, p, row_batches))
+        loss_name, reg_name = prob.loss_name, prob.reg_name
+        m, d = prob.m, prob.d
+        lam_f, m_f, _, _, _, w_lo, w_hi = prob_meta(prob)
+        if eval_hook == "auto":
+            eval_hook = problem_eval_hook(prob)
+    else:
+        data = source
+        missing = [k for k, v in (("loss_name", loss_name),
+                                  ("reg_name", reg_name), ("lam", lam),
+                                  ("m", m), ("d", d)) if v is None]
+        if missing:
+            raise ValueError(f"solving from pre-built grid data requires "
+                             f"{missing} (no Problem to read them from)")
+        be = resolve_backend_for_layout(backend,
+                                        as_tile_data(data).layout)
+        loss = get_loss(loss_name)
+        box = loss.w_box(lam) if loss.w_box is not None else np.inf
+        lam_f, m_f = jnp.float32(lam), jnp.float32(m)
+        w_lo, w_hi = jnp.float32(-box), jnp.float32(box)
+        if eval_hook == "auto":
+            eval_hook = None
+    check_tile_stats(data, row_batches)
+    tile = as_tile_data(data)
+    p_, _, db = tile_dims(tile)
+    state = init_state_data(loss_name, data, alpha0)
+    kw = dict(backend=be.name, loss_name=loss_name, reg_name=reg_name,
+              use_adagrad=use_adagrad, row_batches=row_batches, p=p_, db=db)
+
+    chunk = eval_every if eval_hook is not None else epochs
+    if scan_epochs:
+        warn_ragged_eval(epochs, chunk)
+    key = jax.random.PRNGKey(seed)
+    history = []
+    t = 0
+    while t < epochs:
+        n = min(chunk, epochs - t)
+        key, perms = sched.draw(key, t, n, p_)
+        etas = eta_schedule(eta0, t, n, use_adagrad)
+        if scan_epochs:
+            state = run_epochs(tile, state, perms, etas, lam_f, m_f,
+                               w_lo, w_hi, **kw)
+        else:
+            for k in range(n):
+                state = run_epoch(tile, state, perms[k], etas[k], lam_f,
+                                  m_f, w_lo, w_hi, **kw)
+        t += n
+        if eval_hook is not None:
+            history.append(eval_hook(t, gather_w(state, d),
+                                     gather_alpha(state, m)))
+    return SolveResult(gather_w(state, d), gather_alpha(state, m), history,
+                       state)
+
+
+# ------------------------------------------- paper-exact serial driver --
+
+
+def _coords(prob: Problem):
+    Xn = np.asarray(prob.X)
+    ii, jj = np.nonzero(Xn)
+    return (ii.astype(np.int32), jj.astype(np.int32),
+            Xn[ii, jj].astype(np.float32))
+
+
+@functools.partial(jax.jit, static_argnames=("loss_name", "reg_name", "m",
+                                             "use_adagrad"),
+                   donate_argnums=(5, 6, 7, 8))
+def _serial_epochs(ii, jj, vv, perms, etas, w, alpha, gw, ga, y, row_nnz,
+                   col_nnz, lam, w_lo, w_hi, *, loss_name, reg_name, m,
+                   use_adagrad):
+    """``len(etas)`` paper-exact pointwise epochs in one donated-scan
+    dispatch — the serial reference driven exactly like the grid engine.
+    ``perms``: (n_epochs, nnz) visit order per epoch."""
+    loss = get_loss(loss_name)
+    reg = get_regularizer(reg_name)
+
+    def body_factory(perm, eta_t):
+        def body(carry, k):
+            w, alpha, gw, ga = carry
+            i, j, x = ii[perm[k]], jj[perm[k]], vv[perm[k]]
+            wj, ai, yi = w[j], alpha[i], y[i]
+            # Eq. (8), simultaneous read of (w_j, alpha_i) — the Lemma 2 form
+            g_w = lam * reg.grad(wj) / col_nnz[j] - ai * x / m
+            g_a = (-loss.dual_grad(ai, yi) / (m * row_nnz[i]) - wj * x / m)
+            if use_adagrad:
+                gw_i = gw[j] + g_w * g_w
+                ga_i = ga[i] + g_a * g_a
+                dw = eta_t * g_w * jax.lax.rsqrt(gw_i + 1e-8)
+                da = eta_t * g_a * jax.lax.rsqrt(ga_i + 1e-8)
+                gw = gw.at[j].set(gw_i)
+                ga = ga.at[i].set(ga_i)
+            else:
+                dw, da = eta_t * g_w, eta_t * g_a
+            # App. B projections, applied to the touched coordinates
+            w = w.at[j].set(jnp.clip(wj - dw, w_lo, w_hi))
+            ai_new = jnp.squeeze(loss.project_alpha(ai + da, yi))
+            alpha = alpha.at[i].set(ai_new)
+            return (w, alpha, gw, ga), None
+        return body
+
+    def epoch(carry, xs):
+        perm, eta_t = xs
+        carry, _ = jax.lax.scan(body_factory(perm, eta_t), carry,
+                                jnp.arange(ii.shape[0]))
+        return carry, None
+
+    (w, alpha, gw, ga), _ = jax.lax.scan(epoch, (w, alpha, gw, ga),
+                                         (perms, etas))
+    return w, alpha, gw, ga
+
+
+def solve_serial(prob: Problem, epochs: int = 10, eta0: float = 0.1,
+                 seed: int = 0, use_adagrad: bool = True,
+                 alpha0: float = 0.0, eval_every: int = 1,
+                 eval_hook="auto") -> SolveResult:
+    """Paper-exact Algorithm 1 with p=1 (sequential pointwise updates),
+    driven through the engine's evaluation-chunk loop."""
+    if eval_every < 1:
+        raise ValueError(f"eval_every must be >= 1, got {eval_every}")
+    ii, jj, vv = _coords(prob)
+    ii, jj, vv = jnp.asarray(ii), jnp.asarray(jj), jnp.asarray(vv)
+    nnz = ii.shape[0]
+    w = jnp.zeros(prob.d, jnp.float32)
+    alpha = project_alpha(prob, jnp.full(prob.m, alpha0, jnp.float32))
+    gw = jnp.zeros_like(w)
+    ga = jnp.zeros_like(alpha)
+    loss = get_loss(prob.loss_name)
+    box = loss.w_box(prob.lam) if loss.w_box is not None else np.inf
+    hook = problem_eval_hook(prob) if eval_hook == "auto" else eval_hook
+    warn_ragged_eval(epochs, eval_every)
+    key = jax.random.PRNGKey(seed)
+    history = []
+    t = 0
+    while t < epochs:
+        n = min(eval_every, epochs - t)
+        perms = []
+        for _ in range(n):
+            key, sk = jax.random.split(key)
+            perms.append(jax.random.permutation(sk, nnz))
+        w, alpha, gw, ga = _serial_epochs(
+            ii, jj, vv, jnp.stack(perms), eta_schedule(eta0, t, n,
+                                                       use_adagrad),
+            w, alpha, gw, ga, prob.y, prob.row_nnz, prob.col_nnz,
+            jnp.float32(prob.lam), jnp.float32(-box), jnp.float32(box),
+            loss_name=prob.loss_name, reg_name=prob.reg_name, m=prob.m,
+            use_adagrad=use_adagrad)
+        t += n
+        if hook is not None:
+            history.append(hook(t, w, alpha))
+    return SolveResult(w, alpha, history, None)

@@ -1,0 +1,108 @@
+"""Schedule layer: per-inner-iteration block permutations.
+
+Algorithm 1's convergence proof only needs an *equivalent serial sequence
+of updates* (Lemma 2), which holds for ANY schedule that assigns, at each
+inner iteration, a permutation of blocks to processors (no shared row or
+column).  A schedule therefore reduces to a ``(n_epochs, p, p)`` int32
+array ``perms`` with ``perms[e, r, q]`` = the block processor q owns at
+inner iteration r of epoch e — each ``perms[e, r]`` a permutation of
+0..p-1.  The epoch driver consumes that array; the schedule only *draws*
+it, chunk by chunk, threading a PRNG key:
+
+  cyclic  — Algorithm 1's sigma_r(q) = (q + r) mod p; deterministic, and
+            ``ring=True``: the owner map advances by one ring step per
+            inner iteration, so the sharded driver can move w with a
+            ``ppermute`` (the paper's communication pattern).
+  random  — a uniformly random permutation per inner iteration, the
+            NOMAD-style execution of ``§6`` (previously ``dso_async.py``);
+            a general shuffle, so the sharded driver falls back to
+            all-gather + select.
+  fixed   — any explicit ``perms`` array (property tests, replaying a
+            recorded NOMAD trace).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Schedule(NamedTuple):
+    name: str
+    #: (key, t0, n, p) -> (key', perms (n, p, p)); t0 = epochs already run
+    draw: Callable
+    #: True when consecutive owner maps differ by one ring step (cyclic),
+    #: letting the sharded driver use ppermute instead of all-gather
+    ring: bool
+
+
+@functools.lru_cache(maxsize=64)
+def cyclic_perms(n: int, p: int):
+    """(n, p, p) cyclic schedule: perms[e, r, q] = (q + r) mod p.
+
+    Cached: the array is deterministic in (n, p) and the legacy per-epoch
+    dispatch path (``core.dso._grid_epoch``) asks for it every call — the
+    cache keeps that path free of repeated device dispatches.
+    """
+    r = jnp.arange(p, dtype=jnp.int32)
+    perm = (r[:, None] + r[None, :]) % p
+    return jnp.broadcast_to(perm, (n, p, p))
+
+
+def _draw_cyclic(key, t0, n, p):
+    return key, cyclic_perms(n, p)
+
+
+def _draw_random(key, t0, n, p):
+    # one vmapped draw for the chunk's (n, p) schedule keys — the SAME RNG
+    # stream as the legacy dso_async per-epoch permutation() calls, without
+    # n*p dispatches
+    chunk_keys = []
+    for _ in range(n):
+        key, sk = jax.random.split(key)
+        chunk_keys.append(jax.random.split(sk, p))
+    perms = jax.vmap(jax.vmap(
+        lambda k: jax.random.permutation(k, p)))(jnp.stack(chunk_keys))
+    return key, perms
+
+
+def fixed_schedule(perms, name: str = "fixed") -> Schedule:
+    """Schedule replaying an explicit ``(n_epochs, p, p)`` (or single-epoch
+    ``(p, p)``) permutation array — epoch t draws ``perms[t]``."""
+    perms = jnp.asarray(perms)
+    if perms.ndim == 2:
+        perms = perms[None]
+
+    def draw(key, t0, n, p):
+        if t0 + n > perms.shape[0]:
+            raise ValueError(
+                f"fixed schedule has {perms.shape[0]} epochs of "
+                f"permutations, epochs {t0}..{t0 + n} requested")
+        if perms.shape[1:] != (p, p):
+            raise ValueError(f"fixed schedule is for p={perms.shape[1]}, "
+                             f"grid has p={p}")
+        return key, perms[t0:t0 + n]
+
+    return Schedule(name, draw, ring=False)
+
+
+SCHEDULES = {
+    "cyclic": Schedule("cyclic", _draw_cyclic, ring=True),
+    "random": Schedule("random", _draw_random, ring=False),
+}
+
+
+def get_schedule(schedule) -> Schedule:
+    """Name or ``Schedule`` instance -> ``Schedule`` (ValueError on unknown)."""
+    if isinstance(schedule, Schedule):
+        return schedule
+    try:
+        return SCHEDULES[schedule]
+    except KeyError:
+        raise ValueError(
+            f"unknown schedule {schedule!r}: registered schedules are "
+            f"{sorted(SCHEDULES)} (or pass a Schedule, e.g. "
+            f"fixed_schedule(perms))") from None

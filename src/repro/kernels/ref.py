@@ -10,7 +10,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core.dso import block_tile_step, sparse_tile_step
+from repro.engine.update import block_tile_step, sparse_tile_step
 
 _NEG_INF = -1e30
 

@@ -236,11 +236,16 @@ def ingest_libsvm(path: str, n_features: int | None = None,
 
 def csr_primal_objective(csr: CSRMatrix, y, w, lam: float,
                          loss: str = "hinge", reg: str = "l2") -> float:
-    """P(w) evaluated through the CSR matvec — no densification."""
-    import jax.numpy as jnp
-    from repro.core.losses import get_loss
-    from repro.core.regularizers import get_regularizer
-    u = jnp.asarray(csr.matvec(w))
-    risk = jnp.mean(get_loss(loss).value(u, jnp.asarray(y)))
-    return float(lam * jnp.sum(get_regularizer(reg).value(jnp.asarray(w)))
-                 + risk)
+    """P(w) evaluated through a jitted, chunked, device-side CSR matvec —
+    no densification and no host-numpy round trip.
+
+    One-shot convenience over ``engine.evaluate.make_csr_primal_eval``;
+    callers evaluating repeatedly (e.g. an eval loop over epochs) should
+    build the hook once and reuse it, so the CSR stream is staged to
+    device a single time.
+    """
+    # function-local import: the engine imports sparse.format at module
+    # level, so importing it here (not at module scope) keeps the package
+    # import order acyclic whichever side loads first
+    from repro.engine.evaluate import make_csr_primal_eval
+    return float(make_csr_primal_eval(csr, y, lam, loss, reg).primal(w))

@@ -267,7 +267,7 @@ def test_resolve_impl_auto_threshold():
         == ("dense", "jnp")
     assert resolve_impl("sparse_pallas", 0.5) == ("sparse", "pallas")
     assert resolve_impl("pallas", 0.001) == ("dense", "pallas")
-    with pytest.raises(AssertionError):
+    with pytest.raises(ValueError, match="registered backends"):
         resolve_impl("nope", 0.1)
 
 
