@@ -1,5 +1,5 @@
 """§Perf for the paper's own technique, tracked across PRs via the repo-root
-``BENCH_dso.json``. Three comparisons:
+``BENCH_dso.json``. Five comparisons:
 
   1. ``epoch_scan_vs_loop`` — the donated ``lax.scan`` over epochs
      (one dispatch per evaluation chunk, state updated in place) vs the
@@ -21,6 +21,17 @@
      8*mb*K bytes, nnz-proportional.  Gate: >= 5x traffic reduction.  A
      measured dense-vs-sparse epoch wall-clock on CPU rides along as trend
      (interpret/XLA-CPU gathers are not the TPU bandwidth story).
+
+  5. ``dso_sparse_skewed`` (``--sparse``) — uniform max-K block-ELL vs the
+     K-bucketed ragged layout at power-law column popularity (the paper's
+     webspam/kdda regime, where a few tiles are 10-50x denser than the
+     median and uniform padding pays the worst tile's K everywhere;
+     4096x4096 at density 0.05 on the p=8 grid, tile-K skew ~11x).
+     Gate: the bucketed layout streams >= 3x fewer packed-tile HBM bytes
+     per tile step AND keeps >= 3x fewer resident grid bytes, with the
+     bucketed trajectory equal to ``sparse_jnp`` to <= 1e-5 on every
+     loss/regularizer pair (checked on a small skewed problem here; the
+     full backend x schedule matrix lives in tests/test_bucketed.py).
 
 Legacy paper-comparison section (pointwise vs tile) runs with ``--full``.
 
@@ -268,6 +279,99 @@ def bench_sparse_vs_dense(m=4096, d=4096, density=0.05, p=4,
     return out
 
 
+def _powerlaw_csr(m, d, density, alpha, seed=0):
+    """Power-law column-popularity CSR (webspam/kdda-like): fixed nnz per
+    row over the shared skew model (``data.synthetic.powerlaw_columns``)."""
+    import numpy as np
+    from repro.data.synthetic import powerlaw_columns
+    from repro.sparse.format import CSRMatrix
+
+    rng = np.random.default_rng(seed)
+    k = max(1, int(density * d))
+    cols = powerlaw_columns(rng, m, d, k, alpha)
+    return CSRMatrix(
+        indptr=np.arange(m + 1, dtype=np.int64) * k,
+        indices=cols.reshape(-1).astype(np.int32),
+        values=rng.normal(0, 1, m * k).astype(np.float32),
+        shape=(m, d))
+
+
+def bench_bucketed_skewed(m=4096, d=4096, density=0.05, alpha=1.3, p=8,
+                          traj_m=96, traj_d=64, traj_epochs=3):
+    """Uniform max-K block-ELL vs K-bucketed ragged layout at power-law
+    column popularity.  Both layouts are built by the real tilers from the
+    same CSR (the dense matrix never exists), so K, the bucket widths, and
+    hence the bytes are the ones the runner would really use.
+
+    Gate: >= 3x fewer packed-tile HBM bytes per tile step AND >= 3x fewer
+    resident grid bytes, with bucketed == sparse_jnp trajectories to
+    <= 1e-5 on every loss/regularizer pair (small skewed problem).
+    """
+    import numpy as np
+    from repro.core.dso import run_dso_grid
+    from repro.data.synthetic import make_skewed_classification
+    from repro.sparse.format import (bucketed_grid_from_csr, grid_nbytes,
+                                     packed_bytes_per_step,
+                                     sparse_grid_from_csr, tile_k_skew)
+
+    # ---- analytic traffic + resident gates at paper-like scale --------
+    rng = np.random.default_rng(0)
+    csr = _powerlaw_csr(m, d, density, alpha, seed=0)
+    y = np.where(rng.random(m) < 0.5, 1.0, -1.0).astype(np.float32)
+    uniform = sparse_grid_from_csr(csr, y, p)
+    bucketed = bucketed_grid_from_csr(csr, y, p)
+    mb, db = uniform.mb, uniform.db
+
+    f = 4  # float32/int32 bytes
+    vec_bytes = f * (5 * mb + 4 * db) + f * (2 * mb + 2 * db)
+    uni_step = packed_bytes_per_step(uniform) + vec_bytes
+    buck_step = packed_bytes_per_step(bucketed) + vec_bytes
+    traffic_ratio = uni_step / buck_step
+    resident_ratio = grid_nbytes(uniform) / grid_nbytes(bucketed)
+
+    # ---- trajectory equivalence on a small skewed problem -------------
+    pairs = [("hinge", "l2"), ("hinge", "l1"), ("logistic", "l2"),
+             ("logistic", "l1"), ("square", "l2"), ("square", "l1")]
+    max_diff = 0.0
+    for loss, reg in pairs:
+        prob = make_skewed_classification(m=traj_m, d=traj_d, density=0.15,
+                                          alpha=alpha, loss=loss, lam=1e-3,
+                                          seed=3, reg=reg)
+        w1, a1, _ = run_dso_grid(prob, p=p, epochs=traj_epochs, eta0=0.5,
+                                 impl="sparse")
+        w2, a2, _ = run_dso_grid(prob, p=p, epochs=traj_epochs, eta0=0.5,
+                                 impl="sparse_bucketed_jnp")
+        max_diff = max(max_diff,
+                       float(np.abs(np.asarray(w1) - np.asarray(w2)).max()),
+                       float(np.abs(np.asarray(a1) - np.asarray(a2)).max()))
+
+    out = {
+        "problem": {"m": m, "d": d, "density": density, "alpha": alpha,
+                    "p": p, "nnz": csr.nnz, "tile": [mb, db],
+                    "uniform_K": uniform.K,
+                    "bucket_ks": list(bucketed.bucket_ks),
+                    "tile_k_skew": tile_k_skew(uniform.k_per_tile)},
+        "resident_bytes": {"uniform_grid": grid_nbytes(uniform),
+                           "bucketed_grid": grid_nbytes(bucketed)},
+        "uniform_bytes_per_step": uni_step,
+        "bucketed_bytes_per_step": buck_step,
+        "gate": {
+            "metric": "packed-tile HBM bytes per tile step AND resident "
+                      "grid bytes, uniform max-K block-ELL vs K-bucketed "
+                      "ragged layout at power-law column popularity; plus "
+                      "bucketed == sparse_jnp trajectory to <= 1e-5 on "
+                      "all loss/reg pairs",
+            "threshold": 3.0,
+            "traffic_ratio_uniform_over_bucketed": traffic_ratio,
+            "resident_ratio_uniform_over_bucketed": resident_ratio,
+            "trajectory_max_diff": max_diff,
+        },
+    }
+    out["gate"]["pass"] = bool(traffic_ratio >= 3.0 and resident_ratio >= 3.0
+                               and max_diff <= 1e-5)
+    return out
+
+
 def bench_paper_comparison():
     """Legacy section: paper-faithful pointwise DSO vs TPU-native tiles."""
     from repro.core.dso import run_dso_grid, run_dso_serial
@@ -312,6 +416,9 @@ def main(argv=None):
             "dso_sparse": bench_sparse_vs_dense(
                 m=256, d=256, density=0.05, p=4, timed_m=64, timed_d=32,
                 epochs=2),
+            "dso_sparse_skewed": bench_bucketed_skewed(
+                m=256, d=256, density=0.05, p=4, traj_m=48, traj_d=32,
+                traj_epochs=1),
         }
         print(json.dumps(out, indent=1))
         return
@@ -323,6 +430,7 @@ def main(argv=None):
     }
     if args.sparse:
         out["dso_sparse"] = bench_sparse_vs_dense()
+        out["dso_sparse_skewed"] = bench_bucketed_skewed()
     if args.full:
         out["paper_comparison"] = bench_paper_comparison()
 

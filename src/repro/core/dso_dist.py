@@ -32,13 +32,12 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
 from repro.core.saddle import Problem, duality_gap, primal_objective
-from repro.engine.backends import get_backend, resolve_backend
+from repro.engine.backends import get_backend
 from repro.engine.data import (as_tile_data, check_tile_stats, eta_schedule,
-                               init_state, make_grid_data, prob_meta,
-                               tile_dims)
-from repro.engine.driver import inner_iteration, warn_ragged_eval
+                               init_state, prob_meta, tile_dims)
+from repro.engine.driver import (inner_iteration, resolve_backend_and_build,
+                                 warn_ragged_eval)
 from repro.engine.schedules import get_schedule
-from repro.sparse.format import density, make_sparse_grid_data
 
 
 def make_dso_mesh(p: int | None = None) -> Mesh:
@@ -51,7 +50,8 @@ def make_dso_mesh(p: int | None = None) -> Mesh:
 
 def _epoch_shardmap(mesh: Mesh, p: int, db: int, loss_name: str,
                     reg_name: str, use_adagrad: bool, row_batches: int,
-                    *, backend_name: str = "dense_jnp", ring: bool = True):
+                    *, backend_name: str = "dense_jnp", ring: bool = True,
+                    n_data: int | None = None):
     """Builds the jitted sharded multi-epoch function for a fixed problem
     shape: ``etas`` (one step size per epoch) and ``perms`` (the schedule's
     (n, p, p) block permutations) drive a ``lax.scan`` over epochs INSIDE
@@ -66,7 +66,10 @@ def _epoch_shardmap(mesh: Mesh, p: int, db: int, loss_name: str,
     device-q-holds-block-q invariant.
     """
     backend = get_backend(backend_name)
-    n_data = 2 if backend.layout == "sparse" else 1
+    if n_data is None:
+        # the bucketed layout's payload length is data-dependent (two
+        # arrays per K-bucket + the index maps) — callers pass it in
+        n_data = 2 if backend.layout == "sparse" else 1
 
     def epochs_body(*args):
         arrays = args[:n_data]
@@ -157,9 +160,11 @@ class ShardedDSO:
     """Driver object holding device-placed state for Algorithm 1.
 
     ``impl`` accepts any registered engine backend (or the legacy
-    selectors, including ``"auto"`` with the same density threshold as
+    selectors, including ``"auto"`` with the same density threshold — and
+    the same per-tile-K skew upgrade to the bucketed ragged layout — as
     ``run_dso_grid``); ``schedule`` accepts any engine schedule — "cyclic"
-    keeps the paper's ring, "random" is the NOMAD-style shuffle.
+    keeps the paper's ring, "random" is the NOMAD-style shuffle, "lpt"
+    load-balances the per-tile nnz across workers per inner iteration.
     """
 
     def __init__(self, prob: Problem, mesh: Mesh | None = None,
@@ -169,13 +174,11 @@ class ShardedDSO:
         self.prob = prob
         self.mesh = mesh or make_dso_mesh()
         self.p = self.mesh.devices.size
-        self.backend = resolve_backend(impl, density(prob))
-        self.sparse = self.backend.layout == "sparse"
+        self.backend, data = resolve_backend_and_build(prob, impl, self.p,
+                                                       row_batches)
+        self.sparse = self.backend.layout != "dense"
         self.schedule = get_schedule(schedule)
         self.key = jax.random.PRNGKey(seed)
-        data = (make_sparse_grid_data(prob, self.p, row_batches)
-                if self.sparse
-                else make_grid_data(prob, self.p, row_batches))
         check_tile_stats(data, row_batches)
         tile = as_tile_data(data)
         _, _, self.db = tile_dims(tile)
@@ -200,6 +203,10 @@ class ShardedDSO:
         self.gw = jax.device_put(state.gw_grid, shard)
         self.alpha = jax.device_put(state.alpha, shard)
         self.ga = jax.device_put(state.ga, shard)
+        # balanced schedules (lpt) weigh the per-tile nnz
+        self._tile_nnz = (np.asarray(tile.tile_row_nnz_g).sum(axis=-1)
+                          if self.schedule.balanced else None)
+        n_data = len(self._data_shards)
         # the sharded device_put copies above are now the only live data;
         # the builder's unsharded arrays go out of scope here so resident
         # memory stays one grid (nnz-proportional on the sparse path)
@@ -208,13 +215,15 @@ class ShardedDSO:
         self._epochs_fn = _epoch_shardmap(
             self.mesh, self.p, self.db, prob.loss_name, prob.reg_name,
             use_adagrad, row_batches, backend_name=self.backend.name,
-            ring=self.schedule.ring)
+            ring=self.schedule.ring, n_data=n_data)
 
     def run_epochs(self, n: int, eta0: float = 0.1):
         """Run ``n`` epochs in one donated-scan dispatch."""
         etas = eta_schedule(eta0, self.epochs_done, n, self.use_adagrad)
+        ctx = ({"tile_nnz": self._tile_nnz} if self.schedule.balanced
+               else {})
         self.key, perms = self.schedule.draw(self.key, self.epochs_done, n,
-                                             self.p)
+                                             self.p, **ctx)
         self.w, self.gw, self.alpha, self.ga = self._epochs_fn(
             *self._data_shards, self.yg, self.rng_, self.tcn, self.trn,
             self.col_nnz, self.w, self.gw, self.alpha, self.ga, etas,

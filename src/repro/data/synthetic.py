@@ -32,6 +32,48 @@ def make_classification(m: int = 2000, d: int = 500, density: float = 0.05,
     return make_problem(X, y, lam, loss=loss, reg=reg)
 
 
+def powerlaw_columns(rng, m: int, d: int, nnz_per_row: int,
+                     alpha: float) -> np.ndarray:
+    """(m, nnz_per_row) column indices, ascending within each row, with
+    column j drawn ~ (j+1)^-alpha — the ONE power-law skew model shared by
+    the skewed Problem generator below and the benchmark's CSR generator
+    (benchmarks/dso_perf.py), so tests and gates measure the same
+    distribution."""
+    pop = np.arange(1, d + 1, dtype=np.float64) ** (-alpha)
+    pop /= pop.sum()
+    cols = np.empty((m, nnz_per_row), np.int64)
+    for i in range(m):
+        cols[i] = np.sort(rng.choice(d, size=nnz_per_row, replace=False,
+                                     p=pop))
+    return cols
+
+
+def make_skewed_classification(m: int = 2000, d: int = 500,
+                               density: float = 0.05, alpha: float = 1.1,
+                               loss: str = "hinge", lam: float = 1e-4,
+                               noise: float = 0.1, seed: int = 0,
+                               reg: str = "l2") -> Problem:
+    """Power-law column popularity (webspam/kdda-like): column j is drawn
+    with probability ~ (j+1)^-alpha, so a few grid tiles are 10-50x denser
+    than the median — the regime where uniform max-K block-ELL padding
+    dominates and the K-bucketed ragged layout wins.  Same planted-truth
+    labeling as ``make_classification``.
+    """
+    rng = np.random.default_rng(seed)
+    X = np.zeros((m, d), np.float32)
+    nnz_per_row = max(1, int(density * d))
+    cols = powerlaw_columns(rng, m, d, nnz_per_row, alpha)
+    for i in range(m):
+        X[i, cols[i]] = rng.normal(0, 1, size=nnz_per_row) \
+            .astype(np.float32)
+    norms = np.linalg.norm(X, axis=1, keepdims=True)
+    X /= np.maximum(norms, 1e-8)
+    w_star = rng.normal(0, 1, size=d).astype(np.float32)
+    margin = X @ w_star + noise * rng.normal(0, 1, size=m).astype(np.float32)
+    y = np.where(margin >= 0, 1.0, -1.0).astype(np.float32)
+    return make_problem(X, y, lam, loss=loss, reg=reg)
+
+
 def make_dense_classification(m: int = 2000, d: int = 128, loss: str = "hinge",
                               lam: float = 1e-4, noise: float = 0.1,
                               seed: int = 0) -> Problem:

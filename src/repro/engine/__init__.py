@@ -9,25 +9,36 @@ old {dense,sparse} x {jnp,pallas} x {cyclic,random} x {grid,sharded}
 code-path *product* into a *sum*:
 
       Problem ----------------------+        libsvm file
-        | make_grid_data /          |          | sparse.ingest (2-pass)
-        | make_sparse_grid_data     |          v
-        v                           |        CSRMatrix --- sparse_grid_from_csr
-   GridData | SparseGridData <------+--------------+
-        |
+        | make_grid_data /          |          | sparse.ingest (2-pass,
+        | make_sparse_grid_data /   |          |  pass 1 records k_per_tile)
+        | make_bucketed_grid_data   |          v
+        v                           |        CSRMatrix -- sparse_grid_from_csr
+   GridData | SparseGridData <------+------------+    \- bucketed_grid_from_csr
+            | BucketedGridData (K-bucketed ragged tiles: <= MAX_K_BUCKETS
+        |     pow2 widths, rectangular per bucket; impl="auto" picks it
+        |     when tile_k_skew >= BUCKET_SKEW_THRESHOLD in the sparse regime)
         |  as_tile_data
         v
-   TileData  (the common pytree: arrays=(Xg,) | (cols_g, vals_g),
+   TileData  (the common pytree: arrays=(Xg,) | (cols_g, vals_g) |
+        |     per-bucket (cols, vals)... + (bucket_id, bucket_pos),
         |     labels, nnz statistics, padding masks)
         |
    +----+------------------- ENGINE ---------------------------------+
    |                                                                 |
    |  backends.py — TileBackend registry      schedules.py           |
-   |    dense_jnp            \                  cyclic  (sigma_r,    |
-   |    dense_pallas_fused    \                         ring=True)   |
-   |    dense_pallas_block     > block_step     random  (NOMAD-ish)  |
-   |    sparse_jnp            /                 fixed(perms)         |
-   |    sparse_pallas        /                    |                  |
-   |         |                                    |  draw(key,t0,n,p)|
+   |    dense_jnp              \                cyclic  (sigma_r,    |
+   |    dense_pallas_fused      \                       ring=True)   |
+   |    dense_pallas_block       \              random  (NOMAD-ish)  |
+   |    sparse_jnp                > block_step  lpt     (greedy LPT  |
+   |    sparse_pallas            /                      Latin square |
+   |    sparse_bucketed_jnp     /                       over per-tile|
+   |    sparse_bucketed_pallas /                        nnz costs;   |
+   |      (lax.switch on the   |                        balanced=True|
+   |       tile's K-bucket)    |                        -> draw gets |
+   |         |                 |                        tile_nnz)    |
+   |         |                 |                fixed(perms)         |
+   |         |                 |                  |  draw(key,t0,n,p |
+   |         |                 |                  |       [,tile_nnz])
    |         v                                    v                  |
    |    inner_iteration(backend, ...)  <---  perms (n_epochs, p, p)  |
    |         |     (driver.py: the ONE Eq.-8 inner iteration)        |
@@ -72,7 +83,8 @@ from repro.engine.driver import (SolveResult, inner_iteration, run_epoch,
                                  warn_ragged_eval)
 from repro.engine.evaluate import make_csr_primal_eval, problem_eval_hook
 from repro.engine.schedules import (SCHEDULES, Schedule, cyclic_perms,
-                                    fixed_schedule, get_schedule)
+                                    fixed_schedule, get_schedule,
+                                    lpt_latin_square)
 from repro.engine.update import block_tile_step, eq8_apply, sparse_tile_step
 
 __all__ = [
@@ -84,6 +96,6 @@ __all__ = [
     "SolveResult", "inner_iteration", "run_epoch", "run_epochs", "solve",
     "solve_serial", "warn_ragged_eval", "make_csr_primal_eval",
     "problem_eval_hook", "SCHEDULES", "Schedule", "cyclic_perms",
-    "fixed_schedule", "get_schedule", "block_tile_step", "eq8_apply",
-    "sparse_tile_step",
+    "fixed_schedule", "get_schedule", "lpt_latin_square",
+    "block_tile_step", "eq8_apply", "sparse_tile_step",
 ]

@@ -16,14 +16,26 @@ backend exposes the same two hooks, so the epoch driver is written once:
 
 Registered backends:
 
-  dense_jnp          — jnp mat-vec tile steps, scanned over row batches
-  dense_pallas_fused — fused single-pass Pallas tile-step kernel, one
-                       launch per row batch (X streamed once per step)
-  dense_pallas_block — block-step Pallas kernel: the row-batch sub-scan
-                       folded into the kernel grid, ONE launch per block
-                       (falls back to the fused-kernel scan off-shape)
-  sparse_jnp         — gather/scatter tile steps on block-ELL tiles
-  sparse_pallas      — gather-based Pallas sparse kernel
+  dense_jnp             — jnp mat-vec tile steps, scanned over row batches
+  dense_pallas_fused    — fused single-pass Pallas tile-step kernel, one
+                          launch per row batch (X streamed once per step)
+  dense_pallas_block    — block-step Pallas kernel: the row-batch sub-scan
+                          folded into the kernel grid, ONE launch per block
+                          (falls back to the fused-kernel scan off-shape)
+  sparse_jnp            — gather/scatter tile steps on block-ELL tiles
+  sparse_pallas         — gather-based Pallas sparse kernel
+  sparse_bucketed_jnp   — sparse_jnp tile steps on the K-bucketed ragged
+                          layout: a ``lax.switch`` over the tile's bucket
+                          runs the step at that bucket's packed width
+  sparse_bucketed_pallas — same dispatch over the sparse Pallas kernel
+
+Bucketed dispatch note: inside ``shard_map`` (one device per processor)
+the active tile's bucket index is a scalar, so the switch executes ONE
+branch and only that bucket's ``mb * K_bucket`` bytes stream from HBM —
+the layout's whole point.  Under the single-device grid simulator's vmap
+the switch lowers to a select that evaluates every branch; the simulator
+trades that compute for fidelity, the bytes claim belongs to the sharded
+driver (and to the analytic gate in ``benchmarks/dso_perf.py``).
 
 Legacy ``impl`` selectors ("jnp", "pallas", "sparse", "sparse_pallas",
 "auto") resolve through ``resolve_backend``; unknown names raise
@@ -38,7 +50,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.engine.update import block_tile_step, sparse_tile_step
-from repro.sparse.format import SPARSE_DENSITY_THRESHOLD
+from repro.sparse.format import (BUCKET_SKEW_THRESHOLD,
+                                 SPARSE_DENSITY_THRESHOLD)
 
 
 class TileBackend(NamedTuple):
@@ -62,6 +75,13 @@ def _sparse_select(arrays_q, blk_id, blk_cols, db):
     _, mb, K = cols_q.shape
     return (jax.lax.dynamic_slice(cols_q, (blk_id, 0, 0), (1, mb, K))[0],
             jax.lax.dynamic_slice(vals_q, (blk_id, 0, 0), (1, mb, K))[0])
+
+
+def _bucketed_select(arrays_q, blk_id, blk_cols, db):
+    # the bucketed tile slice is width-dependent, so the whole per-bucket
+    # payload rides through to the block step's lax.switch (which knows
+    # each branch's static K); only the active block id is added here
+    return tuple(arrays_q) + (blk_id,)
 
 
 # ------------------------------------------------------------ block steps --
@@ -142,6 +162,49 @@ _sparse_jnp_block_step = _make_jnp_block_step(_sparse_slice,
                                               sparse_tile_step)
 
 
+def _make_bucketed_block_step(sparse_block_step):
+    """Bucket dispatch over any sparse-layout block step: look up the
+    active tile's (bucket, slot), then ``lax.switch`` into the branch that
+    slices that bucket's (mb, K_k) tile and runs the wrapped step on it.
+    Branch outputs are K-independent (the updated state vectors), so the
+    switch is shape-legal even though every bucket has a different width.
+    """
+
+    def step(meta, block, y_q, w_blk, alpha_q, gw_blk, ga_q, rn_q,
+             col_nnz_blk, trn_blk, tcn_blk, eta_t, row_batches):
+        *payload, bid_q, pos_q, blk_id = block
+        n_buckets = len(payload) // 2
+        bid = jax.lax.dynamic_index_in_dim(bid_q, blk_id, keepdims=False)
+        pos = jax.lax.dynamic_index_in_dim(pos_q, blk_id, keepdims=False)
+        operands = (pos, y_q, w_blk, alpha_q, gw_blk, ga_q, rn_q,
+                    col_nnz_blk, trn_blk, tcn_blk, eta_t)
+
+        def make_branch(k):
+            cols_k, vals_k = payload[2 * k], payload[2 * k + 1]
+
+            def branch(ops_):
+                (pos, y_q, w_blk, alpha_q, gw_blk, ga_q, rn_q,
+                 col_nnz_blk, trn_blk, tcn_blk, eta_t) = ops_
+                _, mb, K = cols_k.shape
+                # a foreign-bucket pos is clamped by dynamic_slice; the
+                # garbage branch result is discarded by the switch/select
+                cols_blk = jax.lax.dynamic_slice(
+                    cols_k, (pos, 0, 0), (1, mb, K))[0]
+                vals_blk = jax.lax.dynamic_slice(
+                    vals_k, (pos, 0, 0), (1, mb, K))[0]
+                return sparse_block_step(
+                    meta, (cols_blk, vals_blk), y_q, w_blk, alpha_q,
+                    gw_blk, ga_q, rn_q, col_nnz_blk, trn_blk, tcn_blk,
+                    eta_t, row_batches)
+
+            return branch
+
+        return jax.lax.switch(
+            bid, [make_branch(k) for k in range(n_buckets)], operands)
+
+    return step
+
+
 def _sparse_pallas_block_step(meta, block, y_q, w_blk, alpha_q, gw_blk, ga_q,
                               rn_q, col_nnz_blk, trn_blk, tcn_blk, eta_t,
                               row_batches):
@@ -174,8 +237,8 @@ LEGACY_IMPLS = {
 
 
 def register_backend(backend: TileBackend) -> TileBackend:
-    if backend.layout not in ("dense", "sparse"):
-        raise ValueError(f"backend layout must be dense|sparse, "
+    if backend.layout not in ("dense", "sparse", "bucketed"):
+        raise ValueError(f"backend layout must be dense|sparse|bucketed, "
                          f"got {backend.layout!r}")
     _BACKENDS[backend.name] = backend
     return backend
@@ -202,13 +265,20 @@ def get_backend(name) -> TileBackend:
         raise _unknown(name) from None
 
 
-def resolve_backend(impl, density: float | None = None) -> TileBackend:
-    """``impl`` selector (canonical or legacy) + problem density -> backend.
+def resolve_backend(impl, density: float | None = None, *,
+                    k_skew: float | None = None) -> TileBackend:
+    """``impl`` selector (canonical or legacy) + problem stats -> backend.
 
     ``auto`` picks the sparse layout when the problem density is below
     ``sparse.format.SPARSE_DENSITY_THRESHOLD`` (the paper's datasets are
-    well below it; dense synthetic ones are not).  Unknown names raise
-    ``ValueError`` listing the registry — nothing falls through silently.
+    well below it; dense synthetic ones are not); within the sparse
+    regime, a per-tile-K skew (``sparse.format.tile_k_skew``) at or above
+    ``BUCKET_SKEW_THRESHOLD`` upgrades to the K-bucketed ragged layout
+    (power-law feature distributions, where uniform max-K padding
+    dominates the packed bytes).  ``k_skew=None`` means the caller did not
+    probe the skew — ``auto`` then stays on the uniform sparse layout.
+    Unknown names raise ``ValueError`` listing the registry — nothing
+    falls through silently.
     """
     if isinstance(impl, TileBackend):
         return impl
@@ -216,12 +286,25 @@ def resolve_backend(impl, density: float | None = None) -> TileBackend:
         if density is None:
             raise ValueError("impl='auto' needs the problem density to pick "
                              "a layout; pass density= or a concrete backend")
-        name = ("sparse_jnp" if density < SPARSE_DENSITY_THRESHOLD
-                else "dense_jnp")
+        if density >= SPARSE_DENSITY_THRESHOLD:
+            name = "dense_jnp"
+        elif k_skew is not None and k_skew >= BUCKET_SKEW_THRESHOLD:
+            name = "sparse_bucketed_jnp"
+        else:
+            name = "sparse_jnp"
         return _BACKENDS[name]
     if impl in LEGACY_IMPLS:
         return _BACKENDS[LEGACY_IMPLS[impl]]
     return get_backend(impl)
+
+
+#: kernel selector x data layout -> canonical backend
+_LAYOUT_KERNELS = {
+    "jnp": {"dense": "dense_jnp", "sparse": "sparse_jnp",
+            "bucketed": "sparse_bucketed_jnp"},
+    "pallas": {"dense": "dense_pallas_block", "sparse": "sparse_pallas",
+               "bucketed": "sparse_bucketed_pallas"},
+}
 
 
 def resolve_backend_for_layout(impl, layout: str) -> TileBackend:
@@ -233,10 +316,9 @@ def resolve_backend_for_layout(impl, layout: str) -> TileBackend:
     """
     if not isinstance(impl, TileBackend):
         if impl in ("auto", "jnp"):
-            return _BACKENDS[f"{layout}_jnp"]
+            return _BACKENDS[_LAYOUT_KERNELS["jnp"][layout]]
         if impl == "pallas":
-            return _BACKENDS["dense_pallas_block" if layout == "dense"
-                             else "sparse_pallas"]
+            return _BACKENDS[_LAYOUT_KERNELS["pallas"][layout]]
     backend = resolve_backend(impl)
     if backend.layout != layout:
         raise ValueError(
@@ -257,3 +339,9 @@ register_backend(TileBackend("sparse_jnp", "sparse", _sparse_select,
                              _sparse_jnp_block_step))
 register_backend(TileBackend("sparse_pallas", "sparse", _sparse_select,
                              _sparse_pallas_block_step))
+register_backend(TileBackend(
+    "sparse_bucketed_jnp", "bucketed", _bucketed_select,
+    _make_bucketed_block_step(_sparse_jnp_block_step)))
+register_backend(TileBackend(
+    "sparse_bucketed_pallas", "bucketed", _bucketed_select,
+    _make_bucketed_block_step(_sparse_pallas_block_step)))

@@ -1,12 +1,15 @@
 """Grid state and the common ``TileData`` pytree consumed by every backend.
 
-The p x p DSO grid exists in two layouts — dense row shards (``GridData``)
-and packed block-ELL tiles (``sparse.format.SparseGridData``).  The engine
-does not care which: ``as_tile_data`` converts either into a ``TileData``
-whose ``arrays`` field carries the layout payload (``(Xg,)`` dense,
-``(cols_g, vals_g)`` sparse) next to the layout-independent labels,
-scaling statistics, and padding masks.  Every backend's block step and the
-single epoch driver consume only ``TileData``.
+The p x p DSO grid exists in three layouts — dense row shards
+(``GridData``), uniform-K packed block-ELL tiles
+(``sparse.format.SparseGridData``), and K-bucketed ragged tiles
+(``sparse.format.BucketedGridData``).  The engine does not care which:
+``as_tile_data`` converts any of them into a ``TileData`` whose ``arrays``
+field carries the layout payload (``(Xg,)`` dense, ``(cols_g, vals_g)``
+sparse, per-bucket ``(cols, vals)`` pairs + the (p, p) bucket index maps
+for bucketed) next to the layout-independent labels, scaling statistics,
+and padding masks.  Every backend's block step and the single epoch driver
+consume only ``TileData``.
 """
 
 from __future__ import annotations
@@ -18,7 +21,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.losses import get_loss
-from repro.sparse.format import SparseGridData, pad_to_multiple
+from repro.sparse.format import (BucketedGridData, SparseGridData,
+                                 pad_to_multiple)
 
 Array = jax.Array
 
@@ -50,13 +54,15 @@ class TileData(NamedTuple):
     """Layout-agnostic view of the grid: the one pytree every backend sees.
 
     ``arrays`` is the layout payload — ``(Xg,)`` for the dense backends,
-    ``(cols_g, vals_g)`` for the block-ELL sparse backends; everything else
-    is identical between layouts (and identical in VALUE too: the sparse
-    tiler reproduces ``make_grid_data``'s statistics exactly, which is what
-    makes the trajectories match across backends).
+    ``(cols_g, vals_g)`` for the block-ELL sparse backends, and
+    ``(cols_0, vals_0, ..., cols_{B-1}, vals_{B-1}, bucket_id,
+    bucket_pos)`` for the K-bucketed ragged backends; everything else is
+    identical between layouts (and identical in VALUE too: all tilers
+    reproduce ``make_grid_data``'s statistics exactly, which is what makes
+    the trajectories match across backends).
     """
 
-    arrays: tuple          # (Xg,) | (cols_g, vals_g)
+    arrays: tuple          # (Xg,) | (cols_g, vals_g) | bucketed payload
     yg: Array              # (p, mb)
     row_nnz_g: Array       # (p, mb)
     col_nnz: Array         # (d_pad,)
@@ -66,7 +72,11 @@ class TileData(NamedTuple):
 
     @property
     def layout(self) -> str:
-        return "dense" if len(self.arrays) == 1 else "sparse"
+        if len(self.arrays) == 1:
+            return "dense"
+        if len(self.arrays) == 2:
+            return "sparse"
+        return "bucketed"      # 2 * n_buckets cols/vals + 2 index maps
 
 
 class DSOState(NamedTuple):
@@ -78,10 +88,14 @@ class DSOState(NamedTuple):
 
 
 def as_tile_data(data) -> TileData:
-    """``GridData`` | ``SparseGridData`` | ``TileData`` -> ``TileData``."""
+    """``GridData`` | ``SparseGridData`` | ``BucketedGridData`` |
+    ``TileData`` -> ``TileData``."""
     if isinstance(data, TileData):
         return data
-    if isinstance(data, SparseGridData):
+    if isinstance(data, BucketedGridData):
+        arrays = tuple(a for cv in zip(data.cols_b, data.vals_b)
+                       for a in cv) + (data.bucket_id, data.bucket_pos)
+    elif isinstance(data, SparseGridData):
         arrays = (data.cols_g, data.vals_g)
     else:
         arrays = (data.Xg,)
@@ -156,17 +170,24 @@ def init_state_data(loss_name: str, data, alpha0: float = 0.0) -> DSOState:
     )
 
 
+_LAYOUT_BUILDERS = {"dense": "make_grid_data",
+                    "sparse": "sparse_grid_from_csr",
+                    "bucketed": "bucketed_grid_from_csr"}
+
+
 def check_tile_stats(data, row_batches: int):
     """The stats' tile height must equal the epoch's tile height, or the
     per-tile counts silently describe the wrong row grouping."""
     if isinstance(data, TileData):
-        builder = ("sparse_grid_from_csr" if data.layout == "sparse"
-                   else "make_grid_data")
-        mb = data.yg.shape[1]
+        layout = data.layout
+    elif isinstance(data, BucketedGridData):
+        layout = "bucketed"
+    elif isinstance(data, SparseGridData):
+        layout = "sparse"
     else:
-        sparse = isinstance(data, SparseGridData)
-        builder = "sparse_grid_from_csr" if sparse else "make_grid_data"
-        mb = data.cols_g.shape[2] if sparse else data.Xg.shape[1]
+        layout = "dense"
+    builder = _LAYOUT_BUILDERS[layout]
+    mb = data.yg.shape[1]
     assert data.tile_col_nnz_g is not None, \
         f"grid data lacks tile stats: build it with {builder}"
     assert mb // data.tile_col_nnz_g.shape[1] == mb // row_batches, \

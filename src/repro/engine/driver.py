@@ -36,7 +36,10 @@ from repro.engine.data import (DSOState, TileData, as_tile_data,
                                prob_meta, tile_dims)
 from repro.engine.evaluate import problem_eval_hook
 from repro.engine.schedules import get_schedule
-from repro.sparse.format import density, make_sparse_grid_data
+from repro.sparse.format import (SPARSE_DENSITY_THRESHOLD, density,
+                                 make_bucketed_grid_data,
+                                 make_sparse_grid_data, problem_k_per_tile,
+                                 tile_k_skew)
 
 Array = jax.Array
 
@@ -49,6 +52,22 @@ class SolveResult(NamedTuple):
     alpha: Array
     history: list
     state: Any = None
+
+
+def resolve_backend_and_build(prob, impl, p: int, row_batches: int):
+    """The one auto-probe + layout-builder dispatch behind both drivers
+    (``solve`` and ``core.dso_dist.ShardedDSO``): resolve the backend —
+    probing the per-tile-K skew only when ``auto`` is already in the
+    sparse density regime (the probe is a host pass over the nonzero
+    pattern) — then build the grid in that backend's layout."""
+    k_skew = (tile_k_skew(problem_k_per_tile(prob, p))
+              if impl == "auto"
+              and density(prob) < SPARSE_DENSITY_THRESHOLD else None)
+    be = resolve_backend(impl, density(prob), k_skew=k_skew)
+    builders = {"dense": make_grid_data,
+                "sparse": make_sparse_grid_data,
+                "bucketed": make_bucketed_grid_data}
+    return be, builders[be.layout](prob, p, row_batches)
 
 
 # ----------------------------------------------------- inner iteration --
@@ -219,10 +238,7 @@ def solve(source, *, backend="auto", schedule="cyclic", p: int = 4,
                 f"loss/reg/lam/shape are used); either drop them or pass "
                 f"pre-built grid data instead of the Problem")
         prob = source
-        be = resolve_backend(backend, density(prob))
-        data = (make_sparse_grid_data(prob, p, row_batches)
-                if be.layout == "sparse"
-                else make_grid_data(prob, p, row_batches))
+        be, data = resolve_backend_and_build(prob, backend, p, row_batches)
         loss_name, reg_name = prob.loss_name, prob.reg_name
         m, d = prob.m, prob.d
         lam_f, m_f, _, _, _, w_lo, w_hi = prob_meta(prob)
@@ -254,12 +270,15 @@ def solve(source, *, backend="auto", schedule="cyclic", p: int = 4,
     chunk = eval_every if eval_hook is not None else epochs
     if scan_epochs:
         warn_ragged_eval(epochs, chunk)
+    # balanced schedules (lpt) weigh the per-tile nnz; computed once here
+    sched_ctx = ({"tile_nnz": np.asarray(tile.tile_row_nnz_g).sum(axis=-1)}
+                 if sched.balanced else {})
     key = jax.random.PRNGKey(seed)
     history = []
     t = 0
     while t < epochs:
         n = min(chunk, epochs - t)
-        key, perms = sched.draw(key, t, n, p_)
+        key, perms = sched.draw(key, t, n, p_, **sched_ctx)
         etas = eta_schedule(eta0, t, n, use_adagrad)
         if scan_epochs:
             state = run_epochs(tile, state, perms, etas, lam_f, m_f,

@@ -17,6 +17,15 @@ it, chunk by chunk, threading a PRNG key:
             NOMAD-style execution of ``§6`` (previously ``dso_async.py``);
             a general shuffle, so the sharded driver falls back to
             all-gather + select.
+  lpt     — load-balanced: a greedy LPT (longest-processing-time-first)
+            Latin square over the per-tile nnz costs, co-scheduling the
+            heavy tiles of different workers in the same inner iteration
+            so the per-iteration straggler max (what every bulk-sync
+            inner iteration waits on) tracks the MEAN tile cost instead
+            of each round inheriting one worst tile.  ``balanced=True``:
+            the drivers pass ``tile_nnz`` (the (p, p) per-tile nonzero
+            counts, ``tile_row_nnz_g.sum(-1)``) into ``draw``.  A general
+            permutation, so the sharded driver uses the all-gather path.
   fixed   — any explicit ``perms`` array (property tests, replaying a
             recorded NOMAD trace).
 """
@@ -28,15 +37,20 @@ from typing import Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 
 class Schedule(NamedTuple):
     name: str
-    #: (key, t0, n, p) -> (key', perms (n, p, p)); t0 = epochs already run
+    #: (key, t0, n, p) -> (key', perms (n, p, p)); t0 = epochs already run.
+    #: Balanced schedules additionally take the keyword ``tile_nnz``.
     draw: Callable
     #: True when consecutive owner maps differ by one ring step (cyclic),
     #: letting the sharded driver use ppermute instead of all-gather
     ring: bool
+    #: True when ``draw`` needs the per-tile nnz costs: the drivers pass
+    #: ``tile_nnz=data.tile_row_nnz_g.sum(-1)`` (host numpy, (p, p))
+    balanced: bool = False
 
 
 @functools.lru_cache(maxsize=64)
@@ -89,9 +103,69 @@ def fixed_schedule(perms, name: str = "fixed") -> Schedule:
     return Schedule(name, draw, ring=False)
 
 
+# ------------------------------------------------------ load balancing --
+
+
+def lpt_latin_square(tile_nnz) -> np.ndarray:
+    """Greedy LPT Latin square over the (p, p) per-tile costs.
+
+    Round by round (inner iteration r), workers are served in descending
+    order of their heaviest *remaining* tile and each takes its costliest
+    block still free this round — so the expensive tiles of different
+    workers land in the SAME inner iteration instead of each round
+    inheriting one straggler.  Conflicts are repaired with augmenting
+    paths (Kuhn): after r rounds the remaining worker-block graph is
+    (p - r)-regular bipartite, so a perfect matching always exists and
+    every round is a valid permutation (no two workers share a block,
+    Lemma 2's only requirement).  Returns ``perms (p, p)`` with
+    ``perms[r, q]`` = block worker q owns at inner iteration r; each
+    worker sees every block exactly once per epoch, like cyclic.
+    """
+    cost = np.asarray(tile_nnz, np.float64)
+    p = cost.shape[0]
+    if cost.shape != (p, p):
+        raise ValueError(f"tile_nnz must be (p, p), got {cost.shape}")
+    remaining = [set(range(p)) for _ in range(p)]
+    perms = np.empty((p, p), np.int32)
+    for r in range(p):
+        assign: dict[int, int] = {}       # block -> worker
+
+        def try_assign(q, visited):
+            for b in sorted(remaining[q], key=lambda b: (-cost[q, b], b)):
+                if b in visited:
+                    continue
+                visited.add(b)
+                if b not in assign or try_assign(assign[b], visited):
+                    assign[b] = q
+                    return True
+            return False
+
+        order = sorted(range(p),
+                       key=lambda q: (-max(cost[q, b]
+                                           for b in remaining[q]), q))
+        for q in order:
+            matched = try_assign(q, set())
+            assert matched, "regular bipartite graph must match (Hall)"
+        for b, q in assign.items():
+            perms[r, q] = b
+            remaining[q].remove(b)
+    return perms
+
+
+def _draw_lpt(key, t0, n, p, *, tile_nnz=None):
+    if tile_nnz is None:
+        raise ValueError(
+            "schedule 'lpt' needs the per-tile nnz costs: pass "
+            "tile_nnz=data.tile_row_nnz_g.sum(-1) to draw() (the engine "
+            "drivers do this automatically for balanced schedules)")
+    sq = jnp.asarray(lpt_latin_square(tile_nnz))
+    return key, jnp.broadcast_to(sq[None], (n, p, p))
+
+
 SCHEDULES = {
     "cyclic": Schedule("cyclic", _draw_cyclic, ring=True),
     "random": Schedule("random", _draw_random, ring=False),
+    "lpt": Schedule("lpt", _draw_lpt, ring=False, balanced=True),
 }
 
 

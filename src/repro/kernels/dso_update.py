@@ -62,6 +62,25 @@ step than this file's dense fused kernel (dso_sparse gate in
 BENCH_dso.json); both variants share ``_primal_update``/``_dual_update``
 below, so the Eq.-(8) math is written once.
 
+K-bucketed ragged layout (``sparse.format.BucketedGridData``, backends
+``sparse_bucketed_jnp``/``sparse_bucketed_pallas``) — the uniform layout
+above pads every tile to the GRID's max K, so on power-law feature
+distributions (a few tiles 10-50x denser than the median) both the
+streamed and the resident bytes are paid at the worst tile's width
+everywhere.  The bucketed layout groups tiles into <= 4 power-of-two
+widths and the block step ``lax.switch``es on the active tile's bucket:
+
+    bucket_id/bucket_pos (p, p) ── which (bucket, slot) holds tile (q, b)
+    bucket k: cols/vals (p, slots_k, mb, K_k) ── rectangular per bucket
+         └─> switch(bucket) -> the SAME sparse kernel above at width K_k
+
+so a tile step streams 8*mb*K_bucket bytes (its own width) instead of
+8*mb*max-K, and the resident grid shrinks from p^2*mb*max-K to
+sum_k slots_k*mb*K_k — epoch cost tracks real nnz, not max-K padding
+(dso_sparse_skewed gate in BENCH_dso.json: >= 3x on both).  The
+trajectory is identical to ``sparse_jnp`` (same statistics, same Eq.-8
+math; padding slots contribute exact zeros at every width).
+
 The legacy two-pass kernels are kept as ``dso_tile_step_pallas_twopass``
 for regression tests and the fused-vs-two-pass benchmark
 (benchmarks/dso_perf.py; see repo-root BENCH_dso.json).

@@ -18,6 +18,13 @@ def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
+def _resolve_interpret(interpret: bool | None) -> bool:
+    """``interpret=None`` -> backend auto-detection: compiled (Mosaic) on a
+    real TPU, the Pallas interpreter everywhere else.  Every kernel wrapper
+    resolves through here so the default is pinned in one place."""
+    return (not _on_tpu()) if interpret is None else interpret
+
+
 def _pad_axis(x, axis: int, mult: int):
     n = x.shape[axis]
     pad = (-n) % mult
@@ -40,7 +47,7 @@ def dso_tile_step(X, y, w, alpha, gw, ga, row_nnz, col_nnz, scalars, *,
     outside the kernel). ``twopass=True`` selects the legacy two-kernel
     path (X read twice) for regression/benchmark comparison.
     """
-    interpret = (not _on_tpu()) if interpret is None else interpret
+    interpret = _resolve_interpret(interpret)
     assert not (twopass and (tile_row_nnz is not None
                              or tile_col_nnz is not None)), \
         "the two-pass path derives tile counts in-kernel; stats would be " \
@@ -105,7 +112,7 @@ def dso_block_step(X, y, w, alpha, gw, ga, tile_row_nnz, tile_col_nnz,
     launch per batch. ``force_scan`` selects the fallback explicitly
     (used by tests to exercise it in interpret mode).
     """
-    interpret = (not _on_tpu()) if interpret is None else interpret
+    interpret = _resolve_interpret(interpret)
     M, D = X.shape
     bd = bd or min(dso_update.DEFAULT_BD, max(128, D))
     rb = M // row_batches
@@ -180,13 +187,14 @@ def dso_sparse_block_step(cols, vals, y, w, alpha, gw, ga, tile_row_nnz,
     packed tile needs no shape padding — K is already aligned by the
     tiler (sparse.format.choose_k) and db is whatever the grid uses.
 
-    Unlike the dense wrappers, ``interpret`` defaults to True on EVERY
-    backend: the kernel's scatter-add / 2-D gather do not lower through
-    Mosaic yet (kernels/dso_sparse.py), so compiled mode would be a TPU
-    lowering error, not a fast path.  Pass ``interpret=False`` explicitly
-    once Mosaic scatter lands.
+    ``interpret=None`` auto-detects like the dense wrappers (compiled on a
+    real TPU, interpreter elsewhere — ROADMAP "Mosaic-native" seam,
+    step 1).  On TPUs whose Mosaic build still lacks scatter-add / 2-D
+    gather lowering (kernels/dso_sparse.py), pass ``interpret=True``
+    explicitly to force the interpreter (or use the ``sparse_jnp``
+    backend, the same math through XLA's native scatter/gather).
     """
-    interpret = True if interpret is None else interpret
+    interpret = _resolve_interpret(interpret)
     from repro.kernels import dso_sparse
     M = cols.shape[0]
     rb = M // row_batches
@@ -206,7 +214,7 @@ def swa_attention(q, k, v, *, window: int, causal: bool = True,
                   q_offset: int = 0, bq: int | None = None,
                   bk: int | None = None, interpret: bool | None = None):
     """Padded wrapper around kernels/swa_attention.py."""
-    interpret = (not _on_tpu()) if interpret is None else interpret
+    interpret = _resolve_interpret(interpret)
     B, Hq, Tq, Dh = q.shape
     Tk = k.shape[2]
     bq = bq or min(_swa.DEFAULT_BQ, max(8, Tq))
@@ -227,7 +235,7 @@ def swa_attention(q, k, v, *, window: int, causal: bool = True,
 def ssd_scan(x, dt, A, B, C, *, chunk: int | None = None,
              interpret: bool | None = None):
     """Padded wrapper around kernels/ssd_scan.py."""
-    interpret = (not _on_tpu()) if interpret is None else interpret
+    interpret = _resolve_interpret(interpret)
     b, t, h, dh = x.shape
     chunk = chunk or min(_ssd.DEFAULT_CHUNK, max(8, t))
     xp, _ = _pad_axis(x, 1, chunk)

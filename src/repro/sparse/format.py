@@ -35,6 +35,20 @@ nnz-proportional:
     inspection and the traffic model.  All scaling statistics (row_nnz,
     col_nnz, per-tile counts) match ``core.dso.make_grid_data`` exactly,
     so the sparse trajectory equals the dense one.
+
+``BucketedGridData``
+    The K-bucketed *ragged* grid: the p x p tiles are grouped into at most
+    ``MAX_K_BUCKETS`` power-of-two packed widths chosen from the per-tile
+    ``k_per_tile`` statistics, and each bucket is packed rectangularly as
+    (p, slots, mb, K_bucket) so vmap/shard_map stay rectangular *per
+    bucket*.  On power-law feature distributions (webspam/kdda-like: a few
+    tiles 10-50x denser than the median) the uniform layout pays the worst
+    tile's K everywhere — ``p^2 * mb * max-K`` resident and ``mb * max-K``
+    streamed per tile step; the bucketed layout pays ``sum tiles *
+    bucket-K``, tracking real nnz instead of max-K padding.  ``bucket_id``
+    / ``bucket_pos`` (p, p) map tile (q, b) to its (bucket, slot) address;
+    the shared scaling statistics are identical to the uniform layouts', so
+    the bucketed trajectory equals the ``sparse_jnp`` one.
 """
 
 from __future__ import annotations
@@ -61,6 +75,15 @@ LANE = 128     # lane multiple (last dim on TPU)
 #: traffic overhead break even around 1/2 density; 0.1 leaves headroom for
 #: row-nnz skew inflating K)
 SPARSE_DENSITY_THRESHOLD = 0.1
+
+#: above this per-tile-K skew (k_raw.max() / median) the uniform max-K
+#: block-ELL grid wastes most of its padding on the few dense tiles and the
+#: K-bucketed ragged layout wins — the ``impl="auto"`` bucketing trigger
+BUCKET_SKEW_THRESHOLD = 4.0
+
+#: rectangular K-buckets per grid: enough to track a power-law tail while
+#: keeping the per-bucket vmap/shard_map arrays few and large
+MAX_K_BUCKETS = 4
 
 
 def choose_k(max_row_nnz: int, *, align: int = SUBLANE,
@@ -226,21 +249,69 @@ class SparseGridData(NamedTuple):
     k_per_tile: np.ndarray = None  # (p, p) int
 
 
+class BucketedGridData(NamedTuple):
+    """The p x p DSO grid in K-bucketed ragged block-ELL form.
+
+    Tiles are grouped into ``len(bucket_ks)`` packed widths; bucket k's
+    ``cols_b[k]``/``vals_b[k]`` stack every processor's tiles of that width
+    as (p, slots_k, mb, K_k) — rectangular per bucket, so vmap over
+    processors and shard_map over devices both stay rectangular.  Tile
+    (q, b) lives at ``[q, bucket_pos[q, b]]`` of bucket ``bucket_id[q, b]``;
+    unused trailing slots (processors with fewer tiles of that width) are
+    all-padding tiles that no schedule ever addresses.  All scaling
+    statistics match the uniform layouts' exactly.
+    """
+
+    cols_b: tuple     # per bucket: (p, slots_k, mb, K_k) int32
+    vals_b: tuple     # per bucket: (p, slots_k, mb, K_k) float32
+    bucket_id: Array  # (p, p) int32 — bucket of tile (q, b)
+    bucket_pos: Array  # (p, p) int32 — slot of tile (q, b) in its bucket
+    yg: Array         # (p, mb)
+    row_nnz_g: Array  # (p, mb)   |Omega_i|, >= 1
+    col_nnz: Array    # (d_pad,)  |Omega-bar_j|, >= 1
+    row_valid: Array  # (p, mb)  1.0 for real rows, 0.0 padding
+    p: int
+    mb: int           # rows per processor
+    db: int           # cols per block
+    bucket_ks: tuple  # static per-bucket packed widths, ascending
+    # [q, s, j]: nnz of column j within row batch s of processor q's shard
+    tile_col_nnz_g: Array = None   # (p, row_batches, d_pad)
+    # [q, b, i]: nnz of row i of processor q within block b's columns
+    tile_row_nnz_g: Array = None   # (p, p, mb)
+    # per-tile raw max row widths (host-side, stats only)
+    k_per_tile: np.ndarray = None  # (p, p) int
+
+    def tile(self, q: int, b: int) -> SparseTile:
+        """The packed tile of processor q / block b (tests, inspection)."""
+        k = int(np.asarray(self.bucket_id)[q, b])
+        s = int(np.asarray(self.bucket_pos)[q, b])
+        return SparseTile(cols=self.cols_b[k][q, s],
+                          vals=self.vals_b[k][q, s],
+                          row_nnz=None, db=self.db)
+
+
 def density(prob) -> float:
     """nnz / (m * d) of a ``Problem``."""
     return float(prob.nnz) / float(max(1, prob.m * prob.d))
 
 
-def sparse_grid_from_csr(csr: CSRMatrix, y, p: int, row_batches: int = 1,
-                         *, k_align: int = SUBLANE,
-                         pow2: bool = False) -> SparseGridData:
-    """Tile a CSR matrix onto the p x p grid without ever densifying.
+class _ShardAddr(NamedTuple):
+    """Packed ELL address of every stored entry of one processor shard."""
 
-    One vectorized pass per processor shard: every stored entry's
-    (block, local row, rank-within-row-and-block) address is computed from
-    the CSR stream directly (entries are ascending by (row, col), so the
-    per-(row, block) segments are contiguous) and scattered into the packed
-    arrays.  Cost and memory are O(nnz + p*p*mb*K).
+    idx: np.ndarray         # (nnz_q,) global column index
+    local_rows: np.ndarray  # (nnz_q,) row within the shard
+    blk: np.ndarray         # (nnz_q,) block column
+    pos: np.ndarray         # (nnz_q,) rank within the (row, block) segment
+    vals: np.ndarray        # (nnz_q,) float32
+
+
+def _tile_csr(csr: CSRMatrix, y, p: int, row_batches: int):
+    """Layout-independent half of the grid tilers: padding, every scaling
+    statistic, the per-tile raw widths, and the packed ELL address of each
+    stored entry.  One vectorized pass per processor shard (entries are
+    ascending by (row, col), so the per-(row, block) segments are
+    contiguous); both the uniform and the bucketed packers scatter from the
+    same addresses, which is what makes their trajectories identical.
     """
     m, d = csr.shape
     m_pad, d_pad = pad_to_multiple(m, p), pad_to_multiple(d, p)
@@ -257,12 +328,10 @@ def sparse_grid_from_csr(csr: CSRMatrix, y, p: int, row_batches: int = 1,
     row_valid = np.zeros(m_pad, np.float32)
     row_valid[:m] = 1.0
 
-    # per-processor packing
-    per_q_cols, per_q_vals = [], []
     tile_row_nnz = np.zeros((p, p, mb), np.float32)
     tile_col_nnz = np.zeros((p, n_rb, d_pad), np.float32)
     k_raw = np.zeros((p, p), np.int64)
-    counts_list, addr_list = [], []
+    addrs: list[_ShardAddr] = []
     for q in range(p):
         # clamp to m: with heavy padding a whole trailing shard can start
         # past the last real row, where indptr has no entry
@@ -276,9 +345,12 @@ def sparse_grid_from_csr(csr: CSRMatrix, y, p: int, row_batches: int = 1,
         seg = local_rows * p + blk           # ascending: rows asc, blk asc
         counts = np.bincount(seg, minlength=mb * p)
         k_raw[q] = counts.reshape(mb, p).max(axis=0)
-        counts_list.append(counts)
-        addr_list.append((idx, local_rows, blk, seg, lo, hi))
         tile_row_nnz[q] = counts.reshape(mb, p).T
+        starts = np.zeros(mb * p + 1, np.int64)
+        np.cumsum(counts, out=starts[1:])
+        pos = np.arange(len(seg)) - starts[seg]
+        addrs.append(_ShardAddr(idx=idx, local_rows=local_rows, blk=blk,
+                                pos=pos, vals=csr.values[lo:hi]))
         # per-row-batch per-column counts (global column index)
         if r1 > r0:
             batch = local_rows // rb
@@ -287,30 +359,116 @@ def sparse_grid_from_csr(csr: CSRMatrix, y, p: int, row_batches: int = 1,
                              minlength=n_rb * d_pad)
             tile_col_nnz[q] = tc.reshape(n_rb, d_pad)
 
-    K = choose_k(int(k_raw.max()), align=k_align, pow2=pow2)
-    cols_g = np.zeros((p, p, mb, K), np.int32)
-    vals_g = np.zeros((p, p, mb, K), np.float32)
-    for q in range(p):
-        idx, local_rows, blk, seg, lo, hi = addr_list[q]
-        if hi <= lo:
-            continue
-        starts = np.zeros(mb * p + 1, np.int64)
-        np.cumsum(counts_list[q], out=starts[1:])
-        pos = np.arange(len(seg)) - starts[seg]
-        cols_g[q, blk, local_rows, pos] = (idx - blk * db).astype(np.int32)
-        vals_g[q, blk, local_rows, pos] = csr.values[lo:hi]
-
-    return SparseGridData(
-        cols_g=jnp.asarray(cols_g), vals_g=jnp.asarray(vals_g),
+    shared = dict(
         yg=jnp.asarray(y_pad.reshape(p, mb)),
         row_nnz_g=jnp.asarray(row_nnz.reshape(p, mb)),
         col_nnz=jnp.asarray(col_nnz),
         row_valid=jnp.asarray(row_valid.reshape(p, mb)),
-        p=p, mb=mb, db=db, K=K,
+        p=p, mb=mb, db=db,
         tile_col_nnz_g=jnp.asarray(tile_col_nnz),
         tile_row_nnz_g=jnp.asarray(tile_row_nnz),
         k_per_tile=k_raw,
     )
+    return shared, addrs
+
+
+def sparse_grid_from_csr(csr: CSRMatrix, y, p: int, row_batches: int = 1,
+                         *, k_align: int = SUBLANE,
+                         pow2: bool = False) -> SparseGridData:
+    """Tile a CSR matrix onto the p x p grid without ever densifying.
+
+    Uniform max-K packing: every tile padded to the grid's widest tile so
+    the epoch vmaps over one rectangular array.  Cost and memory are
+    O(nnz + p*p*mb*K).  See ``bucketed_grid_from_csr`` for the ragged
+    layout that drops the max-K padding on skewed data.
+    """
+    shared, addrs = _tile_csr(csr, y, p, row_batches)
+    mb, db = shared["mb"], shared["db"]
+    K = choose_k(int(shared["k_per_tile"].max()), align=k_align, pow2=pow2)
+    cols_g = np.zeros((p, p, mb, K), np.int32)
+    vals_g = np.zeros((p, p, mb, K), np.float32)
+    for q, a in enumerate(addrs):
+        if a.idx.size == 0:
+            continue
+        cols_g[q, a.blk, a.local_rows, a.pos] = \
+            (a.idx - a.blk * db).astype(np.int32)
+        vals_g[q, a.blk, a.local_rows, a.pos] = a.vals
+    return SparseGridData(cols_g=jnp.asarray(cols_g),
+                          vals_g=jnp.asarray(vals_g), K=K, **shared)
+
+
+def assign_k_buckets(k_per_tile, *, max_buckets: int = MAX_K_BUCKETS,
+                     align: int = SUBLANE):
+    """Group per-tile raw widths into <= ``max_buckets`` packed widths.
+
+    Each tile starts at its sublane-aligned ``choose_k`` width (not the
+    power of two: rounding the widest bucket up to pow2 can hand back
+    30-50% of the padding this layout exists to remove); while more than
+    ``max_buckets`` distinct widths remain, the width whose promotion to
+    the next one up wastes the fewest padded slots (tiles * width gap) is
+    merged upward.  Returns ``(widths, bucket_id)`` with ``widths`` an
+    ascending int tuple and ``bucket_id`` (p, p) int32 indices into it.
+    """
+    k_raw = np.asarray(k_per_tile, np.int64)
+    w_t = np.vectorize(lambda k: choose_k(int(k), align=align))(k_raw)
+    widths = sorted(set(int(w) for w in w_t.ravel()))
+    while len(widths) > max_buckets:
+        costs = [(int((w_t == widths[i]).sum()) * (widths[i + 1] - widths[i]),
+                  i) for i in range(len(widths) - 1)]
+        _, i = min(costs)
+        w_t[w_t == widths[i]] = widths[i + 1]
+        widths.pop(i)
+    bucket_id = np.searchsorted(widths, w_t).astype(np.int32)
+    return tuple(widths), bucket_id
+
+
+def bucketed_grid_from_csr(csr: CSRMatrix, y, p: int, row_batches: int = 1,
+                           *, k_align: int = SUBLANE,
+                           max_buckets: int = MAX_K_BUCKETS,
+                           ) -> BucketedGridData:
+    """Tile a CSR matrix onto the p x p grid in K-bucketed ragged form.
+
+    Same addressing pass (and identical statistics) as
+    ``sparse_grid_from_csr``, but each tile is packed at its *bucket's*
+    width instead of the global max: resident bytes drop from
+    ``8 * p^2 * mb * max-K`` to ``8 * mb * sum_k slots_k * K_k``, and a
+    tile step streams ``8 * mb * bucket-K`` instead of ``8 * mb * max-K``.
+    """
+    shared, addrs = _tile_csr(csr, y, p, row_batches)
+    mb, db = shared["mb"], shared["db"]
+    widths, bucket_id = assign_k_buckets(shared["k_per_tile"],
+                                         max_buckets=max_buckets,
+                                         align=k_align)
+    n_b = len(widths)
+    bucket_pos = np.zeros((p, p), np.int32)
+    t_per = np.zeros((p, n_b), np.int64)    # tiles per (processor, bucket)
+    for q in range(p):
+        for b in range(p):
+            k = bucket_id[q, b]
+            bucket_pos[q, b] = t_per[q, k]
+            t_per[q, k] += 1
+    slots = t_per.max(axis=0)               # rectangular: max over q
+    cols_b = [np.zeros((p, int(slots[k]), mb, widths[k]), np.int32)
+              for k in range(n_b)]
+    vals_b = [np.zeros((p, int(slots[k]), mb, widths[k]), np.float32)
+              for k in range(n_b)]
+    for q, a in enumerate(addrs):
+        if a.idx.size == 0:
+            continue
+        for b in range(p):
+            msk = a.blk == b
+            if not msk.any():
+                continue
+            k, s = int(bucket_id[q, b]), int(bucket_pos[q, b])
+            cols_b[k][q, s, a.local_rows[msk], a.pos[msk]] = \
+                (a.idx[msk] - b * db).astype(np.int32)
+            vals_b[k][q, s, a.local_rows[msk], a.pos[msk]] = a.vals[msk]
+    return BucketedGridData(
+        cols_b=tuple(jnp.asarray(c) for c in cols_b),
+        vals_b=tuple(jnp.asarray(v) for v in vals_b),
+        bucket_id=jnp.asarray(bucket_id),
+        bucket_pos=jnp.asarray(bucket_pos),
+        bucket_ks=widths, **shared)
 
 
 def make_sparse_grid_data(prob, p: int, row_batches: int = 1,
@@ -324,8 +482,71 @@ def make_sparse_grid_data(prob, p: int, row_batches: int = 1,
                                 **kw)
 
 
-def grid_nbytes(data: SparseGridData) -> int:
+def make_bucketed_grid_data(prob, p: int, row_batches: int = 1,
+                            **kw) -> BucketedGridData:
+    """Bucketed-layout grid builder from a dense ``Problem`` (tests / small
+    data); out-of-core data goes through ``bucketed_grid_from_csr``."""
+    csr = CSRMatrix.from_dense(np.asarray(prob.X))
+    return bucketed_grid_from_csr(csr, np.asarray(prob.y), p, row_batches,
+                                  **kw)
+
+
+def csr_k_per_tile(csr: CSRMatrix, p: int) -> np.ndarray:
+    """(p, p) per-tile raw packed widths (max row nnz within each tile) —
+    the ``impl="auto"`` skew probe, O(nnz) without building any grid."""
+    m, d = csr.shape
+    mb = pad_to_multiple(m, p) // p
+    db = pad_to_multiple(d, p) // p
+    k_raw = np.zeros((p, p), np.int64)
+    for q in range(p):
+        r0, r1 = min(q * mb, m), min((q + 1) * mb, m)
+        lo, hi = csr.indptr[r0], csr.indptr[r1]
+        if hi <= lo:
+            continue
+        local_rows = np.repeat(np.arange(r1 - r0, dtype=np.int64),
+                               np.diff(csr.indptr[r0:r1 + 1]))
+        seg = local_rows * p + csr.indices[lo:hi].astype(np.int64) // db
+        k_raw[q] = np.bincount(seg, minlength=mb * p).reshape(mb, p) \
+            .max(axis=0)
+    return k_raw
+
+
+def problem_k_per_tile(prob, p: int) -> np.ndarray:
+    """``csr_k_per_tile`` for an in-memory dense ``Problem``."""
+    X = np.asarray(prob.X)
+    m, d = X.shape
+    m_pad, d_pad = pad_to_multiple(m, p), pad_to_multiple(d, p)
+    nz = np.zeros((m_pad, d_pad), bool)
+    nz[:m, :d] = X != 0
+    mb, db = m_pad // p, d_pad // p
+    # [q, i, b] per-row-per-block counts -> max over the shard's rows
+    return nz.reshape(p, mb, p, db).sum(axis=3).max(axis=1) \
+        .astype(np.int64)
+
+
+def tile_k_skew(k_per_tile) -> float:
+    """``k_raw.max() / median`` — how much the uniform max-K layout
+    overpays relative to the typical tile (>= 1.0)."""
+    k = np.maximum(np.asarray(k_per_tile, np.float64), 1.0)
+    return float(k.max() / max(float(np.median(k)), 1.0))
+
+
+def grid_nbytes(data) -> int:
     """Resident bytes of the packed tile arrays (the nnz-proportional
     replacement for the dense grid's 4 * m_pad * d_pad).  Computed from
     shape/dtype — no device-to-host copy."""
+    if isinstance(data, BucketedGridData):
+        return int(sum(c.nbytes + v.nbytes
+                       for c, v in zip(data.cols_b, data.vals_b))
+                   + data.bucket_id.nbytes + data.bucket_pos.nbytes)
     return int(data.cols_g.nbytes + data.vals_g.nbytes)
+
+
+def packed_bytes_per_step(data) -> float:
+    """Mean packed-tile bytes streamed per tile step (cols i32 + vals f32;
+    one epoch touches every tile exactly once, so the mean over tiles is
+    the per-step expectation under any full schedule)."""
+    if isinstance(data, BucketedGridData):
+        ks = np.asarray(data.bucket_ks)[np.asarray(data.bucket_id)]
+        return float(8 * data.mb * ks.mean())
+    return float(8 * data.mb * data.K)

@@ -29,16 +29,23 @@ from typing import Iterator, NamedTuple
 
 import numpy as np
 
-from repro.sparse.format import CSRMatrix
+from repro.sparse.format import CSRMatrix, pad_to_multiple
 
 
 class ScanStats(NamedTuple):
-    """Pass-1 result: everything needed to preallocate the CSR exactly."""
+    """Pass-1 result: everything needed to preallocate the CSR exactly,
+    plus (when a grid size ``p`` was given) the per-tile packed-width
+    statistics that drive the ``impl="auto"`` layout decision."""
 
     n_rows: int
     n_features: int      # max feature index seen (1-based count)
     nnz: int
     row_nnz: np.ndarray  # (n_rows,) int64
+    #: (p, p) max row nnz within each grid tile — identical to the value
+    #: ``sparse_grid_from_csr`` computes, recorded during pass 1 so the
+    #: ``impl="auto"`` skew decision (``format.tile_k_skew``) needs no
+    #: third pass over the data; None when ``p`` was not given
+    k_per_tile: np.ndarray | None = None
 
 
 def _open_lines(source):
@@ -57,9 +64,29 @@ def _split_line(line: str):
     return parts[0], parts[1:]
 
 
-def scan_libsvm(source, max_rows: int | None = None) -> ScanStats:
-    """Pass 1: counts only — O(m) memory, no indices or values stored."""
+def scan_libsvm(source, max_rows: int | None = None,
+                n_features: int | None = None,
+                p: int | None = None) -> ScanStats:
+    """Pass 1: counts only — O(m) memory, no indices or values stored.
+
+    With a grid size ``p`` (which requires ``n_features``: block column
+    boundaries are ``d_pad / p`` and cannot be fixed mid-stream from a
+    still-growing max index), additionally records each row's per-block
+    nonzero counts (O(m * p) memory) and folds them into the (p, p)
+    ``k_per_tile`` statistic — exactly the per-tile packed widths the grid
+    tilers compute, available before any grid is built.
+    """
+    if p is not None and n_features is None:
+        raise ValueError(
+            "per-tile stats (p=...) need an explicit n_features: the block "
+            "boundaries d_pad/p cannot be fixed while the max feature "
+            "index is still being discovered")
+    db = pad_to_multiple(n_features, p) // p if p is not None else None
     row_nnz: list[int] = []
+    # per-row per-block counts in one geometrically grown (cap, p) int32
+    # buffer — the pass-1 contract is O(m) memory, so no per-row ndarray
+    # objects (their overhead would dwarf the 4*p payload at libsvm scale)
+    row_blocks = np.zeros((1024, p), np.int32) if p is not None else None
     d = 0
     f = _open_lines(source)
     try:
@@ -69,6 +96,11 @@ def scan_libsvm(source, max_rows: int | None = None) -> ScanStats:
                 continue
             _, toks = parsed
             k = 0
+            if p is not None:
+                if len(row_nnz) >= row_blocks.shape[0]:
+                    row_blocks = np.concatenate(
+                        [row_blocks, np.zeros_like(row_blocks)])
+                blk_counts = row_blocks[len(row_nnz)]
             for tok in toks:
                 idx, val = tok.split(":", 1)
                 j = int(idx)
@@ -78,6 +110,14 @@ def scan_libsvm(source, max_rows: int | None = None) -> ScanStats:
                 # must agree between the two layouts
                 if float(val) != 0.0:
                     k += 1
+                    if p is not None:
+                        if j > n_features:
+                            # clamping would silently fold the entry into
+                            # the wrong tile and skew k_per_tile
+                            raise ValueError(
+                                f"feature index {j} exceeds "
+                                f"n_features={n_features}")
+                        blk_counts[(j - 1) // db] += 1
             row_nnz.append(k)
             if max_rows is not None and len(row_nnz) >= max_rows:
                 break
@@ -85,8 +125,19 @@ def scan_libsvm(source, max_rows: int | None = None) -> ScanStats:
         if hasattr(f, "close") and f is not source:
             f.close()
     rn = np.asarray(row_nnz, np.int64)
+    k_per_tile = None
+    if p is not None:
+        # shard boundaries need the final row count: fold the recorded
+        # per-row block counts into per-tile maxima now
+        m = len(row_nnz)
+        mb = pad_to_multiple(m, p) // p
+        k_per_tile = np.zeros((p, p), np.int64)
+        for q in range(p):
+            shard = row_blocks[q * mb:min((q + 1) * mb, m)]
+            if shard.size:
+                k_per_tile[q] = shard.max(axis=0)
     return ScanStats(n_rows=len(row_nnz), n_features=d,
-                     nnz=int(rn.sum()), row_nnz=rn)
+                     nnz=int(rn.sum()), row_nnz=rn, k_per_tile=k_per_tile)
 
 
 def iter_csr_shards(source, n_features: int, shard_rows: int = 8192,
@@ -165,14 +216,19 @@ def iter_csr_shards(source, n_features: int, shard_rows: int = 8192,
 
 def ingest_libsvm(path: str, n_features: int | None = None,
                   shard_rows: int = 8192, max_rows: int | None = None,
-                  normalize_labels: bool = False,
-                  ) -> tuple[CSRMatrix, np.ndarray]:
+                  normalize_labels: bool = False, p: int | None = None,
+                  return_stats: bool = False):
     """Two-pass out-of-core ingest: returns (CSRMatrix, labels).
 
     Pass 1 fixes the exact allocation (rows, nnz) and, when ``n_features``
     is not given, the feature dimension; pass 2 streams shards straight
     into the preallocated CSR arrays.  Peak memory O(nnz + m) — the dense
     (m, d) matrix is never materialized.
+
+    A grid size ``p`` (requires ``n_features``) makes pass 1 also record
+    the (p, p) per-tile ``k_per_tile`` widths, so ``impl="auto"`` can run
+    the ``format.tile_k_skew`` bucketing decision without a third pass
+    over the data; ``return_stats=True`` returns ``(csr, y, ScanStats)``.
 
     Labels default to raw (regression / ``loss='square'`` must keep its
     targets, mirroring ``load_libsvm``); classification callers pass
@@ -185,7 +241,8 @@ def ingest_libsvm(path: str, n_features: int | None = None,
             "ingest_libsvm makes two passes and needs a re-readable path; "
             "for an in-memory iterable use scan_libsvm + iter_csr_shards "
             "(the iterable would be exhausted by pass 1)")
-    stats = scan_libsvm(path, max_rows=max_rows)
+    stats = scan_libsvm(path, max_rows=max_rows, n_features=n_features,
+                        p=p)
     if n_features is None:
         n_features = stats.n_features
     elif stats.n_features > n_features:
@@ -231,6 +288,8 @@ def ingest_libsvm(path: str, n_features: int | None = None,
         y = normalize_binary_labels(y, strict=True)
     csr = CSRMatrix(indptr=indptr, indices=indices, values=values,
                     shape=(stats.n_rows, n_features))
+    if return_stats:
+        return csr, y, stats
     return csr, y
 
 

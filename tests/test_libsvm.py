@@ -92,8 +92,8 @@ def test_ingest_detects_file_changed_between_passes():
     from repro.sparse import ingest as ing
     real_scan = ing.scan_libsvm
 
-    def stale_scan(source, max_rows=None):
-        st = real_scan(source, max_rows=max_rows)
+    def stale_scan(source, max_rows=None, **kw):
+        st = real_scan(source, max_rows=max_rows, **kw)
         rn = st.row_nnz.copy()
         rn[0] += 1                       # pretend row 0 had one more entry
         return ing.ScanStats(st.n_rows, st.n_features, st.nnz + 1, rn)
