@@ -33,8 +33,9 @@ from jax.experimental.shard_map import shard_map
 
 from repro.core.saddle import Problem, duality_gap, primal_objective
 from repro.engine.backends import get_backend
-from repro.engine.data import (as_tile_data, check_tile_stats, eta_schedule,
-                               init_state, prob_meta, tile_dims)
+from repro.engine.data import (DSOState, as_tile_data, check_tile_stats,
+                               eta_schedule, init_state, prob_meta,
+                               tile_dims)
 from repro.engine.driver import (inner_iteration, resolve_backend_and_build,
                                  warn_ragged_eval)
 from repro.engine.schedules import get_schedule
@@ -181,13 +182,17 @@ class ShardedDSO:
         self.key = jax.random.PRNGKey(seed)
         check_tile_stats(data, row_batches)
         tile = as_tile_data(data)
-        _, _, self.db = tile_dims(tile)
+        _, self.mb, self.db = tile_dims(tile)
         state = init_state(prob, data, alpha0)
         self.use_adagrad = use_adagrad
+        self.row_batches = row_batches
+        self.eta0_record = None   # last eta0 seen, for the snapshot config
+        self._ckpt_extra = dict(alpha0=float(alpha0), seed=int(seed))
         (self.lam, self.m_f, _, _, _, self.w_lo, self.w_hi) = prob_meta(prob)
 
         shard = NamedSharding(self.mesh, P("dso"))
         repl = NamedSharding(self.mesh, P(None))
+        self._shard = shard
         # resident layout payload: device q holds its dense row shard or
         # its (p, mb, K) row of packed block-ELL tiles
         self._data_shards = tuple(jax.device_put(a, shard)
@@ -219,6 +224,7 @@ class ShardedDSO:
 
     def run_epochs(self, n: int, eta0: float = 0.1):
         """Run ``n`` epochs in one donated-scan dispatch."""
+        self.eta0_record = eta0
         etas = eta_schedule(eta0, self.epochs_done, n, self.use_adagrad)
         ctx = ({"tile_nnz": self._tile_nnz} if self.schedule.balanced
                else {})
@@ -232,6 +238,48 @@ class ShardedDSO:
 
     def epoch(self, eta0: float = 0.1):
         self.run_epochs(1, eta0)
+
+    # -- elastic-runtime seams (repro.runtime stays out of this module) ----
+    def solver_state(self) -> DSOState:
+        """The complete blocked solver state as the engine's ``DSOState``
+        pytree (block-id order: after every epoch device q holds block q —
+        see ``w_full``).  What ``runtime.snapshot`` persists and
+        ``runtime.reshard`` repartitions."""
+        return DSOState(w_grid=self.w, gw_grid=self.gw, alpha=self.alpha,
+                        ga=self.ga, epoch=jnp.int32(self.epochs_done))
+
+    def snapshot_config(self) -> dict:
+        """The run record ``runtime.resume`` needs to rebuild this driver
+        (mirrors ``engine.driver.solve``'s snapshot config)."""
+        prob = self.prob
+        return dict(backend=self.backend.name, schedule=self.schedule.name,
+                    p=self.p, mb=self.mb, db=self.db, m=prob.m, d=prob.d,
+                    loss_name=prob.loss_name, reg_name=prob.reg_name,
+                    lam=float(prob.lam), row_batches=self.row_batches,
+                    eta0=(0.1 if self.eta0_record is None
+                          else float(self.eta0_record)),
+                    use_adagrad=bool(self.use_adagrad),
+                    eval_every=1, checkpoint_every=0,
+                    layout=self.backend.layout, inner_iteration=0,
+                    **self._ckpt_extra)
+
+    def restore(self, state: DSOState, key=None, epochs_done=None):
+        """Adopt a checkpointed (or resharded) solver state: shard the
+        blocked arrays back onto the mesh and reset the RNG/epoch cursor.
+        The next ``run_epochs`` continues the stored trajectory exactly
+        (same schedule stream from the stored key + cursor)."""
+        if tuple(state.w_grid.shape) != (self.p, self.db):
+            raise ValueError(
+                f"state has w grid {tuple(state.w_grid.shape)}, this mesh "
+                f"runs a ({self.p}, {self.db}) grid — reshard first "
+                f"(repro.runtime.reshard.reshard_state)")
+        put = lambda a: jax.device_put(jnp.asarray(a), self._shard)  # noqa: E731
+        self.w, self.gw = put(state.w_grid), put(state.gw_grid)
+        self.alpha, self.ga = put(state.alpha), put(state.ga)
+        if key is not None:
+            self.key = jnp.asarray(key)
+        self.epochs_done = (int(state.epoch) if epochs_done is None
+                            else int(epochs_done))
 
     # -- evaluation helpers ------------------------------------------------
     def w_full(self):

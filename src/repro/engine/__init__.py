@@ -62,12 +62,35 @@ code-path *product* into a *sum*:
                         |  make_csr_primal_eval (jitted chunked
                         |  CSR matvec — out-of-core, no host numpy)
 
+   +--------------------- RUNTIME (repro/runtime) ---------------------+
+   |  elastic execution around the engine (see runtime/__init__.py     |
+   |  for the full data flow):                                         |
+   |                                                                   |
+   |  solve(..., checkpoint_every=k, store=S)   ShardedDSO             |
+   |    every k epochs the COMPLETE solver        .solver_state()      |
+   |    state (w, alpha, gw/ga, RNG key,          .snapshot_config()   |
+   |    cursor, history, config) crosses the      .restore()           |
+   |    seam as one DSOSnapshot                                        |
+   |       |                                                           |
+   |  snapshot.py (flat-npz codec + SnapshotStore; the one checkpoint  |
+   |       |       codec — training/checkpoint.py delegates here)      |
+   |       +-> resume.py     solve(..., init=snap): bit-identical      |
+   |       |                 (schedules.draw chunk-invariance)         |
+   |       +-> reshard.py    p -> p' live resharding: grid_to_csr      |
+   |       |                 re-blocks the packed tiles, the tilers    |
+   |       |                 re-tile, reshard_state repartitions       |
+   |       +-> supervisor.py crash/straggler/reshard fault plans       |
+   |                         over ShardedDSO, auto-resume from store   |
+   +-------------------------------------------------------------------+
+
 Legacy entry points (``core.dso.run_dso_serial`` / ``run_dso_grid`` /
 ``run_dso_grid_from_data``, ``core.dso_async.run_dso_random``,
 ``core.dso_dist.ShardedDSO``) are thin wrappers over these layers and
 keep their exact trajectories.  New schedules register in
 ``schedules.SCHEDULES``; new layouts/kernels register a ``TileBackend``
-— nothing else changes.
+— nothing else changes.  The runtime layer holds NO solver math: it
+persists exactly what the epoch driver threads between chunks, which is
+why resume promises 0.0 drift.
 """
 
 from repro.engine.backends import (LEGACY_IMPLS, TileBackend, get_backend,

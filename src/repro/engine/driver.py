@@ -200,13 +200,19 @@ def warn_ragged_eval(epochs: int, eval_every: int, *, stacklevel: int = 3):
 # ------------------------------------------------------------- solve() --
 
 
+def _next_multiple(t: int, k: int) -> int:
+    """Smallest multiple of k strictly greater than t."""
+    return (t // k + 1) * k
+
+
 def solve(source, *, backend="auto", schedule="cyclic", p: int = 4,
           epochs: int = 10, eta0: float = 0.1, use_adagrad: bool = True,
           row_batches: int = 1, alpha0: float = 0.0, eval_every: int = 1,
           seed: int = 0, eval_hook="auto", scan_epochs: bool = True,
           loss_name: str | None = None, reg_name: str | None = None,
           lam: float | None = None, m: int | None = None,
-          d: int | None = None) -> SolveResult:
+          d: int | None = None, checkpoint_every: int = 0, store=None,
+          init=None) -> SolveResult:
     """The one epoch driver behind grid / random / out-of-core execution.
 
     ``source`` is either a dense ``Problem`` (the grid data is built here,
@@ -224,9 +230,28 @@ def solve(source, *, backend="auto", schedule="cyclic", p: int = 4,
     Epochs between evaluation points run as ONE donated-scan dispatch
     (``run_epochs``); ``scan_epochs=False`` keeps the legacy
     one-dispatch-per-epoch loop (benchmark baseline).  Identical math.
+
+    Elastic-runtime seam (``repro.runtime``): ``checkpoint_every=k`` adds
+    chunk boundaries at every k-th GLOBAL epoch, and ``store`` (duck-typed,
+    e.g. ``runtime.snapshot.SnapshotStore``) receives
+    ``store.save(state=, key=, epochs_done=, history=, config=)`` at each
+    of them — the complete solver state at that boundary.  ``init`` (a
+    ``runtime.snapshot.DSOSnapshot``: ``state``/``key``/``epochs_done``/
+    ``history``) resumes from such a snapshot: the epoch cursor threads
+    through ``schedules.draw`` (whose chunk-invariance contract makes the
+    resumed trajectory bit-identical to the uninterrupted one) and the
+    step-size schedule.  Checkpoint boundaries that fall between
+    evaluation points introduce extra chunk lengths (one scan trace each);
+    prefer ``checkpoint_every`` a multiple of ``eval_every``.
     """
     if eval_every < 1:
         raise ValueError(f"eval_every must be >= 1, got {eval_every}")
+    if checkpoint_every < 0:
+        raise ValueError(
+            f"checkpoint_every must be >= 0, got {checkpoint_every}")
+    if store is not None and checkpoint_every < 1:
+        raise ValueError("a snapshot store needs checkpoint_every >= 1 to "
+                         "know its boundaries")
     sched = get_schedule(schedule)
     if isinstance(source, Problem):
         given = [k for k, v in (("loss_name", loss_name),
@@ -262,8 +287,7 @@ def solve(source, *, backend="auto", schedule="cyclic", p: int = 4,
             eval_hook = None
     check_tile_stats(data, row_batches)
     tile = as_tile_data(data)
-    p_, _, db = tile_dims(tile)
-    state = init_state_data(loss_name, data, alpha0)
+    p_, mb_, db = tile_dims(tile)
     kw = dict(backend=be.name, loss_name=loss_name, reg_name=reg_name,
               use_adagrad=use_adagrad, row_batches=row_batches, p=p_, db=db)
 
@@ -273,11 +297,39 @@ def solve(source, *, backend="auto", schedule="cyclic", p: int = 4,
     # balanced schedules (lpt) weigh the per-tile nnz; computed once here
     sched_ctx = ({"tile_nnz": np.asarray(tile.tile_row_nnz_g).sum(axis=-1)}
                  if sched.balanced else {})
-    key = jax.random.PRNGKey(seed)
-    history = []
-    t = 0
+    # the complete run record a snapshot carries (runtime.resume rebuilds
+    # the solver call from it; runtime.reshard rewrites p/mb/db)
+    cfg = dict(backend=be.name, schedule=sched.name, p=p_, mb=mb_, db=db,
+               m=int(m), d=int(d), loss_name=loss_name, reg_name=reg_name,
+               lam=float(lam_f), row_batches=row_batches, eta0=float(eta0),
+               use_adagrad=bool(use_adagrad), alpha0=float(alpha0),
+               seed=int(seed), eval_every=int(eval_every),
+               checkpoint_every=int(checkpoint_every), layout=be.layout,
+               inner_iteration=0)
+    if init is not None:
+        got = tuple(init.state.w_grid.shape)
+        if got != (p_, db):
+            raise ValueError(
+                f"snapshot state has w grid {got}, this run's grid is "
+                f"({p_}, {db}) — resuming across a different p needs "
+                f"repro.runtime.reshard first")
+        # copied, not aliased: the epoch scan donates its state, and the
+        # caller's snapshot must survive the resumed run (re-reshard, etc.)
+        state = jax.tree.map(lambda a: jnp.array(a, copy=True), init.state)
+        key = jnp.asarray(init.key)
+        t = int(init.epochs_done)
+        history = list(init.history)
+    else:
+        state = init_state_data(loss_name, data, alpha0)
+        key = jax.random.PRNGKey(seed)
+        t, history = 0, []
     while t < epochs:
-        n = min(chunk, epochs - t)
+        stops = [epochs]
+        if eval_hook is not None:
+            stops.append(_next_multiple(t, chunk))
+        if checkpoint_every:
+            stops.append(_next_multiple(t, checkpoint_every))
+        n = min(stops) - t
         key, perms = sched.draw(key, t, n, p_, **sched_ctx)
         etas = eta_schedule(eta0, t, n, use_adagrad)
         if scan_epochs:
@@ -288,9 +340,12 @@ def solve(source, *, backend="auto", schedule="cyclic", p: int = 4,
                 state = run_epoch(tile, state, perms[k], etas[k], lam_f,
                                   m_f, w_lo, w_hi, **kw)
         t += n
-        if eval_hook is not None:
+        if eval_hook is not None and (t % chunk == 0 or t == epochs):
             history.append(eval_hook(t, gather_w(state, d),
                                      gather_alpha(state, m)))
+        if store is not None and (t % checkpoint_every == 0 or t == epochs):
+            store.save(state=state, key=key, epochs_done=t,
+                       history=list(history), config=cfg)
     return SolveResult(gather_w(state, d), gather_alpha(state, m), history,
                        state)
 

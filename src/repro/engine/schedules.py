@@ -28,6 +28,20 @@ it, chunk by chunk, threading a PRNG key:
             permutation, so the sharded driver uses the all-gather path.
   fixed   — any explicit ``perms`` array (property tests, replaying a
             recorded NOMAD trace).
+
+Resume contract (the elastic runtime, ``repro.runtime``, relies on this):
+``draw(key, t0, n, p)`` must be CHUNK-INVARIANT — drawing n1 epochs and
+then n2 more while threading the returned key must produce the same
+``(n1 + n2, p, p)`` permutation stream as one draw of n1 + n2.  Cyclic and
+lpt are pure functions of (t0, p, costs); random splits its key exactly
+once per epoch (never per chunk), so the stream depends only on the key at
+the epoch boundary.  A snapshot therefore only needs ``(key, t0)`` to
+resume the schedule bit-identically; a schedule that violates this (e.g.
+one drawing from chunk-shaped batched keys) would silently break
+deterministic resume — keep the per-epoch key discipline when adding new
+schedules.  (Replaying a "fixed" schedule across a resume needs the
+caller to pass the same ``fixed_schedule(perms)`` object again: the
+snapshot config records only the name.)
 """
 
 from __future__ import annotations

@@ -174,6 +174,38 @@ def dso_block_step(X, y, w, alpha, gw, ga, tile_row_nnz, tile_col_nnz,
     return w2[:D], a2, gw2[:D], ga2
 
 
+@functools.lru_cache(maxsize=1)
+def mosaic_sparse_gather_error() -> str | None:
+    """Probe the default backend for the sparse kernel's gating ops.
+
+    Compiles (and runs) a minimal Pallas kernel exercising exactly what
+    ``kernels/dso_sparse.py`` needs beyond the dense kernels: a 2-D gather
+    from a VMEM vector and a scatter-add back into it.  Returns ``None``
+    when the backend lowers it (TPU with Mosaic scatter/gather support),
+    else the lowering error string — the ROADMAP "Mosaic-native
+    scatter/gather" step-2 seam: fall back LOUDLY instead of surfacing an
+    opaque Mosaic error from inside the real kernel.  Cached per process
+    (the platform does not change under a running JAX).
+    """
+    from jax.experimental import pallas as pl
+
+    def probe(cols_ref, w_ref, o_ref):
+        cols = cols_ref[...]                       # (8, 8) int32
+        g = jnp.take(w_ref[...][0], cols, axis=0)  # 2-D gather
+        o_ref[...] = jnp.zeros_like(w_ref[...]) \
+            .at[0, cols.reshape(-1)].add(g.reshape(-1))   # scatter-add
+
+    try:
+        out = pl.pallas_call(
+            probe, out_shape=jax.ShapeDtypeStruct((1, 128), jnp.float32),
+            interpret=False,
+        )(jnp.zeros((8, 8), jnp.int32), jnp.zeros((1, 128), jnp.float32))
+        jax.block_until_ready(out)
+        return None
+    except Exception as e:  # any lowering/compile failure gates the kernel
+        return f"{type(e).__name__}: {e}"
+
+
 def dso_sparse_block_step(cols, vals, y, w, alpha, gw, ga, tile_row_nnz,
                           tile_col_nnz, row_nnz, col_nnz, scalars, *,
                           row_batches: int, loss_name: str, reg_name: str,
@@ -189,12 +221,24 @@ def dso_sparse_block_step(cols, vals, y, w, alpha, gw, ga, tile_row_nnz,
 
     ``interpret=None`` auto-detects like the dense wrappers (compiled on a
     real TPU, interpreter elsewhere — ROADMAP "Mosaic-native" seam,
-    step 1).  On TPUs whose Mosaic build still lacks scatter-add / 2-D
-    gather lowering (kernels/dso_sparse.py), pass ``interpret=True``
-    explicitly to force the interpreter (or use the ``sparse_jnp``
-    backend, the same math through XLA's native scatter/gather).
+    step 1).  When compiled execution is requested on a platform whose
+    Mosaic build lacks scatter-add / 2-D gather lowering
+    (``mosaic_sparse_gather_error`` probe — seam step 2), this raises a
+    ValueError naming the ``sparse_jnp`` fallback instead of surfacing an
+    opaque Mosaic error from inside the kernel.
     """
     interpret = _resolve_interpret(interpret)
+    if not interpret:
+        err = mosaic_sparse_gather_error()
+        if err is not None:
+            raise ValueError(
+                f"sparse Pallas kernel requested compiled "
+                f"(interpret=False) but the {jax.default_backend()!r} "
+                f"backend cannot lower its scatter-add / 2-D gather "
+                f"(probe failed: {err.splitlines()[0]}); use the "
+                f"'sparse_jnp' backend (identical nnz-proportional math "
+                f"through XLA's native scatter/gather) or pass "
+                f"interpret=True for the Pallas interpreter")
     from repro.kernels import dso_sparse
     M = cols.shape[0]
     rb = M // row_batches

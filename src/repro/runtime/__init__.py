@@ -1,0 +1,57 @@
+"""Elastic runtime: checkpointed DSO state, deterministic resume, and
+p -> p' live resharding around the engine.
+
+The engine (``repro.engine``) is a pure function of (data layout, schedule,
+state): it holds everything in device memory and bakes the processor count
+p into the block grid at ingest.  This layer makes that survivable and
+elastic.  Data flow:
+
+      engine.solve(..., checkpoint_every=k, store=S)        ShardedDSO
+        |  every k epochs: the COMPLETE solver state          | .solver_state()
+        |  (w, alpha, gw/ga, RNG key, cursor, history,        | .snapshot_config()
+        v   config) crosses the seam as one DSOSnapshot       v
+   snapshot.py ──────────────────────────────────────────────────────────
+        |   flat-npz pytree codec (atomic writes; the same codec
+        |   training/checkpoint.py delegates to) + SnapshotStore
+        |   (dso_<epochs_done>.npz, latest-wins)
+        |
+        ├──> resume.py      solve(..., init=snap): replays the config and
+        |                   threads (key, cursor) back into schedules.draw
+        |                   — bit-identical to the uninterrupted run
+        |                   (draw's chunk-invariance contract)
+        |
+        ├──> reshard.py     p -> p': sparse.format.grid_to_csr re-blocks
+        |                   the packed tiles to the global CSR, the normal
+        |                   tilers re-tile at p' (statistics recomputed),
+        |                   reshard_state repartitions the blocked state —
+        |                   same iterate, new grid.  Exact at p' == p;
+        |                   a different serializable execution otherwise.
+        |
+        └──> supervisor.py  Supervisor(store, fault_plan).run_sharded():
+                            chunks ShardedDSO.run_epochs between
+                            checkpoint boundaries and planned faults;
+                            crash -> restore latest snapshot (re-run is
+                            bit-identical), reshard -> live resize onto a
+                            new mesh, straggler -> recorded (lpt schedule
+                            is the engine-level mitigation).
+
+Nothing here re-implements solver math: snapshots capture exactly what the
+epoch driver threads between chunks, which is why resume can promise 0.0
+drift instead of "close enough".
+"""
+
+from repro.runtime.reshard import reshard, reshard_state, retile
+from repro.runtime.resume import check_resumable, resume, solve_kwargs
+from repro.runtime.snapshot import (DSOSnapshot, SnapshotStore, flatten_pytree,
+                                    load_pytree, load_snapshot, read_meta,
+                                    save_pytree, save_snapshot)
+from repro.runtime.supervisor import (FaultEvent, Supervisor, make_fault_plan,
+                                      periodic_crashes)
+
+__all__ = [
+    "DSOSnapshot", "SnapshotStore", "flatten_pytree", "load_pytree",
+    "load_snapshot", "read_meta", "save_pytree", "save_snapshot",
+    "check_resumable", "resume", "solve_kwargs",
+    "reshard", "reshard_state", "retile",
+    "FaultEvent", "Supervisor", "make_fault_plan", "periodic_crashes",
+]

@@ -1,0 +1,115 @@
+"""Live p -> p' resharding of a checkpointed DSO run.
+
+The p chosen at ingest bakes the block grid into everything: the tile
+layout ``(p, p, mb, K)``, the per-tile nnz statistics, and the blocked
+state ``(p, db)`` / ``(p, mb)``.  Resharding rebuilds all of it for p'
+WITHOUT touching raw data:
+
+* **data** — ``sparse.format.grid_to_csr`` re-blocks the packed tiles back
+  into the global CSR (uniform, bucketed, and dense layouts), and the
+  ordinary tilers (the ``_tile_csr`` addressing pass) re-tile it at p',
+  recomputing every per-tile statistic for the new blocking;
+* **state** — ``reshard_state`` repartitions w/alpha and their AdaGrad
+  accumulators: gather to the real (m,)/(d,) coordinates (dropping the old
+  grid's padding), re-pad for p', re-block.  Padding positions restart at
+  0 exactly as a fresh run at p' initializes them (alpha padding is
+  masked to 0 by ``init_state_data``), so the resharded state is the SAME
+  iterate expressed on the new grid;
+* **config** — p/mb/db (and, for ``impl='auto'``-style upgrades, the
+  backend) are rewritten in the snapshot config so ``runtime.resume``
+  replays the right solver call.
+
+Equality contract (Lemma 2 is per-schedule): at p' == p the reshard is the
+identity and the continued run is bit-identical to the uninterrupted one;
+at p' != p the schedule itself changes (p' inner iterations of p'-sized
+blocks), so the continued run is a DIFFERENT serializable execution from
+the same iterate — tests pin that it converges to the same objective
+envelope as a fresh run at p'.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.engine.backends import get_backend
+from repro.engine.data import DSOState, make_grid_data
+from repro.sparse.format import (bucketed_grid_from_csr, grid_to_csr,
+                                 pad_to_multiple, sparse_grid_from_csr)
+from repro.runtime.snapshot import DSOSnapshot
+
+
+def _repartition(vec: np.ndarray, n: int, p_new: int) -> np.ndarray:
+    """(p, xb) blocked vector -> trim to its real n coords -> (p', xb')."""
+    flat = np.asarray(vec).reshape(-1)[:n]
+    n_pad = pad_to_multiple(n, p_new)
+    out = np.zeros(n_pad, flat.dtype)
+    out[:n] = flat
+    return out.reshape(p_new, n_pad // p_new)
+
+
+def reshard_state(state: DSOState, m: int, d: int, p_new: int) -> DSOState:
+    """Repartition a ``(p, db)``/``(p, mb)`` blocked ``DSOState`` onto the
+    p' grid of the same (m, d) problem.  Identity when p' == p."""
+    return DSOState(
+        w_grid=jnp.asarray(_repartition(state.w_grid, d, p_new)),
+        gw_grid=jnp.asarray(_repartition(state.gw_grid, d, p_new)),
+        alpha=jnp.asarray(_repartition(state.alpha, m, p_new)),
+        ga=jnp.asarray(_repartition(state.ga, m, p_new)),
+        epoch=state.epoch,
+    )
+
+
+def retile(data, m: int, d: int, p_new: int, *, row_batches: int = 1,
+           layout: str | None = None):
+    """Rebuild any grid's data at p' from its own packed tiles.
+
+    ``layout`` defaults to the input's ("dense" rebuilds a dense
+    ``GridData``; "sparse"/"bucketed" go through the block-ELL tilers).
+    The CSR round-trip is exact (``grid_to_csr``), so the only thing that
+    changes is the blocking — statistics are recomputed by the same
+    addressing pass a fresh ingest at p' would run.
+    """
+    csr, y = grid_to_csr(data, m, d)
+    if layout is None:
+        layout = ("dense" if hasattr(data, "Xg")
+                  else "bucketed" if hasattr(data, "bucket_id") else "sparse")
+    if layout == "sparse":
+        return sparse_grid_from_csr(csr, y, p_new, row_batches)
+    if layout == "bucketed":
+        return bucketed_grid_from_csr(csr, y, p_new, row_batches)
+    if layout != "dense":
+        raise ValueError(f"unknown layout {layout!r}: dense|sparse|bucketed")
+
+    class _Src:   # the minimal Problem-shaped view make_grid_data reads
+        X = csr.toarray()
+        row_nnz = np.maximum(csr.row_nnz(), 1.0)
+        col_nnz = np.maximum(csr.col_nnz(), 1.0)
+    _Src.y, _Src.m, _Src.d = y, m, d
+    return make_grid_data(_Src, p_new, row_batches)
+
+
+def reshard(snap: DSOSnapshot, p_new: int, *, data=None,
+            row_batches: int | None = None):
+    """Reshard a snapshot from its recorded p to ``p_new``.
+
+    Returns ``(snapshot', data')`` where ``snapshot'`` carries the
+    repartitioned state and a config rewritten for the p' grid, and
+    ``data'`` is the re-tiled grid (``None`` when ``data`` was not given —
+    the Problem-source path rebuilds its grid inside ``solve`` anyway).
+    Resume with ``runtime.resume.resume(source, store, snapshot=snap2)``
+    or ``engine.solve(..., p=p_new, init=snap2)``.
+    """
+    cfg = dict(snap.config)
+    m, d = cfg["m"], cfg["d"]
+    rb = cfg["row_batches"] if row_batches is None else row_batches
+    state2 = reshard_state(snap.state, m, d, p_new)
+    data2 = None
+    if data is not None:
+        data2 = retile(data, m, d, p_new, row_batches=rb,
+                       layout=get_backend(cfg["backend"]).layout)
+    cfg.update(p=p_new, db=int(state2.w_grid.shape[1]),
+               mb=int(state2.alpha.shape[1]), row_batches=rb)
+    return DSOSnapshot(state=state2, key=snap.key,
+                       epochs_done=snap.epochs_done,
+                       history=snap.history, config=cfg), data2

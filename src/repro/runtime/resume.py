@@ -1,0 +1,99 @@
+"""Deterministic resume: continue an interrupted ``solve`` from a snapshot.
+
+A ``DSOSnapshot`` records everything the epoch driver threads between
+chunks — the donated ``DSOState``, the schedule RNG key, the epoch cursor,
+the evaluation history, and the solver config — so ``resume`` is just
+``engine.solve`` called with ``init=snapshot`` and the original
+configuration replayed from ``snapshot.config``.  Bit-identity of the
+resumed trajectory rests on two engine contracts:
+
+* ``schedules.draw`` is chunk-invariant (drawing n1 then n2 epochs while
+  threading the key equals drawing n1+n2 at once — see
+  ``engine/schedules.py``), so the permutation stream after the cursor is
+  the one the uninterrupted run would have used; and
+* splitting the donated epoch scan at a chunk boundary applies the same
+  per-epoch jaxpr in the same order, so the arithmetic is unchanged.
+
+Resume therefore reproduces the uninterrupted run with max |delta| = 0.0
+for every backend x schedule (pinned by tests/test_runtime.py, including a
+real SIGKILL mid-run).  Resuming at a different p is a reshard, not a
+resume — ``resume`` refuses shape mismatches loudly and points at
+``repro.runtime.reshard``.
+"""
+
+from __future__ import annotations
+
+from repro.core.saddle import Problem
+from repro.engine.driver import solve
+from repro.runtime.snapshot import DSOSnapshot, SnapshotStore
+
+#: config keys replayed into solve() on resume (the rest of the config is
+#: informational: layout is implied by the backend, mb/db by the grid)
+_REPLAY = ("backend", "schedule", "p", "eta0", "use_adagrad",
+           "row_batches", "alpha0", "eval_every", "seed",
+           "checkpoint_every")
+_DATA_REPLAY = ("loss_name", "reg_name", "lam", "m", "d")
+
+
+def solve_kwargs(snap: DSOSnapshot, *, for_problem: bool) -> dict:
+    """The ``solve`` call recorded in a snapshot's config.
+
+    ``for_problem=True`` drops the loss/reg/lam/shape keys (a ``Problem``
+    source carries its own and ``solve`` rejects duplicates).
+    """
+    cfg = snap.config
+    kw = {k: cfg[k] for k in _REPLAY}
+    if not for_problem:
+        kw.update({k: cfg[k] for k in _DATA_REPLAY})
+    return kw
+
+
+def check_resumable(snap: DSOSnapshot, source) -> None:
+    """Loud validation that ``source`` is the problem the snapshot came
+    from (shape-wise): m/d must match, and the snapshot's grid must match
+    the p recorded with it."""
+    cfg = snap.config
+    if isinstance(source, Problem):
+        if (source.m, source.d) != (cfg["m"], cfg["d"]):
+            raise ValueError(
+                f"snapshot was taken on an ({cfg['m']}, {cfg['d']}) problem "
+                f"but the source is ({source.m}, {source.d}) — resume "
+                f"continues ONE run on ONE dataset")
+    got = tuple(snap.state.w_grid.shape)
+    want = (cfg["p"], cfg["db"])
+    if got != want:
+        raise ValueError(
+            f"snapshot state grid {got} does not match its own config "
+            f"{want} — corrupt snapshot, or state resharded without "
+            f"updating config (use repro.runtime.reshard.reshard)")
+
+
+def resume(source, store, *, epochs: int, snapshot: DSOSnapshot | None = None,
+           keep_checkpointing: bool = True, **overrides):
+    """Continue an interrupted run from ``store`` up to ``epochs`` total.
+
+    ``source`` is the same ``Problem`` or pre-built grid data the original
+    run used (snapshots hold solver state, not the dataset); ``store`` is a
+    ``SnapshotStore`` (or a directory path) whose latest snapshot is the
+    resume point unless ``snapshot`` is given explicitly.  The solver
+    configuration is replayed from the snapshot; ``overrides`` tweak it
+    (e.g. ``eval_hook=...`` for a data source).  With
+    ``keep_checkpointing`` the resumed run keeps writing into the same
+    store on the original cadence — crash again, resume again.
+
+    Returns the usual ``SolveResult``; the history contains the
+    pre-interruption entries followed by the resumed ones, exactly as the
+    uninterrupted run would have recorded them.
+    """
+    if isinstance(store, str):
+        store = SnapshotStore(store)
+    snap = store.load() if snapshot is None else snapshot
+    check_resumable(snap, source)
+    kw = solve_kwargs(snap, for_problem=isinstance(source, Problem))
+    if not keep_checkpointing:
+        kw["checkpoint_every"] = 0
+    kw.update(overrides)
+    ckpt = kw.get("checkpoint_every", 0)
+    return solve(source, epochs=epochs, init=snap,
+                 store=store if (keep_checkpointing and ckpt) else None,
+                 **kw)

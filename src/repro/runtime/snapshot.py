@@ -1,0 +1,234 @@
+"""Snapshots: the repo's one flat-npz pytree codec + complete DSO state.
+
+Two layers:
+
+* **Codec** — ``save_pytree`` / ``load_pytree``: any pytree of arrays is
+  gathered to host, keyed by its flattened tree path, and written as one
+  ``.npz`` (atomic tmp-file + ``os.replace``), with an optional
+  JSON-serializable ``meta`` dict riding in a reserved key.  Restore is by
+  path into the structure (and dtypes) of a ``tree_like`` template.  No
+  external checkpoint deps (orbax is absent in this environment).  This
+  generalizes the seed ``training/checkpoint.py`` helpers, which now
+  delegate here — one checkpoint codec in the repo.
+
+* **DSO snapshot** — ``DSOSnapshot`` captures the *complete* solver state
+  of an engine run: the ``DSOState`` pytree (w, alpha, AdaGrad gw/ga,
+  device epoch counter), the schedule RNG key, the epoch cursor, the
+  evaluation history, and the solver config (backend/schedule/loss/reg/
+  lam/shape/step-size).  ``SnapshotStore`` is the directory convention the
+  epoch driver (``engine.driver.solve(..., checkpoint_every=, store=)``),
+  ``runtime.resume`` and ``runtime.supervisor`` share: one
+  ``dso_<epochs_done>.npz`` per checkpoint, latest-wins on load.
+
+A snapshot is taken only at epoch boundaries (the inner-iteration cursor
+is always 0 there; it is still recorded in ``config`` for forward
+compatibility), so resuming replays ``schedules.draw`` from the stored
+``(key, epochs_done)`` — chunk-invariance of ``draw`` (see
+``engine/schedules.py``) makes the resumed trajectory bit-identical to the
+uninterrupted one.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import re
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.engine.data import DSOState
+
+Array = jax.Array
+
+_META_KEY = "__meta__"
+_SEP = "|"
+
+
+# ------------------------------------------------------------- the codec --
+
+
+def _key_str(k) -> str:
+    if isinstance(k, jax.tree_util.DictKey):
+        key = str(k.key)
+        if _SEP in key:
+            raise ValueError(
+                f"pytree dict key {key!r} contains the path separator "
+                f"{_SEP!r}; flat npz paths would collide")
+        return f"d:{key}"
+    if isinstance(k, jax.tree_util.SequenceKey):
+        return f"i:{k.idx}"
+    if isinstance(k, jax.tree_util.GetAttrKey):
+        return f"a:{k.name}"
+    return f"x:{k}"
+
+
+def flatten_pytree(tree) -> dict:
+    """Pytree -> {flat path: host array} (the npz payload)."""
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        flat[_SEP.join(_key_str(k) for k in path)] = np.asarray(leaf)
+    return flat
+
+
+def _json_default(o):
+    if hasattr(o, "item") and getattr(o, "ndim", 1) == 0:
+        return o.item()
+    if isinstance(o, np.ndarray):
+        return o.tolist()
+    raise TypeError(f"snapshot meta value {o!r} is not JSON-serializable")
+
+
+def save_pytree(path: str, tree, meta: dict | None = None) -> str:
+    """Write a pytree of arrays (+ optional JSON ``meta``) as one ``.npz``.
+
+    Atomic: written to a tmp file in the same directory and ``os.replace``d
+    into place, so a reader (or a crash mid-write) never sees a truncated
+    checkpoint.
+    """
+    flat = flatten_pytree(tree)
+    if _META_KEY in flat:
+        raise ValueError(f"pytree path collides with the reserved meta key "
+                         f"{_META_KEY!r}")
+    if meta is not None:
+        flat[_META_KEY] = np.asarray(json.dumps(meta,
+                                                default=_json_default))
+    tmp = path + ".tmp.npz"   # ends in .npz so np.savez appends nothing
+    np.savez(tmp, **flat)
+    os.replace(tmp, path)
+    return path
+
+
+def read_meta(path: str) -> dict | None:
+    """The JSON ``meta`` of a saved pytree (None when saved without one)."""
+    with np.load(path) as data:
+        if _META_KEY not in data:
+            return None
+        return json.loads(str(data[_META_KEY][()]))
+
+
+def load_pytree(path: str, tree_like):
+    """Restore into the structure (and leaf dtypes) of ``tree_like``.
+
+    Returns ``(tree, meta)``.  Leaves whose template is a jax array come
+    back as ``jnp`` arrays (ready to be donated straight back into the
+    epoch scan); numpy templates restore as numpy with the template dtype
+    kept exactly (jnp would silently truncate float64/int64 under the
+    default x32 mode — wrong for a generic codec).
+    """
+    with np.load(path) as data:
+        meta = (json.loads(str(data[_META_KEY][()]))
+                if _META_KEY in data else None)
+        leaves_with_path, treedef = jax.tree_util.tree_flatten_with_path(
+            tree_like)
+        new_leaves = []
+        for p, leaf in leaves_with_path:
+            key = _SEP.join(_key_str(k) for k in p)
+            if key not in data:
+                raise ValueError(f"checkpoint {path} lacks leaf {key!r} "
+                                 f"required by the template structure")
+            arr = data[key]
+            if arr.shape != tuple(np.shape(leaf)):
+                raise ValueError(
+                    f"checkpoint leaf {key!r} has shape {arr.shape}, "
+                    f"template expects {tuple(np.shape(leaf))} — resuming "
+                    f"into a different grid? reshard first "
+                    f"(repro.runtime.reshard)")
+            new_leaves.append(
+                jnp.asarray(arr, leaf.dtype) if isinstance(leaf, jax.Array)
+                else np.asarray(arr, np.asarray(leaf).dtype))
+    return treedef.unflatten(new_leaves), meta
+
+
+# ------------------------------------------------------- the DSO snapshot --
+
+
+class DSOSnapshot(NamedTuple):
+    """The complete state of an engine run at an epoch boundary."""
+
+    state: DSOState     #: (w_grid, gw_grid, alpha, ga, epoch) device pytree
+    key: Array          #: schedule RNG key AFTER drawing epochs_done epochs
+    epochs_done: int    #: epoch cursor (chunk boundary the snapshot sits on)
+    history: tuple      #: evaluation-hook dicts recorded so far
+    config: dict        #: backend/schedule/loss/reg/lam/shape/... record
+
+
+def _state_like(config: dict) -> DSOState:
+    # jnp templates: snapshot state restores device-side, like it was saved
+    p, mb, db = int(config["p"]), int(config["mb"]), int(config["db"])
+    z = jnp.zeros
+    return DSOState(w_grid=z((p, db), jnp.float32),
+                    gw_grid=z((p, db), jnp.float32),
+                    alpha=z((p, mb), jnp.float32),
+                    ga=z((p, mb), jnp.float32),
+                    epoch=jnp.int32(0))
+
+
+def save_snapshot(path: str, snap: DSOSnapshot) -> str:
+    key = np.asarray(snap.key)
+    meta = dict(epochs_done=int(snap.epochs_done),
+                history=list(snap.history),
+                config=dict(snap.config),
+                key=key.tolist(), key_dtype=str(key.dtype))
+    return save_pytree(path, snap.state, meta=meta)
+
+
+def load_snapshot(path: str) -> DSOSnapshot:
+    meta = read_meta(path)
+    if meta is None or "config" not in meta:
+        raise ValueError(f"{path} is not a DSO snapshot (no config meta)")
+    state, _ = load_pytree(path, _state_like(meta["config"]))
+    key = jnp.asarray(np.asarray(meta["key"], dtype=meta["key_dtype"]))
+    return DSOSnapshot(state=state, key=key,
+                       epochs_done=int(meta["epochs_done"]),
+                       history=tuple(meta["history"]),
+                       config=meta["config"])
+
+
+class SnapshotStore:
+    """Directory of ``dso_<epochs_done>.npz`` snapshots, latest-wins.
+
+    The duck-typed contract the epoch driver calls (keeping the engine free
+    of runtime imports) is ``store.save(state=, key=, epochs_done=,
+    history=, config=)``; everything else here is for the resume/supervise
+    side.
+    """
+
+    _PAT = re.compile(r"dso_(\d+)\.npz$")
+
+    def __init__(self, directory: str):
+        self.directory = directory
+
+    def path(self, epochs_done: int) -> str:
+        return os.path.join(self.directory, f"dso_{epochs_done:08d}.npz")
+
+    def save(self, *, snapshot: DSOSnapshot | None = None, state=None,
+             key=None, epochs_done: int = 0, history=(),
+             config: dict | None = None) -> str:
+        if snapshot is None:
+            snapshot = DSOSnapshot(state=state, key=key,
+                                   epochs_done=int(epochs_done),
+                                   history=tuple(history),
+                                   config=dict(config or {}))
+        os.makedirs(self.directory, exist_ok=True)
+        return save_snapshot(self.path(snapshot.epochs_done), snapshot)
+
+    def epochs(self) -> list:
+        if not os.path.isdir(self.directory):
+            return []
+        return sorted(int(m.group(1)) for f in os.listdir(self.directory)
+                      if (m := self._PAT.match(f)))
+
+    def latest(self):
+        eps = self.epochs()
+        return eps[-1] if eps else None
+
+    def load(self, epochs_done: int | None = None) -> DSOSnapshot:
+        if epochs_done is None:
+            epochs_done = self.latest()
+            if epochs_done is None:
+                raise FileNotFoundError(
+                    f"no DSO snapshots in {self.directory}")
+        return load_snapshot(self.path(epochs_done))

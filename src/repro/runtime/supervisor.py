@@ -1,0 +1,207 @@
+"""Supervision: drive ``ShardedDSO`` under a deterministic fault plan.
+
+The supervisor is the process that owns the run, not the math: it chunks
+``run_epochs`` between checkpoint boundaries and planned fault epochs,
+snapshots the complete solver state every ``checkpoint_every`` epochs into
+a ``SnapshotStore``, and reacts to faults:
+
+  crash      — the device state is considered lost: the solver is restored
+               from the latest on-disk snapshot (key + cursor + blocked
+               state) and re-runs the lost epochs.  Because the schedule
+               stream is a function of (stored key, cursor), the re-run is
+               bit-identical and the final trajectory equals the
+               uninterrupted one.
+  reshard    — live p -> p' elasticity: snapshot at the boundary,
+               ``reshard_state`` onto the p' grid, rebuild the solver on a
+               p'-device mesh, continue the SAME iterate (no epochs lost).
+  straggler  — a slow worker, recorded (and optionally simulated with a
+               wall-clock delay); the math is bulk-synchronous so only the
+               epoch wall time changes — the "lpt" schedule is the
+               engine-level mitigation.
+
+Fault plans are explicit ``FaultEvent`` tuples or drawn deterministically
+from a seed (``make_fault_plan``), so every kill-restore-reshard scenario
+replays exactly.  Auto-resume extends across process restarts AND cluster
+resizes: a supervisor started over a non-empty store adopts the latest
+snapshot, resharding it if the new mesh has a different p.
+"""
+
+from __future__ import annotations
+
+import time
+from collections import deque
+from typing import NamedTuple
+
+import numpy as np
+
+from repro.core.dso_dist import ShardedDSO, make_dso_mesh
+from repro.engine.driver import _next_multiple
+from repro.runtime.reshard import reshard_state
+from repro.runtime.snapshot import SnapshotStore
+
+
+class FaultEvent(NamedTuple):
+    """One planned fault, fired when the run reaches ``epoch``."""
+
+    epoch: int
+    kind: str            # "crash" | "reshard" | "straggler"
+    arg: int | None = None   # reshard: p'; straggler: worker id
+
+    def describe(self) -> str:
+        extra = {"reshard": f" -> p'={self.arg}",
+                 "straggler": f" worker {self.arg}"}.get(self.kind, "")
+        return f"{self.kind}@{self.epoch}{extra}"
+
+
+_KINDS = ("crash", "reshard", "straggler")
+
+
+def make_fault_plan(seed: int, epochs: int, *, crash_rate: float = 0.0,
+                    straggler_rate: float = 0.0, p: int = 1,
+                    reshard_at: dict | None = None) -> tuple:
+    """Deterministic, seeded fault plan over ``epochs`` epochs.
+
+    Each epoch boundary 1..epochs-1 independently draws a crash
+    (``crash_rate``) and a straggler (``straggler_rate``, uniform worker in
+    0..p-1); ``reshard_at`` maps epoch -> p' for planned resizes.  Same
+    seed, same plan — the supervisor's whole point is replayable chaos.
+    """
+    rng = np.random.default_rng(seed)
+    plan = []
+    for e in range(1, epochs):
+        if rng.random() < crash_rate:
+            plan.append(FaultEvent(e, "crash"))
+        if rng.random() < straggler_rate:
+            plan.append(FaultEvent(e, "straggler", int(rng.integers(p))))
+    for e, p_new in sorted((reshard_at or {}).items()):
+        plan.append(FaultEvent(int(e), "reshard", int(p_new)))
+    return tuple(sorted(plan))
+
+
+def periodic_crashes(every: int, epochs: int) -> tuple:
+    """The simplest plan: a crash every ``every`` epochs (the CI smoke's
+    "2-epoch fault plan")."""
+    return tuple(FaultEvent(e, "crash") for e in range(every, epochs, every))
+
+
+class Supervisor:
+    """Checkpointing fault-tolerant driver around ``ShardedDSO``.
+
+    ``store`` — a ``SnapshotStore`` (or directory path); every snapshot
+    carries the full solver state + config, so a fresh Supervisor over the
+    same store resumes where the last one stopped (even at a different p).
+    ``log`` records every supervision decision; ``history`` the per-
+    checkpoint metrics.
+    """
+
+    def __init__(self, store, *, checkpoint_every: int = 1, fault_plan=(),
+                 eta0: float = 0.1, straggler_delay_s: float = 0.0,
+                 record_metrics: bool = True):
+        if checkpoint_every < 1:
+            raise ValueError(
+                f"checkpoint_every must be >= 1, got {checkpoint_every}")
+        for ev in fault_plan:
+            if ev.kind not in _KINDS:
+                raise ValueError(f"unknown fault kind {ev.kind!r}: {_KINDS}")
+        self.store = SnapshotStore(store) if isinstance(store, str) else store
+        self.checkpoint_every = checkpoint_every
+        self.fault_plan = tuple(sorted(fault_plan))
+        self.eta0 = eta0
+        self.straggler_delay_s = straggler_delay_s
+        self.record_metrics = record_metrics
+        self.log: list = []
+        self.history: list = []
+
+    # ------------------------------------------------------------ pieces --
+
+    def _save(self, opt: ShardedDSO) -> None:
+        if self.record_metrics:
+            self.history.append(opt.metrics())
+        # the supervisor owns the step size and checkpoint cadence, and the
+        # solver only learns eta0 at its first run_epochs — stamp the real
+        # values so runtime.resume replays them even from the epoch-0
+        # anchor snapshot
+        cfg = dict(opt.snapshot_config(), eta0=float(self.eta0),
+                   checkpoint_every=int(self.checkpoint_every))
+        self.store.save(state=opt.solver_state(), key=opt.key,
+                        epochs_done=opt.epochs_done,
+                        history=list(self.history), config=cfg)
+
+    def _adopt(self, opt: ShardedDSO, snap) -> None:
+        """Restore a snapshot into ``opt``, resharding if the grids differ
+        (resume on a resized cluster)."""
+        st = snap.state
+        if tuple(st.w_grid.shape) != (opt.p, opt.db):
+            self.log.append(dict(kind="reshard_on_resume",
+                                 snapshot_p=int(st.w_grid.shape[0]),
+                                 mesh_p=opt.p))
+            st = reshard_state(st, opt.prob.m, opt.prob.d, opt.p)
+        opt.restore(st, key=snap.key, epochs_done=snap.epochs_done)
+        self.history = list(snap.history)
+
+    def _apply(self, ev: FaultEvent, opt: ShardedDSO,
+               dso_kw: dict) -> ShardedDSO:
+        if ev.kind == "crash":
+            snap = self.store.load()
+            self.log.append(dict(kind="crash", epoch=opt.epochs_done,
+                                 resumed_from=snap.epochs_done,
+                                 lost_epochs=opt.epochs_done
+                                 - snap.epochs_done))
+            self._adopt(opt, snap)
+            return opt
+        if ev.kind == "reshard":
+            if self.store.latest() != opt.epochs_done:
+                self._save(opt)       # live reshard: nothing is lost
+            state = reshard_state(opt.solver_state(), opt.prob.m,
+                                  opt.prob.d, ev.arg)
+            key, done, p_old = opt.key, opt.epochs_done, opt.p
+            opt = ShardedDSO(opt.prob, make_dso_mesh(ev.arg), **dso_kw)
+            opt.restore(state, key=key, epochs_done=done)
+            self.log.append(dict(kind="reshard", epoch=done, p_from=p_old,
+                                 p_to=ev.arg))
+            return opt
+        # straggler: bulk-synchronous math is unchanged; record (and
+        # optionally simulate) the wall-clock skew
+        self.log.append(dict(kind="straggler", epoch=opt.epochs_done,
+                             worker=ev.arg,
+                             simulated_delay_s=self.straggler_delay_s))
+        if self.straggler_delay_s:
+            time.sleep(self.straggler_delay_s)
+        return opt
+
+    # -------------------------------------------------------------- drive --
+
+    def run_sharded(self, prob, epochs: int, mesh=None, **dso_kw):
+        """Run ``prob`` for ``epochs`` total epochs under the fault plan.
+
+        ``dso_kw`` goes to every ``ShardedDSO`` built along the way
+        (``impl=``, ``schedule=``, ``row_batches=``, ...).  Returns the
+        final ``(ShardedDSO, log)``; per-checkpoint metrics are in
+        ``self.history`` (also persisted inside each snapshot).
+        """
+        opt = ShardedDSO(prob, mesh, **dso_kw)
+        if self.store.latest() is not None:
+            snap = self.store.load()
+            self._adopt(opt, snap)
+            self.log.append(dict(kind="resume", epoch=opt.epochs_done))
+        else:
+            self._save(opt)           # epoch-0 anchor for early crashes
+        # events in the already-completed past are gone; an event AT the
+        # current epoch has not fired in THIS supervisor — fire it now
+        # (e.g. a planned resize scheduled exactly at the resume point)
+        pending = deque(ev for ev in self.fault_plan
+                        if ev.epoch >= opt.epochs_done)
+        while pending and pending[0].epoch <= opt.epochs_done:
+            opt = self._apply(pending.popleft(), opt, dso_kw)
+        while opt.epochs_done < epochs:
+            t = opt.epochs_done
+            stops = [epochs, _next_multiple(t, self.checkpoint_every)]
+            if pending:
+                stops.append(max(pending[0].epoch, t + 1))
+            opt.run_epochs(min(stops) - t, self.eta0)
+            t = opt.epochs_done
+            if t % self.checkpoint_every == 0 or t == epochs:
+                self._save(opt)
+            while pending and pending[0].epoch <= t:
+                opt = self._apply(pending.popleft(), opt, dso_kw)
+        return opt, self.log

@@ -491,6 +491,60 @@ def make_bucketed_grid_data(prob, p: int, row_batches: int = 1,
                                   **kw)
 
 
+def grid_to_csr(data, m: int, d: int):
+    """Reconstruct the global ``(m, d)`` ``CSRMatrix`` + labels from any
+    grid layout — the p -> p' resharding path (``repro.runtime.reshard``)
+    re-blocks from the packed tiles themselves, no raw data file needed.
+
+    Accepts ``SparseGridData``, ``BucketedGridData``, or a dense
+    ``GridData``-like (anything with ``Xg``); ``m``/``d`` are the real
+    (unpadded) problem sizes, trimming the tiler's padding rows/columns.
+    Stored entries are recovered from ``vals != 0`` — the tilers' padding
+    slots carry exactly 0, and explicit zeros were already dropped by
+    ``CSRMatrix.from_dense`` / the libsvm ingester — and sorted back to
+    (row, col) order, so round-tripping a grid through here and the tiler
+    reproduces the grid (and all its statistics) exactly.
+    """
+    p, mb, db = data.p, data.mb, data.db
+    if isinstance(data, BucketedGridData):
+        qq, bb, ii, kk, vv = [], [], [], [], []
+        bucket_id = np.asarray(data.bucket_id)
+        bucket_pos = np.asarray(data.bucket_pos)
+        for q in range(p):
+            for b in range(p):
+                k, s = int(bucket_id[q, b]), int(bucket_pos[q, b])
+                vals = np.asarray(data.vals_b[k][q, s])
+                i, pos = np.nonzero(vals)
+                qq.append(np.full(i.shape, q, np.int64))
+                bb.append(np.full(i.shape, b, np.int64))
+                ii.append(i.astype(np.int64))
+                kk.append(np.asarray(data.cols_b[k][q, s])[i, pos]
+                          .astype(np.int64))
+                vv.append(vals[i, pos])
+        q_i, b_i, i_i = map(np.concatenate, (qq, bb, ii))
+        local_cols, vals = np.concatenate(kk), np.concatenate(vv)
+        rows, cols = q_i * mb + i_i, b_i * db + local_cols
+    elif isinstance(data, SparseGridData):
+        vals_g = np.asarray(data.vals_g)
+        q_i, b_i, i_i, pos = np.nonzero(vals_g)
+        rows = q_i.astype(np.int64) * mb + i_i
+        cols = (b_i.astype(np.int64) * db
+                + np.asarray(data.cols_g)[q_i, b_i, i_i, pos])
+        vals = vals_g[q_i, b_i, i_i, pos]
+    else:   # dense GridData-like
+        X = np.asarray(data.Xg).reshape(p * mb, -1)[:m, :d]
+        y = np.asarray(data.yg).reshape(-1)[:m]
+        return CSRMatrix.from_dense(X), y
+    keep = (rows < m) & (cols < d)   # belt-and-braces: pads carry val 0
+    order = np.lexsort((cols[keep], rows[keep]))
+    rows, cols, vals = rows[keep][order], cols[keep][order], vals[keep][order]
+    indptr = np.zeros(m + 1, np.int64)
+    np.cumsum(np.bincount(rows, minlength=m), out=indptr[1:])
+    csr = CSRMatrix(indptr=indptr, indices=cols.astype(np.int32),
+                    values=vals.astype(np.float32), shape=(m, d))
+    return csr, np.asarray(data.yg).reshape(-1)[:m]
+
+
 def csr_k_per_tile(csr: CSRMatrix, p: int) -> np.ndarray:
     """(p, p) per-tile raw packed widths (max row nnz within each tile) —
     the ``impl="auto"`` skew probe, O(nnz) without building any grid."""

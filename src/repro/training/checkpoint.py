@@ -1,8 +1,10 @@
 """Checkpointing: flat-path .npz snapshots of the TrainState pytree.
 
-No external deps (orbax absent in this environment): leaves are gathered to
-host, keyed by their tree path, and restored by path. Works for any pytree
-of arrays; step metadata travels in a reserved key.
+Thin delegation over the repo's one checkpoint codec
+(``repro.runtime.snapshot.save_pytree`` / ``load_pytree`` — host-gathered
+leaves keyed by tree path, atomic writes, no external deps); this module
+only keeps the training-loop conventions: ``ckpt_<step>.npz`` naming and
+the ``(state, step)`` restore contract.
 """
 
 from __future__ import annotations
@@ -10,40 +12,15 @@ from __future__ import annotations
 import os
 import re
 
-import jax
 import numpy as np
 
-_STEP_KEY = "__step__"
-_SEP = "|"
-
-
-def _flatten(tree):
-    flat = {}
-    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
-        key = _SEP.join(_key_str(k) for k in path)
-        flat[key] = np.asarray(leaf)
-    return flat
-
-
-def _key_str(k) -> str:
-    if isinstance(k, jax.tree_util.DictKey):
-        return f"d:{k.key}"
-    if isinstance(k, jax.tree_util.SequenceKey):
-        return f"i:{k.idx}"
-    if isinstance(k, jax.tree_util.GetAttrKey):
-        return f"a:{k.name}"
-    return f"x:{k}"
+from repro.runtime.snapshot import load_pytree, save_pytree
 
 
 def save(directory: str, state, step: int) -> str:
     os.makedirs(directory, exist_ok=True)
-    flat = _flatten(state)
-    flat[_STEP_KEY] = np.asarray(step)
     path = os.path.join(directory, f"ckpt_{step:08d}.npz")
-    tmp = path + ".tmp"
-    np.savez(tmp, **flat)
-    os.replace(tmp + ".npz" if os.path.exists(tmp + ".npz") else tmp, path)
-    return path
+    return save_pytree(path, state, meta={"step": int(step)})
 
 
 def latest_step(directory: str) -> int | None:
@@ -60,13 +37,13 @@ def restore(directory: str, state_like, step: int | None = None):
     if step is None:
         raise FileNotFoundError(f"no checkpoints in {directory}")
     path = os.path.join(directory, f"ckpt_{step:08d}.npz")
-    data = np.load(path)
-    leaves_with_path, treedef = jax.tree_util.tree_flatten_with_path(
-        state_like)
-    new_leaves = []
-    for p, leaf in leaves_with_path:
-        key = _SEP.join(_key_str(k) for k in p)
-        arr = data[key]
-        assert arr.shape == tuple(leaf.shape), (key, arr.shape, leaf.shape)
-        new_leaves.append(jax.numpy.asarray(arr, leaf.dtype))
-    return treedef.unflatten(new_leaves), int(data[_STEP_KEY])
+    state, meta = load_pytree(path, state_like)
+    if meta is None:
+        # pre-codec file: the step travelled in a reserved array key (the
+        # leaf paths are unchanged, so the state itself loaded fine)
+        with np.load(path) as data:
+            if "__step__" not in data:
+                raise ValueError(f"{path} has neither checkpoint meta nor "
+                                 f"a legacy __step__ key")
+            return state, int(data["__step__"])
+    return state, int(meta["step"])

@@ -194,3 +194,38 @@ def test_ssd_state_decay_invariant():
     want = jnp.einsum("btn,bth,btn,bthd->bthd", C, dt, B, x)
     np.testing.assert_allclose(np.asarray(y), np.asarray(want), rtol=1e-4,
                                atol=1e-5)
+
+
+# ------------------------------------------- Mosaic scatter/gather gate --
+
+
+def test_compiled_sparse_kernel_fails_loudly_without_mosaic_scatter(
+        monkeypatch):
+    """ROADMAP "Mosaic-native scatter/gather" step 2: requesting the sparse
+    Pallas kernel COMPILED on a platform whose backend cannot lower its
+    scatter-add / 2-D gather raises a ValueError naming the sparse_jnp
+    fallback, not an opaque lowering error.  Platform mocked: _on_tpu True
+    makes interpret=None resolve to compiled, and the probe kernel then
+    hits this container's real (CPU) backend, which lacks the lowering."""
+    monkeypatch.setattr(ops, "_on_tpu", lambda: True)
+    ops.mosaic_sparse_gather_error.cache_clear()
+    try:
+        z8 = jnp.zeros(8, jnp.float32)
+        with pytest.raises(ValueError, match="sparse_jnp"):
+            ops.dso_sparse_block_step(
+                jnp.zeros((8, 8), jnp.int32), jnp.zeros((8, 8), jnp.float32),
+                z8, z8, z8, z8, z8, jnp.ones(8), jnp.ones((1, 8)),
+                jnp.ones(8), jnp.ones(8),
+                jnp.asarray([0.5, 1e-3, 8.0, -31.6, 31.6], jnp.float32),
+                row_batches=1, loss_name="hinge", reg_name="l2")
+        # explicit interpret=True must keep working under the mock
+        out = ops.dso_sparse_block_step(
+            jnp.zeros((8, 8), jnp.int32), jnp.zeros((8, 8), jnp.float32),
+            z8, z8, z8, z8, z8, jnp.ones(8), jnp.ones((1, 8)),
+            jnp.ones(8), jnp.ones(8),
+            jnp.asarray([0.5, 1e-3, 8.0, -31.6, 31.6], jnp.float32),
+            row_batches=1, loss_name="hinge", reg_name="l2",
+            interpret=True)
+        assert np.isfinite(np.asarray(out[0])).all()
+    finally:
+        ops.mosaic_sparse_gather_error.cache_clear()

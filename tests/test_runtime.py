@@ -1,0 +1,502 @@
+"""Elastic runtime: snapshot codec, deterministic resume, reshard,
+supervision.
+
+Six groups:
+
+  1. codec — flat-npz pytree round-trip (deterministic + hypothesis
+     property over random nested pytrees), atomicity conventions, loud
+     shape/meta errors; the training checkpoint module delegates here.
+  2. snapshot/store — DSOSnapshot round-trip (state + RNG key + cursor +
+     history + config), latest-wins store, driver wiring (solve writes at
+     checkpoint_every boundaries, validates store/init arguments).
+  3. resume determinism — checkpoint + resume reproduces the uninterrupted
+     trajectory with max |delta| = 0.0 (the acceptance gate) for
+     {dense_jnp, sparse_bucketed_jnp} x {cyclic, lpt} (+ random), both
+     in-process and across a REAL SIGKILL mid-run at a checkpoint
+     boundary (subprocess); schedule chunk-invariance (the contract
+     resume rests on) for every registered schedule.
+  4. reshard — grid_to_csr round-trips every layout exactly; p' == p
+     resharding continues bit-identically; p=8 -> p' in {4, 16} runs to
+     completion on uniform AND bucketed layouts with the fresh-run
+     objective envelope at convergence.
+  5. supervision — crash plans recover exactly (vs the uninterrupted
+     sharded run), reshard + restart-resize flows (subprocess with 4 host
+     devices, like the other shard_map tests).
+  6. satellites — compiled-sparse-kernel ValueError naming sparse_jnp on
+     a platform without Mosaic scatter/gather (mocked platform; see also
+     tests/test_kernels.py).
+"""
+
+import os
+import signal
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from _hypothesis_compat import given, settings, st
+from repro.data.synthetic import make_classification
+from repro.engine import make_grid_data, solve
+from repro.engine.schedules import SCHEDULES
+from repro.runtime import (DSOSnapshot, SnapshotStore, load_pytree,
+                           load_snapshot, read_meta, reshard, reshard_state,
+                           resume, save_pytree, save_snapshot)
+from repro.runtime.reshard import retile
+from repro.sparse.format import (grid_to_csr, make_bucketed_grid_data,
+                                 make_sparse_grid_data, sparse_grid_from_csr,
+                                 CSRMatrix)
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _prob(m=64, d=48, density=0.15, seed=0, loss="hinge"):
+    return make_classification(m=m, d=d, density=density, loss=loss,
+                               lam=1e-3, seed=seed)
+
+
+# -------------------------------------------------------------------- codec --
+
+
+def _tree_equal(a, b):
+    la, ta = jax.tree_util.tree_flatten(a)
+    lb, tb = jax.tree_util.tree_flatten(b)
+    assert ta == tb
+    for x, y in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_codec_roundtrip_deterministic(tmp_path):
+    tree = {"w": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+            "nested": [np.int32(7), (np.ones(4), np.zeros((1, 2)))],
+            "flag": np.bool_(True)}
+    path = str(tmp_path / "t.npz")
+    save_pytree(path, tree, meta={"step": 3, "note": "hi"})
+    got, meta = load_pytree(path, tree)
+    _tree_equal(got, tree)
+    assert meta == {"step": 3, "note": "hi"}
+    assert read_meta(path) == meta
+    # jax templates restore device-side; numpy templates keep exact dtype
+    assert isinstance(got["w"], jax.Array) and got["w"].dtype == jnp.float32
+    assert isinstance(got["nested"][1][0], np.ndarray)
+    assert got["nested"][1][0].dtype == np.float64
+
+
+def _random_pytree(rng, depth=3):
+    if depth == 0 or rng.random() < 0.4:
+        shape = tuple(rng.integers(1, 4, size=rng.integers(0, 3)))
+        dtype = [np.float32, np.float64, np.int32, np.int64][rng.integers(4)]
+        return (rng.normal(size=shape) * 10).astype(dtype)
+    kind = rng.integers(3)
+    children = [_random_pytree(rng, depth - 1)
+                for _ in range(rng.integers(1, 4))]
+    if kind == 0:
+        return {f"k{i}_{rng.integers(100)}": c
+                for i, c in enumerate(children)}
+    return tuple(children) if kind == 1 else list(children)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(min_value=0, max_value=2**31 - 1))
+def test_codec_roundtrip_property(seed):
+    """Hypothesis: ANY nested dict/list/tuple pytree of arrays round-trips
+    exactly through the flat-npz codec."""
+    import tempfile
+    rng = np.random.default_rng(seed)
+    tree = _random_pytree(rng)
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "t.npz")
+        save_pytree(path, tree, meta={"seed": seed})
+        got, meta = load_pytree(path, tree)
+    _tree_equal(got, tree)
+    assert meta["seed"] == seed
+
+
+def test_codec_loud_errors(tmp_path):
+    path = str(tmp_path / "t.npz")
+    save_pytree(path, {"a": np.ones(3)})
+    with pytest.raises(ValueError, match="shape"):
+        load_pytree(path, {"a": np.ones(4)})
+    with pytest.raises(ValueError, match="lacks leaf"):
+        load_pytree(path, {"b": np.ones(3)})
+    with pytest.raises(ValueError, match="separator"):
+        save_pytree(path, {"a|b": np.ones(3)})
+    assert read_meta(path) is None   # saved without meta
+    with pytest.raises(ValueError, match="not a DSO snapshot"):
+        load_snapshot(path)
+
+
+def test_training_checkpoint_delegates_to_codec(tmp_path):
+    """One checkpoint codec in the repo: the training module's files are
+    codec files (readable by load_pytree, meta carries the step)."""
+    from repro.training import checkpoint as ckpt
+    state = {"params": {"w": np.ones((2, 2), np.float32)},
+             "opt": [np.zeros(3)]}
+    path = ckpt.save(str(tmp_path), state, step=12)
+    assert read_meta(path) == {"step": 12}
+    got, step = ckpt.restore(str(tmp_path), state)
+    assert step == 12
+    _tree_equal(got, state)
+
+
+# ----------------------------------------------------------- snapshot/store --
+
+
+def test_snapshot_roundtrip_and_store(tmp_path):
+    prob = _prob()
+    res = solve(prob, backend="dense_jnp", p=4, epochs=2, eta0=0.5, seed=1)
+    cfg = dict(backend="dense_jnp", schedule="cyclic", p=4, mb=16, db=12,
+               m=64, d=48, loss_name="hinge", reg_name="l2", lam=1e-3,
+               row_batches=1, eta0=0.5, use_adagrad=True, alpha0=0.0,
+               seed=1, eval_every=1, checkpoint_every=2, layout="dense",
+               inner_iteration=0)
+    snap = DSOSnapshot(res.state, jax.random.PRNGKey(1), 2,
+                       tuple(res.history), cfg)
+    store = SnapshotStore(str(tmp_path))
+    store.save(snapshot=snap)
+    assert store.epochs() == [2] and store.latest() == 2
+    got = store.load()
+    _tree_equal(got.state, snap.state)
+    np.testing.assert_array_equal(np.asarray(got.key), np.asarray(snap.key))
+    assert got.epochs_done == 2 and got.config == cfg
+    assert [h["epoch"] for h in got.history] == [1, 2]
+    with pytest.raises(FileNotFoundError, match="no DSO snapshots"):
+        SnapshotStore(str(tmp_path / "empty")).load()
+
+
+def test_solve_checkpoint_wiring_and_validation(tmp_path):
+    prob = _prob()
+    store = SnapshotStore(str(tmp_path))
+    with pytest.raises(ValueError, match="checkpoint_every"):
+        solve(prob, p=2, epochs=2, store=store)
+    with pytest.raises(ValueError, match="checkpoint_every"):
+        solve(prob, p=2, epochs=2, checkpoint_every=-1)
+    res = solve(prob, backend="dense_jnp", p=4, epochs=6, eta0=0.5,
+                eval_every=3, checkpoint_every=2, store=store, seed=1)
+    # boundaries at the multiples of 2, final epoch included
+    assert store.epochs() == [2, 4, 6]
+    snap = store.load(4)
+    assert snap.epochs_done == 4 and snap.config["p"] == 4
+    # the epoch-6 snapshot carries the full history and final state
+    final = store.load()
+    np.testing.assert_array_equal(
+        np.asarray(final.state.w_grid).reshape(-1)[:48], np.asarray(res.w))
+    assert [h["epoch"] for h in final.history] == [3, 6]
+    # resuming onto a different grid is refused loudly
+    with pytest.raises(ValueError, match="reshard"):
+        solve(prob, backend="dense_jnp", p=2, epochs=8, init=snap)
+    with pytest.raises(ValueError, match="ONE dataset"):
+        resume(_prob(m=32, d=24), store, epochs=8)
+
+
+def test_checkpoint_chunking_does_not_change_math():
+    """checkpoint_every only adds chunk boundaries: same trajectory and
+    same history as the plain run, bit for bit."""
+    prob = _prob()
+    a = solve(prob, backend="dense_jnp", p=4, epochs=6, eta0=0.5,
+              eval_every=2, seed=3)
+    b = solve(prob, backend="dense_jnp", p=4, epochs=6, eta0=0.5,
+              eval_every=2, seed=3, checkpoint_every=3)   # no store
+    np.testing.assert_array_equal(np.asarray(a.w), np.asarray(b.w))
+    np.testing.assert_array_equal(np.asarray(a.alpha), np.asarray(b.alpha))
+    assert a.history == b.history
+
+
+# -------------------------------------------------------- resume determinism --
+
+RESUME_MATRIX = [("dense_jnp", "cyclic"), ("dense_jnp", "lpt"),
+                 ("sparse_bucketed_jnp", "cyclic"),
+                 ("sparse_bucketed_jnp", "lpt"), ("sparse_jnp", "random")]
+
+
+@pytest.mark.parametrize("backend,schedule", RESUME_MATRIX)
+def test_resume_bit_identical(backend, schedule, tmp_path):
+    """Checkpoint at epoch 4, resume from disk, finish at 8: max |delta|
+    vs the uninterrupted run must be exactly 0.0 (state, iterates, AND
+    evaluation history)."""
+    prob = _prob()
+    ref = solve(prob, backend=backend, schedule=schedule, p=4, epochs=8,
+                eta0=0.5, eval_every=2, seed=7)
+    store = SnapshotStore(str(tmp_path))
+    solve(prob, backend=backend, schedule=schedule, p=4, epochs=4,
+          eta0=0.5, eval_every=2, seed=7, checkpoint_every=4, store=store)
+    res = resume(prob, store, epochs=8)
+    assert np.abs(np.asarray(res.w) - np.asarray(ref.w)).max() == 0.0
+    assert np.abs(np.asarray(res.alpha) - np.asarray(ref.alpha)).max() == 0.0
+    assert res.history == ref.history
+
+
+def test_schedule_draw_chunk_invariance():
+    """The contract deterministic resume rests on: drawing n1 then n2
+    epochs while threading the key equals one n1+n2 draw, for every
+    registered schedule."""
+    p, n1, n2 = 4, 3, 2
+    tile_nnz = np.arange(p * p, dtype=np.float64).reshape(p, p) + 1
+    for name, sched in SCHEDULES.items():
+        ctx = {"tile_nnz": tile_nnz} if sched.balanced else {}
+        key = jax.random.PRNGKey(11)
+        _, whole = sched.draw(key, 0, n1 + n2, p, **ctx)
+        key2, head = sched.draw(key, 0, n1, p, **ctx)
+        _, tail = sched.draw(key2, n1, n2, p, **ctx)
+        np.testing.assert_array_equal(
+            np.asarray(whole), np.concatenate([np.asarray(head),
+                                               np.asarray(tail)]),
+            err_msg=f"schedule {name} is not chunk-invariant")
+
+
+KILL_SCRIPT = textwrap.dedent("""
+    import os, signal, sys
+    from repro.data.synthetic import make_classification
+    from repro.engine import solve
+    from repro.runtime import SnapshotStore
+
+    backend, schedule, ckpt_dir = sys.argv[1], sys.argv[2], sys.argv[3]
+
+    class KillAt(SnapshotStore):
+        # SIGKILL the process right after the epoch-4 snapshot hits disk:
+        # a real mid-run death at a checkpoint boundary
+        def save(self, **kw):
+            path = super().save(**kw)
+            if kw["epochs_done"] == 4:
+                os.kill(os.getpid(), signal.SIGKILL)
+            return path
+
+    prob = make_classification(m=64, d=48, density=0.15, loss='hinge',
+                               lam=1e-3, seed=0)
+    solve(prob, backend=backend, schedule=schedule, p=4, epochs=8,
+          eta0=0.5, eval_every=2, seed=7, checkpoint_every=2,
+          store=KillAt(ckpt_dir))
+    print('UNREACHABLE')
+""")
+
+
+@pytest.mark.parametrize("backend,schedule",
+                         [("dense_jnp", "cyclic"), ("dense_jnp", "lpt"),
+                          ("sparse_bucketed_jnp", "cyclic"),
+                          ("sparse_bucketed_jnp", "lpt")])
+def test_kill_resume_bit_identical(backend, schedule, tmp_path):
+    """The acceptance scenario: a subprocess is SIGKILLed mid-run at a
+    checkpoint boundary; resuming from the on-disk snapshot reproduces
+    the uninterrupted final (w, alpha) to 0.0."""
+    ckpt_dir = str(tmp_path)
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    out = subprocess.run(
+        [sys.executable, "-c", KILL_SCRIPT, backend, schedule, ckpt_dir],
+        env=env, capture_output=True, text=True, timeout=600)
+    assert out.returncode == -signal.SIGKILL, (out.returncode,
+                                               out.stderr[-2000:])
+    assert "UNREACHABLE" not in out.stdout
+    store = SnapshotStore(ckpt_dir)
+    assert store.latest() == 4    # died right at the boundary
+    prob = _prob()
+    ref = solve(prob, backend=backend, schedule=schedule, p=4, epochs=8,
+                eta0=0.5, eval_every=2, seed=7)
+    res = resume(prob, store, epochs=8)
+    assert np.abs(np.asarray(res.w) - np.asarray(ref.w)).max() == 0.0
+    assert np.abs(np.asarray(res.alpha) - np.asarray(ref.alpha)).max() == 0.0
+    assert res.history == ref.history
+
+
+# ------------------------------------------------------------------ reshard --
+
+
+@pytest.mark.parametrize("make", [make_sparse_grid_data,
+                                  make_bucketed_grid_data, make_grid_data])
+def test_grid_to_csr_roundtrips_every_layout(make):
+    prob = _prob(m=96, d=64, density=0.1)
+    ref = CSRMatrix.from_dense(np.asarray(prob.X))
+    csr, y = grid_to_csr(make(prob, 8), prob.m, prob.d)
+    np.testing.assert_array_equal(csr.indptr, ref.indptr)
+    np.testing.assert_array_equal(csr.indices, ref.indices)
+    np.testing.assert_array_equal(csr.values, ref.values)
+    np.testing.assert_array_equal(y, np.asarray(prob.y))
+
+
+def test_retile_equals_fresh_tiling():
+    prob = _prob(m=96, d=64, density=0.1)
+    csr = CSRMatrix.from_dense(np.asarray(prob.X))
+    got = retile(make_sparse_grid_data(prob, 8), prob.m, prob.d, 4)
+    ref = sparse_grid_from_csr(csr, np.asarray(prob.y), 4)
+    np.testing.assert_array_equal(np.asarray(got.vals_g),
+                                  np.asarray(ref.vals_g))
+    np.testing.assert_array_equal(np.asarray(got.cols_g),
+                                  np.asarray(ref.cols_g))
+    np.testing.assert_array_equal(np.asarray(got.tile_row_nnz_g),
+                                  np.asarray(ref.tile_row_nnz_g))
+    np.testing.assert_array_equal(np.asarray(got.tile_col_nnz_g),
+                                  np.asarray(ref.tile_col_nnz_g))
+
+
+def test_reshard_identity_is_bit_identical(tmp_path):
+    """p' == p: resharding is the identity and the continued run equals
+    the uninterrupted one exactly (the Lemma-2 per-schedule equality)."""
+    prob = _prob(m=96, d=64, density=0.1)
+    store = SnapshotStore(str(tmp_path))
+    ref = solve(prob, backend="sparse_jnp", p=8, epochs=6, eta0=0.5, seed=3)
+    solve(prob, backend="sparse_jnp", p=8, epochs=3, eta0=0.5, seed=3,
+          checkpoint_every=3, store=store)
+    snap2, _ = reshard(store.load(), 8)
+    res = resume(prob, store, epochs=6, snapshot=snap2)
+    np.testing.assert_array_equal(np.asarray(res.w), np.asarray(ref.w))
+    np.testing.assert_array_equal(np.asarray(res.alpha),
+                                  np.asarray(ref.alpha))
+
+
+@pytest.mark.parametrize("backend", ["sparse_jnp", "sparse_bucketed_jnp"])
+@pytest.mark.parametrize("p_new", [4, 16])
+def test_reshard_p8_to_p_new_objective_envelope(backend, p_new, tmp_path):
+    """A run checkpointed at p=8 continues at p' in {4, 16} (uniform and
+    bucketed layouts) and converges to the same objective envelope as a
+    fresh run at p' — same iterate, new serializable execution."""
+    prob = _prob(m=96, d=64, density=0.1)
+    store = SnapshotStore(str(tmp_path))
+    solve(prob, backend=backend, p=8, epochs=3, eta0=0.5, seed=3,
+          eval_every=3, checkpoint_every=3, store=store)
+    snap2, _ = reshard(store.load(), p_new)
+    res = resume(prob, store, epochs=30, snapshot=snap2, eval_every=30,
+                 keep_checkpointing=False)
+    fresh = solve(prob, backend=backend, p=p_new, epochs=30, eta0=0.5,
+                  seed=3, eval_every=30)
+    p_r, p_f = res.history[-1]["primal"], fresh.history[-1]["primal"]
+    g_r, g_f = res.history[-1]["gap"], fresh.history[-1]["gap"]
+    assert np.isfinite(p_r) and abs(p_r - p_f) < 0.05, (p_r, p_f)
+    assert g_r < 0.2 and g_f < 0.2, (g_r, g_f)
+
+
+def test_reshard_retiles_prebuilt_grid_data(tmp_path):
+    """The out-of-core path: reshard returns re-tiled grid data built from
+    the old grid's own packed tiles, and the run continues on it."""
+    prob = _prob(m=96, d=64, density=0.1)
+    data8 = make_sparse_grid_data(prob, 8)
+    store = SnapshotStore(str(tmp_path))
+    solve(data8, backend="sparse_jnp", epochs=3, eta0=0.5, seed=3,
+          loss_name="hinge", reg_name="l2", lam=prob.lam, m=prob.m,
+          d=prob.d, checkpoint_every=3, store=store)
+    snap2, data4 = reshard(store.load(), 4, data=data8)
+    assert data4.p == 4 and snap2.config["p"] == 4
+    res = resume(data4, store, epochs=8, snapshot=snap2,
+                 keep_checkpointing=False)
+    assert np.isfinite(np.asarray(res.w)).all()
+
+
+# -------------------------------------------------------------- supervision --
+
+
+def test_supervisor_crash_recovery_exact_single_device(tmp_path):
+    """In-process (p=1 mesh): crashes off the checkpoint boundary lose
+    epochs, the re-run recovers them bit-identically."""
+    from repro.core.dso_dist import ShardedDSO, make_dso_mesh
+    from repro.runtime import FaultEvent, Supervisor
+    prob = _prob(m=32, d=24)
+    ref = ShardedDSO(prob, make_dso_mesh(1), impl="jnp", seed=5)
+    ref.run_epochs(6, 0.5)
+    sup = Supervisor(SnapshotStore(str(tmp_path)), checkpoint_every=2,
+                     eta0=0.5, fault_plan=(FaultEvent(3, "crash"),
+                                           FaultEvent(5, "straggler", 0)))
+    opt, log = sup.run_sharded(prob, 6, mesh=make_dso_mesh(1), impl="jnp",
+                               seed=5)
+    kinds = [ev["kind"] for ev in log]
+    assert kinds == ["crash", "straggler"]
+    assert log[0]["lost_epochs"] == 1   # crashed at 3, snapshot was at 2
+    assert np.abs(np.asarray(opt.w_full())
+                  - np.asarray(ref.w_full())).max() == 0.0
+
+
+def test_supervisor_store_resumes_with_real_config(tmp_path):
+    """The supervisor stamps ITS eta0 and checkpoint cadence into every
+    snapshot (the solver only learns eta0 at its first run_epochs), so
+    runtime.resume over a supervisor store replays the right step size
+    and keeps checkpointing — even from the epoch-0 anchor."""
+    from repro.core.dso_dist import make_dso_mesh
+    from repro.runtime import Supervisor
+    prob = _prob(m=32, d=24)
+    store = SnapshotStore(str(tmp_path))
+    sup = Supervisor(store, checkpoint_every=2, eta0=0.5)
+    sup.run_sharded(prob, 4, mesh=make_dso_mesh(1), impl="jnp", seed=5)
+    for epoch in store.epochs():       # anchor (0) included
+        cfg = store.load(epoch).config
+        assert cfg["eta0"] == 0.5 and cfg["checkpoint_every"] == 2, epoch
+    res = resume(prob, store, epochs=6)
+    assert store.latest() == 6         # resumed run kept checkpointing
+    # the grid simulator continues the sharded trajectory (grid == sharded)
+    ref = solve(prob, backend="dense_jnp", p=1, epochs=6, eta0=0.5, seed=5)
+    np.testing.assert_allclose(np.asarray(res.w), np.asarray(ref.w),
+                               atol=1e-5)
+
+
+def test_training_restore_reads_legacy_step_key(tmp_path):
+    """Pre-codec checkpoints (step in a reserved __step__ array, no meta)
+    stay readable through the delegating training module."""
+    from repro.runtime.snapshot import flatten_pytree
+    state = {"w": np.arange(4, dtype=np.float32)}
+    flat = flatten_pytree(state)
+    flat["__step__"] = np.asarray(7)
+    np.savez(str(tmp_path / "ckpt_00000007.npz"), **flat)
+    from repro.training import checkpoint as ckpt
+    got, step = ckpt.restore(str(tmp_path), state)
+    assert step == 7
+    np.testing.assert_array_equal(np.asarray(got["w"]), state["w"])
+
+
+def test_supervisor_validation(tmp_path):
+    from repro.runtime import FaultEvent, Supervisor
+    with pytest.raises(ValueError, match="checkpoint_every"):
+        Supervisor(SnapshotStore(str(tmp_path)), checkpoint_every=0)
+    with pytest.raises(ValueError, match="unknown fault kind"):
+        Supervisor(SnapshotStore(str(tmp_path)),
+                   fault_plan=(FaultEvent(1, "meteor"),))
+
+
+def test_make_fault_plan_deterministic():
+    from repro.runtime import make_fault_plan
+    a = make_fault_plan(3, 20, crash_rate=0.3, straggler_rate=0.2, p=4,
+                        reshard_at={10: 2})
+    b = make_fault_plan(3, 20, crash_rate=0.3, straggler_rate=0.2, p=4,
+                        reshard_at={10: 2})
+    assert a == b and any(ev.kind == "reshard" for ev in a)
+    assert all(0 < ev.epoch < 20 or ev.kind == "reshard" for ev in a)
+
+
+SUPERVISOR_SCRIPT = textwrap.dedent("""
+    import numpy as np, tempfile
+    from repro.core.dso_dist import ShardedDSO, make_dso_mesh
+    from repro.data.synthetic import make_classification
+    from repro.runtime import (FaultEvent, SnapshotStore, Supervisor,
+                               periodic_crashes)
+    prob = make_classification(m=64, d=48, density=0.15, loss='hinge',
+                               lam=1e-3, seed=0)
+    ref = ShardedDSO(prob, make_dso_mesh(4), impl='sparse_jnp', seed=5)
+    ref.run_epochs(6, 0.5)
+    with tempfile.TemporaryDirectory() as d:
+        sup = Supervisor(SnapshotStore(d), checkpoint_every=2, eta0=0.5,
+                         fault_plan=periodic_crashes(3, 6))
+        opt, log = sup.run_sharded(prob, 6, mesh=make_dso_mesh(4),
+                                   impl='sparse_jnp', seed=5)
+        assert np.abs(np.asarray(opt.w_full())
+                      - np.asarray(ref.w_full())).max() == 0.0
+        # live reshard 4 -> 2 + auto-resume of a fresh supervisor
+        sup2 = Supervisor(SnapshotStore(d), checkpoint_every=2, eta0=0.5,
+                          fault_plan=(FaultEvent(6, 'reshard', 2),))
+        opt, log = sup2.run_sharded(prob, 10, mesh=make_dso_mesh(4),
+                                    impl='sparse_jnp', seed=5)
+        assert opt.p == 2 and opt.epochs_done == 10
+        gaps = [h['gap'] for h in sup2.history]
+        assert gaps[-1] < gaps[0]
+    print('SUPERVISED_MATCH')
+""")
+
+
+def test_supervisor_sharded_crash_and_reshard():
+    """4 host devices: crash recovery is exact on a real mesh, and a live
+    4 -> 2 reshard continues through a rebuilt ShardedDSO."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    out = subprocess.run([sys.executable, "-c", SUPERVISOR_SCRIPT], env=env,
+                         capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "SUPERVISED_MATCH" in out.stdout
