@@ -239,6 +239,13 @@ class ShardedDSO:
     def epoch(self, eta0: float = 0.1):
         self.run_epochs(1, eta0)
 
+    def wait(self):
+        """Block until the in-flight epoch dispatch has finished — the
+        supervisor's wall-clock lane must time completed work, not async
+        dispatch latency."""
+        jax.block_until_ready((self.w, self.gw, self.alpha, self.ga))
+        return self
+
     # -- elastic-runtime seams (repro.runtime stays out of this module) ----
     def solver_state(self) -> DSOState:
         """The complete blocked solver state as the engine's ``DSOState``

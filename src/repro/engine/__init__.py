@@ -66,21 +66,31 @@ code-path *product* into a *sum*:
    |  elastic execution around the engine (see runtime/__init__.py     |
    |  for the full data flow):                                         |
    |                                                                   |
-   |  solve(..., checkpoint_every=k, store=S)   ShardedDSO             |
-   |    every k epochs the COMPLETE solver        .solver_state()      |
-   |    state (w, alpha, gw/ga, RNG key,          .snapshot_config()   |
-   |    cursor, history, config) crosses the      .restore()           |
-   |    seam as one DSOSnapshot                                        |
+   |  solve(..., checkpoint_every=k, store=S,   ShardedDSO             |
+   |        health=guard)                         .solver_state()      |
+   |    every k epochs the COMPLETE solver        .snapshot_config()   |
+   |    state (w, alpha, gw/ga, RNG key,          .restore()  .wait()  |
+   |    cursor, history, config) crosses the                           |
+   |    seam as one DSOSnapshot; the health                            |
+   |    guard gates every chunk boundary                               |
    |       |                                                           |
-   |  snapshot.py (flat-npz codec + SnapshotStore; the one checkpoint  |
-   |       |       codec — training/checkpoint.py delegates here)      |
+   |  snapshot.py (flat-npz codec + per-leaf CRC32 / file digest +     |
+   |       |       SnapshotStore: latest-VALID-wins, quarantine of     |
+   |       |       corrupt files, keep_last/keep_every retention GC;   |
+   |       |       the one codec — training/checkpoint.py delegates)   |
+   |       +-> health.py     all_finite probe + objective-regression   |
+   |       |                 monitor -> HealthGuard rollback-with-eta  |
+   |       |                 -backoff (solve(health=)); WallClock      |
+   |       |                 straggler EWMA; typed LedgerEvent ledger  |
    |       +-> resume.py     solve(..., init=snap): bit-identical      |
    |       |                 (schedules.draw chunk-invariance)         |
    |       +-> reshard.py    p -> p' live resharding: grid_to_csr      |
    |       |                 re-blocks the packed tiles, the tilers    |
    |       |                 re-tile, reshard_state repartitions       |
-   |       +-> supervisor.py crash/straggler/reshard fault plans       |
-   |                         over ShardedDSO, auto-resume from store   |
+   |       +-> supervisor.py crash/nan/corrupt/straggler fault plans   |
+   |                         over ShardedDSO, auto-resume from store,  |
+   |                         wall-clock replanning (lpt -> reshard),   |
+   |                         returns the recovery ledger               |
    +-------------------------------------------------------------------+
 
 Legacy entry points (``core.dso.run_dso_serial`` / ``run_dso_grid`` /

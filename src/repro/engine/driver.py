@@ -212,7 +212,7 @@ def solve(source, *, backend="auto", schedule="cyclic", p: int = 4,
           loss_name: str | None = None, reg_name: str | None = None,
           lam: float | None = None, m: int | None = None,
           d: int | None = None, checkpoint_every: int = 0, store=None,
-          init=None) -> SolveResult:
+          init=None, health=None) -> SolveResult:
     """The one epoch driver behind grid / random / out-of-core execution.
 
     ``source`` is either a dense ``Problem`` (the grid data is built here,
@@ -243,6 +243,19 @@ def solve(source, *, backend="auto", schedule="cyclic", p: int = 4,
     step-size schedule.  Checkpoint boundaries that fall between
     evaluation points introduce extra chunk lengths (one scan trace each);
     prefer ``checkpoint_every`` a multiple of ``eval_every``.
+
+    Health seam (``repro.runtime.health``): ``health`` (duck-typed, e.g.
+    ``HealthGuard``) is consulted at every chunk boundary —
+    ``health.inject(state, t)`` before the chunk (chaos seam),
+    ``health.check_state(state)`` (jitted all-finite probe, BEFORE the
+    evaluation hook so a poisoned state is never evaluated or saved) and
+    ``health.check_history(history)`` (objective-regression monitor)
+    after it.  A failed check rolls back to the latest *valid* snapshot
+    in ``store`` (falling back to ``init``, then to a fresh start), backs
+    ``eta0`` off by ``health.eta_decay``, and retries; once
+    ``health.max_retries`` rollbacks are spent, ``health.exhausted``
+    either raises ``HealthError`` or requests degradation to the
+    paper-exact ``solve_serial`` safe mode (Problem sources only).
     """
     if eval_every < 1:
         raise ValueError(f"eval_every must be >= 1, got {eval_every}")
@@ -306,6 +319,9 @@ def solve(source, *, backend="auto", schedule="cyclic", p: int = 4,
                seed=int(seed), eval_every=int(eval_every),
                checkpoint_every=int(checkpoint_every), layout=be.layout,
                inner_iteration=0)
+    if health is not None:   # backoff params ride in every snapshot too
+        cfg.update(eta_decay=float(health.eta_decay),
+                   max_retries=int(health.max_retries))
     if init is not None:
         got = tuple(init.state.w_grid.shape)
         if got != (p_, db):
@@ -323,7 +339,10 @@ def solve(source, *, backend="auto", schedule="cyclic", p: int = 4,
         state = init_state_data(loss_name, data, alpha0)
         key = jax.random.PRNGKey(seed)
         t, history = 0, []
+    eta_live = float(eta0)   # backed off per rollback under a health guard
     while t < epochs:
+        if health is not None:
+            state = health.inject(state, t)
         stops = [epochs]
         if eval_hook is not None:
             stops.append(_next_multiple(t, chunk))
@@ -331,7 +350,7 @@ def solve(source, *, backend="auto", schedule="cyclic", p: int = 4,
             stops.append(_next_multiple(t, checkpoint_every))
         n = min(stops) - t
         key, perms = sched.draw(key, t, n, p_, **sched_ctx)
-        etas = eta_schedule(eta0, t, n, use_adagrad)
+        etas = eta_schedule(eta_live, t, n, use_adagrad)
         if scan_epochs:
             state = run_epochs(tile, state, perms, etas, lam_f, m_f,
                                w_lo, w_hi, **kw)
@@ -339,10 +358,58 @@ def solve(source, *, backend="auto", schedule="cyclic", p: int = 4,
             for k in range(n):
                 state = run_epoch(tile, state, perms[k], etas[k], lam_f,
                                   m_f, w_lo, w_hi, **kw)
-        t += n
-        if eval_hook is not None and (t % chunk == 0 or t == epochs):
-            history.append(eval_hook(t, gather_w(state, d),
+        t_new = t + n
+        failure = None
+        if health is not None:
+            # state first: a poisoned iterate must never reach the eval
+            # hook or the snapshot store
+            failure = health.check_state(state)
+        if failure is None and eval_hook is not None and (
+                t_new % chunk == 0 or t_new == epochs):
+            history.append(eval_hook(t_new, gather_w(state, d),
                                      gather_alpha(state, m)))
+            if health is not None:
+                failure = health.check_history(history)
+        if failure is not None:
+            health.retries += 1
+            if health.retries > health.max_retries:
+                if health.exhausted(failure=failure, epoch=t_new,
+                                    eta0=eta_live,
+                                    can_degrade=isinstance(source,
+                                                           Problem)
+                                    ) == "serial":
+                    return solve_serial(source, epochs=epochs,
+                                        eta0=eta_live, seed=seed,
+                                        use_adagrad=use_adagrad,
+                                        alpha0=alpha0,
+                                        eval_every=eval_every)
+            snap = None
+            if store is not None:
+                try:
+                    snap = store.load()   # latest-VALID-wins
+                except FileNotFoundError:
+                    snap = None
+            if snap is None:
+                snap = init               # may still be None: fresh start
+            eta_live *= health.eta_decay
+            cfg["eta0"] = eta_live
+            if snap is not None:
+                state = jax.tree.map(lambda a: jnp.array(a, copy=True),
+                                     snap.state)
+                key = jnp.asarray(snap.key)
+                resumed = int(snap.epochs_done)
+                history = list(snap.history)
+            else:
+                state = init_state_data(loss_name, data, alpha0)
+                key = jax.random.PRNGKey(seed)
+                resumed, history = 0, []
+            health.note(kind="health", epoch=t_new, action="rollback",
+                        epochs_lost=t_new - resumed, retry=health.retries,
+                        failure=failure, resumed_from=resumed,
+                        eta0=eta_live)
+            t = resumed
+            continue
+        t = t_new
         if store is not None and (t % checkpoint_every == 0 or t == epochs):
             store.save(state=state, key=key, epochs_done=t,
                        history=list(history), config=cfg)

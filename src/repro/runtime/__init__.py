@@ -1,19 +1,30 @@
-"""Elastic runtime: checkpointed DSO state, deterministic resume, and
-p -> p' live resharding around the engine.
+"""Elastic runtime: checkpointed DSO state, deterministic resume, p -> p'
+live resharding, and self-healing around the engine.
 
 The engine (``repro.engine``) is a pure function of (data layout, schedule,
 state): it holds everything in device memory and bakes the processor count
 p into the block grid at ingest.  This layer makes that survivable and
 elastic.  Data flow:
 
-      engine.solve(..., checkpoint_every=k, store=S)        ShardedDSO
-        |  every k epochs: the COMPLETE solver state          | .solver_state()
-        |  (w, alpha, gw/ga, RNG key, cursor, history,        | .snapshot_config()
-        v   config) crosses the seam as one DSOSnapshot       v
+      engine.solve(..., checkpoint_every=k, store=S,         ShardedDSO
+        |          health=guard)                               | .solver_state()
+        |  every k epochs: the COMPLETE solver state           | .snapshot_config()
+        |  (w, alpha, gw/ga, RNG key, cursor, history,         | .wait()
+        v   config) crosses the seam as one DSOSnapshot        v
    snapshot.py ──────────────────────────────────────────────────────────
         |   flat-npz pytree codec (atomic writes; the same codec
-        |   training/checkpoint.py delegates to) + SnapshotStore
-        |   (dso_<epochs_done>.npz, latest-wins)
+        |   training/checkpoint.py delegates to) + per-leaf CRC32 and a
+        |   whole-file digest (verify_pytree) + SnapshotStore
+        |   (dso_<epochs_done>.npz, latest-VALID-wins: corrupt files are
+        |   quarantined; retention GC via keep_last / keep_every pinning)
+        |
+        ├──> health.py      all_finite (jitted probe) + objective-
+        |                   regression monitor; HealthGuard = the rollback
+        |                   -with-eta-backoff policy solve(health=) runs;
+        |                   WallClockMonitor = the straggler EWMA;
+        |                   LedgerEvent = the typed recovery ledger every
+        |                   detection/action lands in; NaNInjector = the
+        |                   chaos seam
         |
         ├──> resume.py      solve(..., init=snap): replays the config and
         |                   threads (key, cursor) back into schedules.draw
@@ -30,27 +41,39 @@ elastic.  Data flow:
         └──> supervisor.py  Supervisor(store, fault_plan).run_sharded():
                             chunks ShardedDSO.run_epochs between
                             checkpoint boundaries and planned faults;
-                            crash -> restore latest snapshot (re-run is
-                            bit-identical), reshard -> live resize onto a
-                            new mesh, straggler -> recorded (lpt schedule
-                            is the engine-level mitigation).
+                            crash -> restore latest VALID snapshot (re-run
+                            is bit-identical; streak-capped with eta
+                            backoff), reshard -> live resize onto a new
+                            mesh, nan/corrupt -> caught by the health
+                            lane, persistent straggler -> wall-clock EWMA
+                            replans (lpt schedule, then live reshard).
+                            Returns (opt, recovery ledger).
 
 Nothing here re-implements solver math: snapshots capture exactly what the
 epoch driver threads between chunks, which is why resume can promise 0.0
 drift instead of "close enough".
 """
 
+from repro.runtime.health import (HealthError, HealthGuard, LedgerEvent,
+                                  NaNInjector, WallClockMonitor, all_finite,
+                                  ledger_counts, objective_regression)
 from repro.runtime.reshard import reshard, reshard_state, retile
 from repro.runtime.resume import check_resumable, resume, solve_kwargs
-from repro.runtime.snapshot import (DSOSnapshot, SnapshotStore, flatten_pytree,
+from repro.runtime.snapshot import (DSOSnapshot, SnapshotIntegrityError,
+                                    SnapshotStore, flatten_pytree,
                                     load_pytree, load_snapshot, read_meta,
-                                    save_pytree, save_snapshot)
+                                    save_pytree, save_snapshot,
+                                    verify_pytree)
 from repro.runtime.supervisor import (FaultEvent, Supervisor, make_fault_plan,
                                       periodic_crashes)
 
 __all__ = [
-    "DSOSnapshot", "SnapshotStore", "flatten_pytree", "load_pytree",
-    "load_snapshot", "read_meta", "save_pytree", "save_snapshot",
+    "DSOSnapshot", "SnapshotIntegrityError", "SnapshotStore",
+    "flatten_pytree", "load_pytree", "load_snapshot", "read_meta",
+    "save_pytree", "save_snapshot", "verify_pytree",
+    "HealthError", "HealthGuard", "LedgerEvent", "NaNInjector",
+    "WallClockMonitor", "all_finite", "ledger_counts",
+    "objective_regression",
     "check_resumable", "resume", "solve_kwargs",
     "reshard", "reshard_state", "retile",
     "FaultEvent", "Supervisor", "make_fault_plan", "periodic_crashes",

@@ -16,9 +16,14 @@ resumed trajectory rests on two engine contracts:
 
 Resume therefore reproduces the uninterrupted run with max |delta| = 0.0
 for every backend x schedule (pinned by tests/test_runtime.py, including a
-real SIGKILL mid-run).  Resuming at a different p is a reshard, not a
-resume — ``resume`` refuses shape mismatches loudly and points at
-``repro.runtime.reshard``.
+real SIGKILL mid-run).  The resume point is the latest *valid* snapshot:
+``SnapshotStore.load`` verifies each candidate newest-first (per-leaf
+CRC32 + whole-file digest) and quarantines corrupt ones, so a bit-flipped
+or truncated latest checkpoint falls back to the next older valid one —
+still bit-identical from there (the corruption matrix in
+tests/test_runtime.py pins this).  Resuming at a different p is a
+reshard, not a resume — ``resume`` refuses shape mismatches loudly and
+points at ``repro.runtime.reshard``.
 """
 
 from __future__ import annotations

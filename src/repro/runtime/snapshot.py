@@ -11,6 +11,14 @@ Two layers:
   generalizes the seed ``training/checkpoint.py`` helpers, which now
   delegate here — one checkpoint codec in the repo.
 
+* **Integrity** — every ``save_pytree`` file carries a CRC32 per leaf
+  (value bytes + dtype + shape) and a whole-file digest over the leaf
+  CRCs and the meta JSON, in a reserved ``__crc__`` key.
+  ``verify_pytree`` recomputes all of it (and, because npz is a zip,
+  any read already trips the member CRCs), raising
+  ``SnapshotIntegrityError`` on truncation, bit flips, or unreadable
+  files; pre-integrity files (no ``__crc__``) verify as ``"legacy"``.
+
 * **DSO snapshot** — ``DSOSnapshot`` captures the *complete* solver state
   of an engine run: the ``DSOState`` pytree (w, alpha, AdaGrad gw/ga,
   device epoch counter), the schedule RNG key, the epoch cursor, the
@@ -18,7 +26,13 @@ Two layers:
   lam/shape/step-size).  ``SnapshotStore`` is the directory convention the
   epoch driver (``engine.driver.solve(..., checkpoint_every=, store=)``),
   ``runtime.resume`` and ``runtime.supervisor`` share: one
-  ``dso_<epochs_done>.npz`` per checkpoint, latest-wins on load.
+  ``dso_<epochs_done>.npz`` per checkpoint, latest-*valid*-wins on load —
+  a corrupt latest snapshot is quarantined (moved into ``quarantine/``)
+  and the next older valid one restores instead.  Retention is bounded
+  with ``keep_last=k`` (newest k snapshots survive each save) plus
+  ``keep_every=n`` pinning (epochs divisible by n are never collected —
+  the keep-every-nth anchor trail for post-hoc analysis); the default
+  ``keep_last=None`` keeps everything, matching the PR-5 behavior.
 
 A snapshot is taken only at epoch boundaries (the inner-iteration cursor
 is always 0 there; it is still recorded in ``config`` for forward
@@ -33,6 +47,7 @@ from __future__ import annotations
 import json
 import os
 import re
+import zlib
 from typing import NamedTuple
 
 import jax
@@ -44,7 +59,14 @@ from repro.engine.data import DSOState
 Array = jax.Array
 
 _META_KEY = "__meta__"
+_CRC_KEY = "__crc__"
+_RESERVED = (_META_KEY, _CRC_KEY)
 _SEP = "|"
+
+
+class SnapshotIntegrityError(ValueError):
+    """A snapshot file failed verification (truncated, bit-flipped, or
+    otherwise unreadable)."""
 
 
 # ------------------------------------------------------------- the codec --
@@ -81,24 +103,90 @@ def _json_default(o):
     raise TypeError(f"snapshot meta value {o!r} is not JSON-serializable")
 
 
+def _leaf_record(arr: np.ndarray) -> list:
+    """[crc32 of the value bytes, dtype, shape] — what verification pins
+    per leaf (dtype/shape ride along so a header rewrite that reinterprets
+    the same bytes is still caught)."""
+    return [zlib.crc32(np.ascontiguousarray(arr).tobytes()),
+            str(arr.dtype), list(arr.shape)]
+
+
+def _file_digest(leaves: dict, meta_json: str | None) -> int:
+    """Whole-file digest: CRC32 over the (sorted) leaf records + the meta
+    JSON, so meta tampering and leaf-set changes are detected too."""
+    blob = json.dumps({"leaves": leaves, "meta": meta_json}, sort_keys=True)
+    return zlib.crc32(blob.encode())
+
+
 def save_pytree(path: str, tree, meta: dict | None = None) -> str:
     """Write a pytree of arrays (+ optional JSON ``meta``) as one ``.npz``.
 
     Atomic: written to a tmp file in the same directory and ``os.replace``d
     into place, so a reader (or a crash mid-write) never sees a truncated
-    checkpoint.
+    checkpoint.  A reserved ``__crc__`` key records per-leaf CRC32s and a
+    whole-file digest for ``verify_pytree``.
     """
     flat = flatten_pytree(tree)
-    if _META_KEY in flat:
-        raise ValueError(f"pytree path collides with the reserved meta key "
-                         f"{_META_KEY!r}")
-    if meta is not None:
-        flat[_META_KEY] = np.asarray(json.dumps(meta,
-                                                default=_json_default))
+    bad = [k for k in _RESERVED if k in flat]
+    if bad:
+        raise ValueError(f"pytree path collides with the reserved key(s) "
+                         f"{bad}")
+    meta_json = (json.dumps(meta, default=_json_default)
+                 if meta is not None else None)
+    leaves = {k: _leaf_record(v) for k, v in flat.items()}
+    flat[_CRC_KEY] = np.asarray(json.dumps(
+        {"leaves": leaves, "digest": _file_digest(leaves, meta_json)}))
+    if meta_json is not None:
+        flat[_META_KEY] = np.asarray(meta_json)
     tmp = path + ".tmp.npz"   # ends in .npz so np.savez appends nothing
     np.savez(tmp, **flat)
     os.replace(tmp, path)
     return path
+
+
+def verify_pytree(path: str) -> str:
+    """Verify a saved pytree's integrity; returns how far it could go.
+
+    ``"verified"`` — every leaf CRC32, dtype, shape AND the whole-file
+    digest match the ``__crc__`` record.  ``"legacy"`` — the file predates
+    the integrity record but every member is readable (npz is a zip, so
+    reading already checks the zip member CRCs).  Anything else raises
+    ``SnapshotIntegrityError`` naming the first mismatch: truncation, bit
+    flips, missing/garbled members, or an unreadable file.
+    """
+    try:
+        with np.load(path) as data:
+            keys = [k for k in data.files if k not in _RESERVED]
+            meta_json = (str(data[_META_KEY][()])
+                         if _META_KEY in data.files else None)
+            if _CRC_KEY not in data.files:
+                for k in keys:          # zip-member CRC check via read
+                    _ = data[k]
+                return "legacy"
+            rec = json.loads(str(data[_CRC_KEY][()]))
+            leaves = rec["leaves"]
+            if sorted(leaves) != sorted(keys):
+                raise SnapshotIntegrityError(
+                    f"{path}: leaf set changed (recorded "
+                    f"{sorted(leaves)}, found {sorted(keys)})")
+            got = {k: _leaf_record(data[k]) for k in keys}
+            for k in keys:
+                if got[k] != leaves[k]:
+                    raise SnapshotIntegrityError(
+                        f"{path}: leaf {k!r} fails its CRC32/dtype/shape "
+                        f"record (recorded {leaves[k]}, got {got[k]}) — "
+                        f"bit flip or partial write")
+            if _file_digest(leaves, meta_json) != rec["digest"]:
+                raise SnapshotIntegrityError(
+                    f"{path}: whole-file digest mismatch — meta or leaf "
+                    f"record tampered/corrupted")
+    except SnapshotIntegrityError:
+        raise
+    except Exception as e:   # BadZipFile, zlib.error, OSError, json, ...
+        raise SnapshotIntegrityError(
+            f"{path} is unreadable ({type(e).__name__}: {e}) — truncated "
+            f"or corrupt snapshot file") from e
+    return "verified"
 
 
 def read_meta(path: str) -> dict | None:
@@ -188,18 +276,33 @@ def load_snapshot(path: str) -> DSOSnapshot:
 
 
 class SnapshotStore:
-    """Directory of ``dso_<epochs_done>.npz`` snapshots, latest-wins.
+    """Directory of ``dso_<epochs_done>.npz`` snapshots, latest-valid-wins.
 
     The duck-typed contract the epoch driver calls (keeping the engine free
     of runtime imports) is ``store.save(state=, key=, epochs_done=,
     history=, config=)``; everything else here is for the resume/supervise
     side.
+
+    ``load()`` with no epoch walks snapshots newest-first, verifying each;
+    corrupt files are quarantined (moved into ``quarantine/``, recorded in
+    ``self.quarantined``) and the next older valid one restores instead.
+    ``save`` runs retention GC afterwards: the newest ``keep_last``
+    snapshots survive, plus every epoch divisible by ``keep_every``
+    (pinned anchors).  ``keep_last=None`` (default) keeps everything.
     """
 
     _PAT = re.compile(r"dso_(\d+)\.npz$")
 
-    def __init__(self, directory: str):
+    def __init__(self, directory: str, *, keep_last: int | None = None,
+                 keep_every: int | None = None):
+        if keep_last is not None and keep_last < 1:
+            raise ValueError(f"keep_last must be >= 1, got {keep_last}")
+        if keep_every is not None and keep_every < 1:
+            raise ValueError(f"keep_every must be >= 1, got {keep_every}")
         self.directory = directory
+        self.keep_last = keep_last
+        self.keep_every = keep_every
+        self.quarantined: list = []   # (epochs_done, reason) in move order
 
     def path(self, epochs_done: int) -> str:
         return os.path.join(self.directory, f"dso_{epochs_done:08d}.npz")
@@ -213,7 +316,9 @@ class SnapshotStore:
                                    history=tuple(history),
                                    config=dict(config or {}))
         os.makedirs(self.directory, exist_ok=True)
-        return save_snapshot(self.path(snapshot.epochs_done), snapshot)
+        out = save_snapshot(self.path(snapshot.epochs_done), snapshot)
+        self.gc()
+        return out
 
     def epochs(self) -> list:
         if not os.path.isdir(self.directory):
@@ -225,10 +330,57 @@ class SnapshotStore:
         eps = self.epochs()
         return eps[-1] if eps else None
 
+    def verify(self, epochs_done: int) -> str:
+        """``verify_pytree`` of one snapshot: "verified" | "legacy" or
+        raises ``SnapshotIntegrityError``."""
+        return verify_pytree(self.path(epochs_done))
+
+    def quarantine(self, epochs_done: int, reason: str = "") -> str:
+        """Move a corrupt snapshot into ``quarantine/`` (kept for forensics
+        rather than deleted) and record it.  Returns the new path."""
+        qdir = os.path.join(self.directory, "quarantine")
+        os.makedirs(qdir, exist_ok=True)
+        src = self.path(epochs_done)
+        dst = os.path.join(qdir, os.path.basename(src))
+        os.replace(src, dst)
+        self.quarantined.append((int(epochs_done), reason))
+        return dst
+
+    def latest_valid(self):
+        """Newest epoch whose snapshot verifies AND parses as a DSO
+        snapshot; corrupt ones are quarantined along the way.  None when
+        no valid snapshot remains."""
+        for ep in reversed(self.epochs()):
+            try:
+                self.verify(ep)
+                load_snapshot(self.path(ep))   # meta/config sanity too
+                return ep
+            except (SnapshotIntegrityError, ValueError, KeyError) as e:
+                self.quarantine(ep, reason=str(e))
+        return None
+
     def load(self, epochs_done: int | None = None) -> DSOSnapshot:
         if epochs_done is None:
-            epochs_done = self.latest()
+            epochs_done = self.latest_valid()
             if epochs_done is None:
                 raise FileNotFoundError(
-                    f"no DSO snapshots in {self.directory}")
+                    f"no DSO snapshots in {self.directory} pass "
+                    f"verification ({len(self.quarantined)} quarantined)")
+        else:
+            self.verify(epochs_done)
         return load_snapshot(self.path(epochs_done))
+
+    def gc(self) -> list:
+        """Retention: delete all but the newest ``keep_last`` snapshots,
+        never touching epochs divisible by ``keep_every``.  Returns the
+        epochs collected (empty when ``keep_last`` is None)."""
+        if self.keep_last is None:
+            return []
+        eps = self.epochs()
+        keep = set(eps[-self.keep_last:])
+        if self.keep_every is not None:
+            keep |= {e for e in eps if e % self.keep_every == 0}
+        dropped = [e for e in eps if e not in keep]
+        for e in dropped:
+            os.remove(self.path(e))
+        return dropped

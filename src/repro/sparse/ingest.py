@@ -20,6 +20,15 @@ per-shard normalization would be unsound — see ``iter_csr_shards``);
 classification callers opt in with ``ingest_libsvm(...,
 normalize_labels=True)``, which applies ``data.libsvm.
 normalize_binary_labels`` once over the full label vector.
+
+Malformed input is a policy, not a crash: both passes share ONE row parser
+(``_parse_row``), so the ``on_malformed`` policy — ``"error"`` (default,
+raise ``MalformedLine``), ``"skip"`` (drop and count), ``"quarantine"``
+(drop, count, and append the raw line to a sidecar file, written in pass 1
+only) — makes identical keep/drop decisions in pass 1 and pass 2; the drop
+count is surfaced in ``ScanStats.malformed`` and cross-checked between the
+passes.  A file truncated (or otherwise mutated) between the passes is
+detected by the pass-1 vs pass-2 row/nnz totals and fails loudly.
 """
 
 from __future__ import annotations
@@ -46,6 +55,17 @@ class ScanStats(NamedTuple):
     #: ``impl="auto"`` skew decision (``format.tile_k_skew``) needs no
     #: third pass over the data; None when ``p`` was not given
     k_per_tile: np.ndarray | None = None
+    #: lines dropped by the on_malformed="skip"/"quarantine" policy
+    malformed: int = 0
+
+
+class MalformedLine(ValueError):
+    """A libsvm line that cannot be parsed: bad ``index:value`` token,
+    non-numeric label/value, 0-based or non-ascending indices, or an index
+    beyond the declared ``n_features``."""
+
+
+_POLICIES = ("error", "skip", "quarantine")
 
 
 def _open_lines(source):
@@ -64,9 +84,47 @@ def _split_line(line: str):
     return parts[0], parts[1:]
 
 
+def _parse_row(lab: str, toks, n_features: int | None = None):
+    """``(label, [(0-based index, value), ...])`` with every structural
+    check applied — the ONE row parser both ingest passes share, so the
+    malformed-line policy makes identical keep/drop decisions in pass 1
+    and pass 2 (a divergence there would silently misalign the
+    preallocated CSR)."""
+    try:
+        label = float(lab)
+    except ValueError as e:
+        raise MalformedLine(f"label {lab!r} is not numeric") from e
+    pairs = []
+    prev_j = -1
+    for tok in toks:
+        idx, sep, val = tok.partition(":")
+        if not sep:
+            raise MalformedLine(f"token {tok!r} is not index:value")
+        try:
+            j = int(idx) - 1
+            v = float(val)
+        except ValueError as e:
+            raise MalformedLine(f"token {tok!r} is not index:value") from e
+        if j < 0:
+            raise MalformedLine(
+                f"feature index {idx} is not 1-based (libsvm indices "
+                "start at 1)")
+        if n_features is not None and j >= n_features:
+            raise MalformedLine(
+                f"feature index {j + 1} exceeds n_features={n_features}")
+        if j <= prev_j:
+            raise MalformedLine(
+                f"libsvm row has non-ascending feature index {j + 1} "
+                "(CSR tiling requires sorted rows)")
+        prev_j = j
+        pairs.append((j, v))
+    return label, pairs
+
+
 def scan_libsvm(source, max_rows: int | None = None,
-                n_features: int | None = None,
-                p: int | None = None) -> ScanStats:
+                n_features: int | None = None, p: int | None = None,
+                on_malformed: str = "error",
+                quarantine_path: str | None = None) -> ScanStats:
     """Pass 1: counts only — O(m) memory, no indices or values stored.
 
     With a grid size ``p`` (which requires ``n_features``: block column
@@ -75,7 +133,18 @@ def scan_libsvm(source, max_rows: int | None = None,
     nonzero counts (O(m * p) memory) and folds them into the (p, p)
     ``k_per_tile`` statistic — exactly the per-tile packed widths the grid
     tilers compute, available before any grid is built.
+
+    ``on_malformed`` — "error" raises ``MalformedLine`` on the first bad
+    row; "skip" drops it (counted in ``ScanStats.malformed``);
+    "quarantine" additionally appends the raw line to ``quarantine_path``
+    (required with that policy) for forensics.  Dropped lines never count
+    toward ``max_rows``, matching pass 2's decisions exactly.
     """
+    if on_malformed not in _POLICIES:
+        raise ValueError(f"on_malformed {on_malformed!r}: {_POLICIES}")
+    if on_malformed == "quarantine" and quarantine_path is None:
+        raise ValueError("on_malformed='quarantine' needs quarantine_path "
+                         "(where to write the dropped lines)")
     if p is not None and n_features is None:
         raise ValueError(
             "per-tile stats (p=...) need an explicit n_features: the block "
@@ -88,42 +157,49 @@ def scan_libsvm(source, max_rows: int | None = None,
     # objects (their overhead would dwarf the 4*p payload at libsvm scale)
     row_blocks = np.zeros((1024, p), np.int32) if p is not None else None
     d = 0
+    malformed = 0
+    qf = None
     f = _open_lines(source)
     try:
         for line in f:
             parsed = _split_line(line)
             if parsed is None:
                 continue
-            _, toks = parsed
+            lab, toks = parsed
+            try:
+                _, pairs = _parse_row(lab, toks, n_features)
+            except MalformedLine:
+                if on_malformed == "error":
+                    raise
+                malformed += 1
+                if on_malformed == "quarantine":
+                    if qf is None:
+                        qf = open(quarantine_path, "w")
+                    qf.write(line if line.endswith("\n") else line + "\n")
+                continue
             k = 0
             if p is not None:
                 if len(row_nnz) >= row_blocks.shape[0]:
                     row_blocks = np.concatenate(
                         [row_blocks, np.zeros_like(row_blocks)])
                 blk_counts = row_blocks[len(row_nnz)]
-            for tok in toks:
-                idx, val = tok.split(":", 1)
-                j = int(idx)
-                d = max(d, j)
+            for j, v in pairs:
+                d = max(d, j + 1)
                 # explicit zeros are not nonzeros: the dense path's
                 # statistics come from X != 0, and Eq. (8)'s scalings
                 # must agree between the two layouts
-                if float(val) != 0.0:
+                if v != 0.0:
                     k += 1
                     if p is not None:
-                        if j > n_features:
-                            # clamping would silently fold the entry into
-                            # the wrong tile and skew k_per_tile
-                            raise ValueError(
-                                f"feature index {j} exceeds "
-                                f"n_features={n_features}")
-                        blk_counts[(j - 1) // db] += 1
+                        blk_counts[j // db] += 1
             row_nnz.append(k)
             if max_rows is not None and len(row_nnz) >= max_rows:
                 break
     finally:
         if hasattr(f, "close") and f is not source:
             f.close()
+        if qf is not None:
+            qf.close()
     rn = np.asarray(row_nnz, np.int64)
     k_per_tile = None
     if p is not None:
@@ -137,11 +213,14 @@ def scan_libsvm(source, max_rows: int | None = None,
             if shard.size:
                 k_per_tile[q] = shard.max(axis=0)
     return ScanStats(n_rows=len(row_nnz), n_features=d,
-                     nnz=int(rn.sum()), row_nnz=rn, k_per_tile=k_per_tile)
+                     nnz=int(rn.sum()), row_nnz=rn, k_per_tile=k_per_tile,
+                     malformed=malformed)
 
 
 def iter_csr_shards(source, n_features: int, shard_rows: int = 8192,
                     max_rows: int | None = None,
+                    on_malformed: str = "error",
+                    counters: dict | None = None,
                     ) -> Iterator[tuple[CSRMatrix, np.ndarray]]:
     """Single streaming pass yielding (CSR shard, *raw* label shard) pairs
     of at most ``shard_rows`` rows each.  ``n_features`` must be known up
@@ -153,7 +232,15 @@ def iter_csr_shards(source, n_features: int, shard_rows: int = 8192,
     contain one class would pick a different convention than its
     neighbours, sign-flipping a whole shard.  Normalize once over the
     assembled vector (``ingest_libsvm`` / ``normalize_binary_labels``).
+
+    ``on_malformed`` — "error" (default) or "skip"/"quarantine", which
+    both just drop bad rows here (the quarantine FILE is pass 1's job —
+    writing it twice would duplicate every line).  Drops are tallied into
+    ``counters["malformed"]`` when a dict is passed, so ``ingest_libsvm``
+    can cross-check the two passes made identical decisions.
     """
+    if on_malformed not in _POLICIES:
+        raise ValueError(f"on_malformed {on_malformed!r}: {_POLICIES}")
     indptr = [0]
     indices: list[int] = []
     values: list[float] = []
@@ -178,25 +265,16 @@ def iter_csr_shards(source, n_features: int, shard_rows: int = 8192,
             if parsed is None:
                 continue
             lab, toks = parsed
-            labels.append(float(lab))
-            prev_j = -1
-            for tok in toks:
-                idx, val = tok.split(":", 1)
-                j = int(idx) - 1
-                if j < 0:
-                    raise ValueError(
-                        f"feature index {idx} is not 1-based (libsvm "
-                        "indices start at 1)")
-                if j >= n_features:
-                    raise ValueError(
-                        f"feature index {j + 1} exceeds "
-                        f"n_features={n_features}")
-                if j <= prev_j:
-                    raise ValueError(
-                        f"libsvm row has non-ascending feature index "
-                        f"{j + 1} (CSR tiling requires sorted rows)")
-                prev_j = j
-                v = float(val)
+            try:
+                label, pairs = _parse_row(lab, toks, n_features)
+            except MalformedLine:
+                if on_malformed == "error":
+                    raise
+                if counters is not None:
+                    counters["malformed"] = counters.get("malformed", 0) + 1
+                continue
+            labels.append(label)
+            for j, v in pairs:
                 if v == 0.0:
                     continue   # explicit zero: not a nonzero (see pass 1)
                 indices.append(j)
@@ -217,7 +295,8 @@ def iter_csr_shards(source, n_features: int, shard_rows: int = 8192,
 def ingest_libsvm(path: str, n_features: int | None = None,
                   shard_rows: int = 8192, max_rows: int | None = None,
                   normalize_labels: bool = False, p: int | None = None,
-                  return_stats: bool = False):
+                  return_stats: bool = False, on_malformed: str = "error",
+                  quarantine_path: str | None = None):
     """Two-pass out-of-core ingest: returns (CSRMatrix, labels).
 
     Pass 1 fixes the exact allocation (rows, nnz) and, when ``n_features``
@@ -235,14 +314,24 @@ def ingest_libsvm(path: str, n_features: int | None = None,
     ``normalize_labels=True`` (applied once over the full vector) or call
     ``normalize_binary_labels(y, strict=True)`` themselves for the loud
     version.
+
+    ``on_malformed`` — "error" (default) / "skip" / "quarantine" (bad
+    lines appended to ``quarantine_path``, defaulting to
+    ``<path>.quarantine``); dropped-line counts are in
+    ``ScanStats.malformed`` (``return_stats=True``) and the two passes'
+    decisions are cross-checked, so a file mutated mid-ingest still fails
+    loudly instead of writing misaligned data.
     """
     if not isinstance(path, (str, bytes, os.PathLike)):
         raise TypeError(
             "ingest_libsvm makes two passes and needs a re-readable path; "
             "for an in-memory iterable use scan_libsvm + iter_csr_shards "
             "(the iterable would be exhausted by pass 1)")
+    if on_malformed == "quarantine" and quarantine_path is None:
+        quarantine_path = os.fspath(path) + ".quarantine"
     stats = scan_libsvm(path, max_rows=max_rows, n_features=n_features,
-                        p=p)
+                        p=p, on_malformed=on_malformed,
+                        quarantine_path=quarantine_path)
     if n_features is None:
         n_features = stats.n_features
     elif stats.n_features > n_features:
@@ -257,9 +346,15 @@ def ingest_libsvm(path: str, n_features: int | None = None,
     y = np.empty(stats.n_rows, np.float32)
 
     row = 0
+    counters: dict = {}
+    # pass 2 re-applies the same drop decisions ("skip" even under
+    # quarantine: pass 1 already wrote the sidecar file)
+    pass2_policy = "error" if on_malformed == "error" else "skip"
     for shard, ys in iter_csr_shards(path, n_features,
                                      shard_rows=shard_rows,
-                                     max_rows=max_rows):
+                                     max_rows=max_rows,
+                                     on_malformed=pass2_policy,
+                                     counters=counters):
         r, z = shard.m, shard.nnz
         lo = indptr[row]
         if row + r > stats.n_rows or z != indptr[row + r] - lo:
@@ -275,7 +370,13 @@ def ingest_libsvm(path: str, n_features: int | None = None,
     if row != stats.n_rows:
         raise ValueError(
             f"file changed between the two ingest passes (pass 2 saw "
-            f"{row} rows, pass 1 counted {stats.n_rows})")
+            f"{row} rows, pass 1 counted {stats.n_rows}) — the file was "
+            f"truncated or mutated mid-ingest; re-run on a quiescent copy")
+    if counters.get("malformed", 0) != stats.malformed:
+        raise ValueError(
+            f"file changed between the two ingest passes (pass 2 dropped "
+            f"{counters.get('malformed', 0)} malformed line(s), pass 1 "
+            f"counted {stats.malformed})")
 
     if normalize_labels:
         # function-local import: data.libsvm imports core.saddle, whose

@@ -1,0 +1,228 @@
+"""Self-healing runtime: probes, ledger, rollback policy, chaos injection.
+
+Four groups:
+
+  1. probes — the jitted all-finite probe and the objective-regression
+     monitor (unit level: finite/NaN/inf trees, short histories, missing
+     keys, regression firing and its diagnostic).
+  2. ledger — typed ``LedgerEvent`` keeps the PR-5 dict-style access
+     (``ev["kind"]`` reads the attribute, ``ev["resumed_from"]`` falls
+     back to detail), ``ledger_counts`` summaries.
+  3. policy — ``HealthGuard`` validation and hooks, ``WallClockMonitor``
+     cold/baseline/calm/reset semantics.
+  4. chaos — NaN injection through ``engine.solve(health=...)`` across
+     the {dense_jnp, sparse_jnp, sparse_bucketed_jnp} backends: the run
+     must roll back to the latest valid snapshot, back eta off, and
+     re-converge into the fault-free objective envelope; exhausted
+     retries raise ``HealthError`` or degrade to ``solve_serial``.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.data.synthetic import make_classification
+from repro.engine import make_grid_data, solve, solve_serial
+from repro.engine.data import DSOState
+from repro.runtime import (HealthError, HealthGuard, LedgerEvent,
+                           NaNInjector, SnapshotStore, WallClockMonitor,
+                           all_finite, ledger_counts, objective_regression)
+
+
+def _prob(m=64, d=48, density=0.15, seed=0):
+    return make_classification(m=m, d=d, density=density, loss="hinge",
+                               lam=1e-3, seed=seed)
+
+
+def _state(p=2, db=3, mb=4):
+    z = jnp.zeros
+    return DSOState(w_grid=z((p, db)), gw_grid=z((p, db)),
+                    alpha=z((p, mb)), ga=z((p, mb)), epoch=jnp.int32(0))
+
+
+# ------------------------------------------------------------------ probes --
+
+
+def test_all_finite_probe():
+    assert all_finite(_state())
+    assert all_finite({"a": jnp.ones(3), "b": [np.zeros(2)]})
+    assert all_finite({})                      # vacuously healthy
+    st = _state()
+    assert not all_finite(st._replace(w_grid=st.w_grid.at[0, 1].set(jnp.nan)))
+    assert not all_finite(st._replace(alpha=st.alpha.at[1, 0].set(jnp.inf)))
+    assert not all_finite({"x": jnp.array([1.0, -jnp.inf])})
+
+
+def test_objective_regression_monitor():
+    hist = [{"epoch": 1, "primal": 1.0}, {"epoch": 2, "primal": 0.5}]
+    assert objective_regression(hist) is None
+    assert objective_regression(hist[:1]) is None          # needs >= 2
+    assert objective_regression([{"epoch": 1}] * 3) is None  # key missing
+    diag = objective_regression(hist + [{"epoch": 3, "primal": 5.0}])
+    assert diag is not None and "regression" in diag and "0.5" in diag
+    diag = objective_regression(hist + [{"epoch": 3, "primal": np.nan}])
+    assert diag is not None and "not finite" in diag
+    # the slack absorbs noise around a tiny converged objective
+    tiny = [{"primal": 1e-5}, {"primal": 2e-5}, {"primal": 9e-4}]
+    assert objective_regression(tiny, ratio=2.0, slack=1e-3) is None
+    assert objective_regression(tiny, ratio=2.0, slack=0.0) is not None
+
+
+# ------------------------------------------------------------------ ledger --
+
+
+def test_ledger_event_dict_compat():
+    ev = LedgerEvent(kind="health", epoch=4, action="rollback",
+                     epochs_lost=2, retry=1,
+                     detail=dict(resumed_from=2, eta0=0.25))
+    assert ev["kind"] == "health" and ev["epochs_lost"] == 2
+    assert ev["resumed_from"] == 2 and ev["eta0"] == 0.25   # detail fallback
+    assert ev.get("worker") is None and ev.get("retry") == 1
+    with pytest.raises(KeyError):
+        ev["nope"]
+    d = ev.to_dict()
+    assert d["kind"] == "health" and d["resumed_from"] == 2
+    # "detail" itself always resolves to the dict, not an attribute lookup
+    assert ev["detail"] == dict(resumed_from=2, eta0=0.25)
+
+
+def test_ledger_counts():
+    ledger = [LedgerEvent(kind="crash"), LedgerEvent(kind="crash"),
+              LedgerEvent(kind="health", action="rollback")]
+    assert ledger_counts(ledger) == {"crash": 2, "health": 1}
+    assert ledger_counts([]) == {}
+
+
+# ------------------------------------------------------------------ policy --
+
+
+def test_health_guard_validation_and_hooks():
+    with pytest.raises(ValueError, match="eta_decay"):
+        HealthGuard(eta_decay=0.0)
+    with pytest.raises(ValueError, match="on_exhausted"):
+        HealthGuard(on_exhausted="panic")
+    g = HealthGuard()
+    st = _state()
+    assert g.check_state(st) is None
+    assert g.check_state(
+        st._replace(ga=st.ga.at[0, 0].set(jnp.nan))) == "nonfinite state"
+    assert g.inject(st, 3) is st               # no injector: identity
+    g.note(kind="health", epoch=2, action="rollback", failure="x")
+    assert len(g.ledger) == 1 and g.ledger[0]["failure"] == "x"
+
+
+def test_nan_injector_fires_once_per_epoch():
+    inj = NaNInjector({2: ("w", 1), 4: ("alpha", 0)})
+    st = _state()
+    assert inj.inject(st, 1) is st             # not planned
+    poisoned = inj.inject(st, 2)
+    assert not bool(jnp.isfinite(poisoned.w_grid[1]).all())
+    assert inj.inject(st, 2) is st             # fired already (rollback-safe)
+    poisoned = inj.inject(st, 4)
+    assert not bool(jnp.isfinite(poisoned.alpha[0]).all())
+    with pytest.raises(ValueError, match="'w' | 'alpha'"):
+        NaNInjector({1: ("gw", 0)}).inject(st, 1)
+
+
+def test_wall_clock_monitor_semantics():
+    with pytest.raises(ValueError, match="factor"):
+        WallClockMonitor(factor=1.0)
+    mon = WallClockMonitor(factor=1.8, patience=1, beta=0.5)
+    assert not mon.observe(1.0, cold=True)     # cold: never recorded
+    assert mon.baseline is None
+    assert not mon.observe(1.0)                # sets baseline
+    assert not mon.observe(1.1)                # healthy
+    assert mon.observe(9.0)                    # ewma 5.05 > 1.8 -> fires
+    mon.calm()                                 # post-replan: baseline kept
+    assert mon.baseline == 1.0 and mon.streak == 0
+    assert mon.observe(9.0)                    # still slow: escalates
+    mon.reset()                                # post-reshard: full restart
+    assert mon.baseline is None
+    assert not mon.observe(9.0)                # new baseline, no false fire
+
+
+def test_wall_clock_monitor_patience():
+    mon = WallClockMonitor(factor=1.5, patience=2)
+    mon.observe(1.0)
+    assert not mon.observe(10.0)               # hot streak 1 of 2
+    assert mon.observe(10.0)                   # hot streak 2 -> fires
+
+
+# ------------------------------------------------------------------- chaos --
+
+NAN_MATRIX = [("dense_jnp", "w"), ("dense_jnp", "alpha"),
+              ("sparse_jnp", "w"), ("sparse_bucketed_jnp", "w")]
+
+
+@pytest.mark.parametrize("backend,leaf", NAN_MATRIX)
+def test_solve_nan_rollback_reconverges(backend, leaf, tmp_path):
+    """A NaN poisoned into the live state mid-run must be caught by the
+    finite probe at the next chunk boundary, rolled back to the latest
+    valid snapshot with eta backed off, and still re-converge into the
+    fault-free objective envelope."""
+    prob = _prob()
+    ref = solve(prob, backend=backend, p=4, epochs=10, eta0=0.5,
+                eval_every=2, seed=7)
+    store = SnapshotStore(str(tmp_path))
+    guard = HealthGuard(eta_decay=0.7, injector=NaNInjector({4: (leaf, 1)}))
+    res = solve(prob, backend=backend, p=4, epochs=10, eta0=0.5,
+                eval_every=2, seed=7, checkpoint_every=2, store=store,
+                health=guard)
+    assert np.isfinite(np.asarray(res.w)).all()
+    events = [ev for ev in guard.ledger if ev["kind"] == "health"]
+    assert len(events) == 1
+    ev = events[0]
+    assert ev["action"] == "rollback" and ev["failure"] == "nonfinite state"
+    assert ev["resumed_from"] == 4 and ev["epochs_lost"] == 2
+    assert ev["eta0"] == pytest.approx(0.5 * 0.7)
+    # the poisoned iterate never reached disk: every snapshot verifies
+    for ep in store.epochs():
+        assert store.verify(ep) == "verified"
+    # eta backoff changes the post-rollback trajectory; the objective must
+    # still land in the fault-free envelope
+    assert abs(res.history[-1]["primal"]
+               - ref.history[-1]["primal"]) < 0.05
+    # the backoff parameters ride in every snapshot config
+    cfg = store.load().config
+    assert cfg["eta_decay"] == 0.7 and cfg["max_retries"] == 3
+
+
+def test_solve_health_exhausted_raises(tmp_path):
+    """Zero retry budget: the first failed probe must raise HealthError
+    naming the failure and the backed-off step size."""
+    prob = _prob()
+    guard = HealthGuard(max_retries=0, injector=NaNInjector({0: ("w", 0)}))
+    with pytest.raises(HealthError, match="nonfinite state"):
+        solve(prob, backend="dense_jnp", p=4, epochs=4, eta0=0.5, seed=7,
+              checkpoint_every=2, store=SnapshotStore(str(tmp_path)),
+              health=guard)
+
+
+def test_solve_health_degrades_to_serial(tmp_path):
+    """on_exhausted='serial': a Problem source falls back to the
+    paper-exact solve_serial safe mode instead of raising."""
+    prob = _prob(m=32, d=24)
+    guard = HealthGuard(max_retries=0, on_exhausted="serial",
+                        injector=NaNInjector({0: ("w", 0)}))
+    res = solve(prob, backend="dense_jnp", p=4, epochs=4, eta0=0.5, seed=7,
+                eval_every=2, checkpoint_every=2,
+                store=SnapshotStore(str(tmp_path)), health=guard)
+    assert np.isfinite(np.asarray(res.w)).all()
+    assert any(ev["action"] == "degrade_serial" for ev in guard.ledger)
+    ref = solve_serial(prob, epochs=4, eta0=0.5, seed=7, eval_every=2)
+    np.testing.assert_array_equal(np.asarray(res.w), np.asarray(ref.w))
+
+
+def test_solve_health_serial_needs_problem_source(tmp_path):
+    """Pre-built grid data cannot rebuild the pointwise reference — the
+    'serial' degradation must refuse with a diagnostic saying so."""
+    prob = _prob(m=32, d=24)
+    data = make_grid_data(prob, 4)
+    guard = HealthGuard(max_retries=0, on_exhausted="serial",
+                        injector=NaNInjector({0: ("w", 0)}))
+    with pytest.raises(HealthError, match="Problem source"):
+        solve(data, backend="dense_jnp", epochs=4, eta0=0.5, seed=7,
+              loss_name="hinge", reg_name="l2", lam=prob.lam, m=prob.m,
+              d=prob.d, checkpoint_every=2,
+              store=SnapshotStore(str(tmp_path)), health=guard)

@@ -217,3 +217,114 @@ def test_ingest_normalize_is_strict_on_multiclass():
             f.write("1 1:1.0\n2 2:1.0\n3 1:0.5\n")
         with pytest.raises(ValueError, match="cannot normalize"):
             ingest_libsvm(path, normalize_labels=True)
+
+
+# ------------------------------------------------------- malformed policy --
+
+
+def test_malformed_policy_error_raises_malformed_line():
+    """Default policy: the first bad line raises MalformedLine (a
+    ValueError, so existing match= contracts keep holding)."""
+    from repro.sparse.ingest import MalformedLine, scan_libsvm
+    assert issubclass(MalformedLine, ValueError)
+    for bad in ["x 1:1.0", "+1 oops", "+1 2:abc", "+1 3:1.0 2:2.0"]:
+        with pytest.raises(MalformedLine):
+            scan_libsvm([bad])
+    with pytest.raises(ValueError, match="on_malformed"):
+        scan_libsvm(["+1 1:1.0"], on_malformed="ignore")
+    with pytest.raises(ValueError, match="quarantine_path"):
+        scan_libsvm(["+1 1:1.0"], on_malformed="quarantine")
+
+
+def test_malformed_skip_counts_and_keeps_good_rows():
+    """on_malformed='skip': bad lines drop out of BOTH passes identically
+    (one shared parser), the count surfaces in ScanStats.malformed, and
+    the assembled CSR matches the file minus the bad lines."""
+    from repro.sparse.ingest import ingest_libsvm, scan_libsvm
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "dirty.libsvm")
+        with open(path, "w") as f:
+            f.write("+1 1:1.0 3:0.5\nbogus line\n-1 2:2.0\n+1 1:1.0 oops\n")
+        st = scan_libsvm(path, on_malformed="skip")
+        assert st.n_rows == 2 and st.malformed == 2 and st.nnz == 3
+        csr, y, stats = ingest_libsvm(path, on_malformed="skip",
+                                      return_stats=True)
+    assert stats.malformed == 2
+    assert csr.shape == (2, 3) and csr.nnz == 3
+    np.testing.assert_array_equal(y, [1.0, -1.0])
+
+
+def test_malformed_quarantine_writes_sidecar_once():
+    """on_malformed='quarantine': the raw bad lines land in the sidecar
+    file (default <path>.quarantine), written by pass 1 ONLY — pass 2
+    re-drops without duplicating them."""
+    from repro.sparse.ingest import ingest_libsvm
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "dirty.libsvm")
+        with open(path, "w") as f:
+            f.write("+1 1:1.0\nbogus line\n-1 2:2.0\n+1 0:1.0\n")
+        csr, y, stats = ingest_libsvm(path, on_malformed="quarantine",
+                                      return_stats=True)
+        with open(path + ".quarantine") as f:
+            dropped = f.read().splitlines()
+    assert dropped == ["bogus line", "+1 0:1.0"]
+    assert stats.malformed == 2
+    assert csr.shape == (2, 2) and list(y) == [1.0, -1.0]
+
+
+def test_iter_csr_shards_tallies_drop_counters():
+    from repro.sparse.ingest import iter_csr_shards
+    counters = {}
+    shards = list(iter_csr_shards(["+1 1:1.0", "junk", "-1 2:1.0"],
+                                  n_features=2, on_malformed="skip",
+                                  counters=counters))
+    assert counters == {"malformed": 1}
+    assert sum(s.m for s, _ in shards) == 2
+
+
+def test_ingest_cross_checks_malformed_counts_between_passes():
+    """A file whose bad-line set changes between the passes (pass 1 saw a
+    clean file, pass 2 drops a line) must fail loudly — the preallocated
+    CSR would otherwise silently misalign."""
+    from repro.sparse import ingest as ing
+    real_scan = ing.scan_libsvm
+
+    def stale_scan(source, **kw):
+        st = real_scan(source, **kw)
+        # same row/nnz totals, different drop count: only the malformed
+        # cross-check (not the row-count check) can catch this
+        return st._replace(malformed=st.malformed + 1)
+
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "mut.libsvm")
+        with open(path, "w") as f:
+            f.write("+1 1:1.0\nbogus\n-1 2:2.0\n")
+        ing.scan_libsvm = stale_scan
+        try:
+            with pytest.raises(ValueError, match="changed between.*dropped"):
+                ing.ingest_libsvm(path, on_malformed="skip")
+        finally:
+            ing.scan_libsvm = real_scan
+
+
+def test_ingest_detects_truncation_between_passes():
+    """Pass 1 counted more rows than pass 2 could read back: the file was
+    truncated mid-ingest and the error says so."""
+    from repro.sparse import ingest as ing
+    real_scan = ing.scan_libsvm
+
+    def stale_scan(source, **kw):
+        st = real_scan(source, **kw)
+        return st._replace(n_rows=st.n_rows + 1,
+                           row_nnz=np.append(st.row_nnz, 0))
+
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "trunc.libsvm")
+        with open(path, "w") as f:
+            f.write("+1 1:1.0\n-1 2:2.0\n")
+        ing.scan_libsvm = stale_scan
+        try:
+            with pytest.raises(ValueError, match="truncated or mutated"):
+                ing.ingest_libsvm(path)
+        finally:
+            ing.scan_libsvm = real_scan

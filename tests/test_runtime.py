@@ -25,6 +25,13 @@ Six groups:
   6. satellites — compiled-sparse-kernel ValueError naming sparse_jnp on
      a platform without Mosaic scatter/gather (mocked platform; see also
      tests/test_kernels.py).
+  7. integrity/self-healing — per-leaf CRC32 + whole-file digest
+     verification (bit flips, truncation, legacy files), retention GC,
+     the corruption matrix (truncate/bit-flip/delete the latest snapshot
+     -> latest-valid-wins recovery stays bit-identical, incl. a SIGKILL
+     subprocess variant), supervisor ping-pong cap (max_restores),
+     nan/corrupt chaos recovery, and wall-clock straggler replanning
+     escalation (lpt schedule -> live reshard).
 """
 
 import os
@@ -42,9 +49,10 @@ from _hypothesis_compat import given, settings, st
 from repro.data.synthetic import make_classification
 from repro.engine import make_grid_data, solve
 from repro.engine.schedules import SCHEDULES
-from repro.runtime import (DSOSnapshot, SnapshotStore, load_pytree,
-                           load_snapshot, read_meta, reshard, reshard_state,
-                           resume, save_pytree, save_snapshot)
+from repro.runtime import (DSOSnapshot, SnapshotIntegrityError,
+                           SnapshotStore, load_pytree, load_snapshot,
+                           read_meta, reshard, reshard_state, resume,
+                           save_pytree, save_snapshot, verify_pytree)
 from repro.runtime.reshard import retile
 from repro.sparse.format import (grid_to_csr, make_bucketed_grid_data,
                                  make_sparse_grid_data, sparse_grid_from_csr,
@@ -500,3 +508,198 @@ def test_supervisor_sharded_crash_and_reshard():
                          capture_output=True, text=True, timeout=600)
     assert out.returncode == 0, out.stderr[-2000:]
     assert "SUPERVISED_MATCH" in out.stdout
+
+
+# ------------------------------------------------- integrity / self-healing --
+
+
+def _flip_payload_byte(path):
+    """XOR-flip one byte inside the first npy member's payload — zip
+    metadata has semantically dead bytes (timestamps, version fields) a
+    flip would not corrupt, so the flip must land where the member CRC
+    and the leaf CRC both cover it."""
+    with open(path, "r+b") as f:
+        blob = f.read()
+        at = blob.find(b"\x93NUMPY")
+        at = at + 80 if at >= 0 else len(blob) // 2
+        f.seek(at)
+        byte = f.read(1)
+        f.seek(-1, 1)
+        f.write(bytes([byte[0] ^ 0xFF]))
+
+
+def test_verify_pytree_detects_bit_flip(tmp_path):
+    path = str(tmp_path / "t.npz")
+    save_pytree(path, {"a": np.arange(64, dtype=np.float32)}, meta={"s": 1})
+    assert verify_pytree(path) == "verified"
+    _flip_payload_byte(path)
+    with pytest.raises(SnapshotIntegrityError):
+        verify_pytree(path)
+
+
+def test_verify_pytree_detects_truncation(tmp_path):
+    path = str(tmp_path / "t.npz")
+    save_pytree(path, {"a": np.arange(64, dtype=np.float32)})
+    with open(path, "rb") as f:
+        blob = f.read()
+    with open(path, "wb") as f:
+        f.write(blob[:len(blob) // 2])
+    with pytest.raises(SnapshotIntegrityError, match="truncated or corrupt"):
+        verify_pytree(path)
+
+
+def test_verify_pytree_legacy_files_still_pass(tmp_path):
+    """Pre-integrity files (no __crc__ record) verify as 'legacy' — the
+    zip member CRCs still cover readability."""
+    path = str(tmp_path / "old.npz")
+    np.savez(path, **{"d:a": np.ones(3)})
+    assert verify_pytree(path) == "legacy"
+
+
+def test_store_retention_gc(tmp_path):
+    """keep_last bounds the snapshot count; keep_every pins anchor epochs
+    that retention never collects."""
+    with pytest.raises(ValueError, match="keep_last"):
+        SnapshotStore(str(tmp_path), keep_last=0)
+    with pytest.raises(ValueError, match="keep_every"):
+        SnapshotStore(str(tmp_path), keep_every=0)
+    prob = _prob(m=32, d=24)
+    store = SnapshotStore(str(tmp_path), keep_last=2, keep_every=4)
+    solve(prob, backend="dense_jnp", p=4, epochs=9, eta0=0.5, seed=1,
+          checkpoint_every=1, store=store)
+    # newest 2 {8, 9} + pinned multiples of 4 {4, 8} survive
+    assert store.epochs() == [4, 8, 9]
+    assert store.load().epochs_done == 9
+    for ep in store.epochs():
+        assert store.verify(ep) == "verified"
+
+
+@pytest.mark.parametrize("corruption", ["bitflip", "truncate", "delete"])
+def test_corruption_matrix_latest_valid_wins(corruption, tmp_path):
+    """The corruption matrix: whatever happens to the latest snapshot —
+    bit flip, truncation, deletion — resume restores the newest VALID one
+    and the finished run is bit-identical to the uninterrupted one."""
+    prob = _prob()
+    ref = solve(prob, backend="dense_jnp", p=4, epochs=8, eta0=0.5,
+                eval_every=2, seed=7)
+    store = SnapshotStore(str(tmp_path))
+    solve(prob, backend="dense_jnp", p=4, epochs=6, eta0=0.5, eval_every=2,
+          seed=7, checkpoint_every=2, store=store)
+    assert store.epochs() == [2, 4, 6]
+    target = store.path(6)
+    if corruption == "bitflip":
+        _flip_payload_byte(target)
+    elif corruption == "truncate":
+        with open(target, "rb") as f:
+            blob = f.read()
+        with open(target, "wb") as f:
+            f.write(blob[:len(blob) // 2])
+    else:
+        os.remove(target)
+    res = resume(prob, store, epochs=8)
+    assert np.abs(np.asarray(res.w) - np.asarray(ref.w)).max() == 0.0
+    assert np.abs(np.asarray(res.alpha) - np.asarray(ref.alpha)).max() == 0.0
+    assert res.history == ref.history
+    if corruption != "delete":
+        # the corrupt file was quarantined, not deleted (forensics)
+        assert [e for e, _ in store.quarantined] == [6]
+        assert os.path.exists(
+            os.path.join(str(tmp_path), "quarantine", "dso_00000006.npz"))
+
+
+def test_kill_then_corrupt_resume_falls_back(tmp_path):
+    """SIGKILL variant of the corruption matrix: the process dies at the
+    epoch-4 boundary, the epoch-4 snapshot is then corrupted on disk —
+    resume must quarantine it, restore epoch 2, and still finish
+    bit-identically."""
+    ckpt_dir = str(tmp_path)
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    out = subprocess.run(
+        [sys.executable, "-c", KILL_SCRIPT, "dense_jnp", "cyclic", ckpt_dir],
+        env=env, capture_output=True, text=True, timeout=600)
+    assert out.returncode == -signal.SIGKILL, (out.returncode,
+                                               out.stderr[-2000:])
+    store = SnapshotStore(ckpt_dir)
+    assert store.latest() == 4
+    _flip_payload_byte(store.path(4))
+    prob = _prob()
+    ref = solve(prob, backend="dense_jnp", schedule="cyclic", p=4, epochs=8,
+                eta0=0.5, eval_every=2, seed=7)
+    res = resume(prob, store, epochs=8)
+    assert [e for e, _ in store.quarantined] == [4]
+    assert np.abs(np.asarray(res.w) - np.asarray(ref.w)).max() == 0.0
+    assert res.history == ref.history
+
+
+def test_supervisor_max_restores_caps_ping_pong(tmp_path):
+    """A snapshot restored max_restores+1 consecutive times without
+    progress must raise a RuntimeError naming the snapshot and count —
+    no silent crash-restore ping-pong."""
+    from repro.core.dso_dist import make_dso_mesh
+    from repro.runtime import FaultEvent, Supervisor
+    prob = _prob(m=32, d=24)
+    plan = tuple(FaultEvent(3, "crash") for _ in range(4))
+    sup = Supervisor(SnapshotStore(str(tmp_path)), checkpoint_every=2,
+                     eta0=0.5, max_restores=2, fault_plan=plan)
+    with pytest.raises(RuntimeError,
+                       match=r"dso_00000002\.npz 3 consecutive times.*"
+                             r"max_restores=2"):
+        sup.run_sharded(prob, 6, mesh=make_dso_mesh(1), impl="jnp", seed=5)
+    with pytest.raises(ValueError, match="max_restores"):
+        Supervisor(SnapshotStore(str(tmp_path)), max_restores=0)
+
+
+def test_supervisor_nan_and_corrupt_chaos_recovers_exactly(tmp_path):
+    """In-process chaos: a NaN injection is caught by the health lane
+    before it reaches disk, a bit-flipped latest snapshot is quarantined
+    on the next restore (latest-valid-wins), and — because no eta backoff
+    fired — the final trajectory is STILL bit-identical."""
+    from repro.core.dso_dist import ShardedDSO, make_dso_mesh
+    from repro.runtime import FaultEvent, Supervisor
+    prob = _prob(m=32, d=24)
+    ref = ShardedDSO(prob, make_dso_mesh(1), impl="jnp", seed=5)
+    ref.run_epochs(8, 0.5)
+    store = SnapshotStore(str(tmp_path))
+    plan = (FaultEvent(2, "nan", 0), FaultEvent(4, "corrupt"),
+            FaultEvent(5, "crash"))
+    sup = Supervisor(store, checkpoint_every=2, eta0=0.5, fault_plan=plan)
+    opt, log = sup.run_sharded(prob, 8, mesh=make_dso_mesh(1), impl="jnp",
+                               seed=5)
+    assert [ev["kind"] for ev in log] == ["nan", "health", "corrupt",
+                                          "crash"]
+    health = log[1]
+    assert health["action"] == "restore"
+    assert health["failure"] == "nonfinite state"
+    assert health["resumed_from"] == 2 and health["epochs_lost"] == 2
+    crash = log[3]
+    assert crash["resumed_from"] == 2 and crash["epochs_lost"] == 3
+    assert [e for e, _ in crash["quarantined"]] == [4]
+    assert [e for e, _ in store.quarantined] == [4]
+    assert sup.eta0 == 0.5   # single restores never back the step off
+    assert np.abs(np.asarray(opt.w_full())
+                  - np.asarray(ref.w_full())).max() == 0.0
+
+
+def test_supervisor_straggler_replan_escalation(tmp_path):
+    """The wall-clock lane: a persistent straggler (simulated per-epoch
+    delay, huge next to the ms-scale epoch) first triggers the lpt
+    schedule replan, then — still slow at half relief — a live reshard
+    that sheds the slow worker entirely."""
+    from repro.core.dso_dist import make_dso_mesh
+    from repro.runtime import FaultEvent, Supervisor
+    prob = _prob(m=32, d=24)
+    sup = Supervisor(SnapshotStore(str(tmp_path)), checkpoint_every=1,
+                     eta0=0.5, fault_plan=(FaultEvent(3, "slow", 0),),
+                     straggler_delay_s=0.25, replan=True,
+                     straggler_factor=1.5, straggler_patience=1,
+                     reshard_to=1)
+    opt, log = sup.run_sharded(prob, 10, mesh=make_dso_mesh(1), impl="jnp",
+                               seed=5)
+    actions = [ev["action"] for ev in log
+               if ev["kind"] == "straggler_replan"]
+    assert actions == ["schedule_lpt", "reshard"]
+    reshard_ev = [ev for ev in log if ev["action"] == "reshard"][-1]
+    assert reshard_ev["p_to"] == 1
+    assert opt.epochs_done == 10
+    assert np.isfinite(np.asarray(opt.w_full())).all()
