@@ -1,6 +1,15 @@
-"""Assemble EXPERIMENTS.md sections from saved dry-run / roofline artifacts.
+"""Assemble EXPERIMENTS.md sections from saved dry-run / roofline artifacts,
+and render observability run-event logs into readable run reports.
 
     PYTHONPATH=src python -m benchmarks.report [--section dryrun|roofline]
+    PYTHONPATH=src python -m benchmarks.report --section run-report \\
+        --events <run-events.jsonl>
+
+The run-report mode consumes the JSONL event log a ``repro.obs.RunRecorder``
+writes (``examples/elastic_dso.py --chaos`` produces one per run, uploaded
+as the CI chaos artifact) and renders: the run meta, per-chunk throughput
+(rows/s, nnz/s, packed bytes/s), the convergence trace (eval.* gauges),
+the span timing summary, and the recovery-ledger timeline.
 """
 
 import argparse
@@ -64,11 +73,123 @@ def roofline_table() -> str:
     return "\n".join(lines)
 
 
+def _fmt_rate(x: float) -> str:
+    for unit, scale in (("G", 1e9), ("M", 1e6), ("k", 1e3)):
+        if abs(x) >= scale:
+            return f"{x / scale:.2f}{unit}"
+    return f"{x:.2f}"
+
+
+def _series(events, name):
+    return [(e["ts"], e["value"]) for e in events
+            if e["type"] == "metric" and e["name"] == name
+            and isinstance(e["value"], (int, float))]
+
+
+def run_report(events_path: str) -> str:
+    """Render one ``RunRecorder`` JSONL event log as a readable report."""
+    from repro.obs import read_events
+    from repro.runtime.health import render_ledger_event
+
+    events = read_events(events_path)
+    lines = [f"run-event log: {events_path} ({len(events)} events)"]
+
+    metas = [e for e in events if e["type"] == "meta"]
+    for mt in metas:
+        kv = " ".join(f"{k}={v}" for k, v in mt.items()
+                      if k not in ("seq", "ts", "type"))
+        lines.append(f"meta @{mt['ts']:.2f}s: {kv}")
+
+    lines.append("")
+    lines.append("### Throughput (per evaluation chunk)")
+    any_rate = False
+    for name, unit in (("rows_per_s", "rows/s"), ("nnz_per_s", "nnz/s"),
+                       ("packed_bytes_per_s", "B/s"),
+                       ("serve.tokens_per_s", "tok/s")):
+        vals = [v for _, v in _series(events, name)]
+        if not vals:
+            continue
+        any_rate = True
+        lines.append(
+            f"- {name}: min {_fmt_rate(min(vals))} / "
+            f"mean {_fmt_rate(sum(vals) / len(vals))} / "
+            f"max {_fmt_rate(max(vals))} {unit} over {len(vals)} chunk(s)")
+    epoch_s = [v for _, v in _series(events, "epoch_s")]
+    if epoch_s:
+        any_rate = True
+        lines.append(f"- epoch_s: min {min(epoch_s):.4f} / mean "
+                     f"{sum(epoch_s) / len(epoch_s):.4f} / max "
+                     f"{max(epoch_s):.4f} s over {len(epoch_s)} chunk(s)")
+    if not any_rate:
+        lines.append("- (no throughput samples)")
+
+    evals = sorted({e["name"] for e in events if e["type"] == "metric"
+                    and e["name"].startswith("eval.")})
+    if evals:
+        lines.append("")
+        lines.append("### Convergence (eval.* gauges, first -> last)")
+        for name in evals:
+            s = _series(events, name)
+            lines.append(f"- {name}: {s[0][1]:.6g} -> {s[-1][1]:.6g} "
+                         f"over {len(s)} sample(s)")
+
+    counters = sorted({e["name"] for e in events if e["type"] == "metric"
+                       and e["kind"] == "counter"})
+    if counters:
+        lines.append("")
+        lines.append("### Counters (final)")
+        for name in counters:
+            s = _series(events, name)
+            lines.append(f"- {name}: {s[-1][1]:g}")
+
+    spans = {}
+    for e in events:
+        if e["type"] != "span":
+            continue
+        s = spans.setdefault(e["name"], [0, 0.0, 0.0])
+        s[0] += 1
+        s[1] += e["dur_s"]
+        s[2] = max(s[2], e["dur_s"])
+    if spans:
+        lines.append("")
+        lines.append("### Spans")
+        lines.append("| span | count | total s | mean s | max s |")
+        lines.append("|---|---|---|---|---|")
+        for name, (n, tot, mx) in sorted(spans.items(),
+                                         key=lambda kv: -kv[1][1]):
+            lines.append(f"| {name} | {n} | {tot:.4f} | {tot / n:.4f} | "
+                         f"{mx:.4f} |")
+
+    ledger = [e for e in events if e["type"] == "ledger"]
+    lines.append("")
+    lines.append("### Recovery ledger")
+    if ledger:
+        for e in ledger:
+            lines.append(f"- @{e['ts']:.2f}s {render_ledger_event(e)}")
+        counts: dict = {}
+        for e in ledger:
+            counts[e["kind"]] = counts.get(e["kind"], 0) + 1
+        lines.append(f"- counts: {counts}")
+    else:
+        lines.append("- no events")
+    return "\n".join(lines)
+
+
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--section", choices=["dryrun", "roofline", "all"],
+    ap.add_argument("--section",
+                    choices=["dryrun", "roofline", "run-report", "all"],
                     default="all")
+    ap.add_argument("--events", default=None,
+                    help="run-event JSONL log (RunRecorder output) for "
+                         "--section run-report")
     args = ap.parse_args()
+    if args.section == "run-report":
+        if args.events is None:
+            ap.error("--section run-report requires --events <log.jsonl>")
+        print("## §Run report\n")
+        print(run_report(args.events))
+        return
     if args.section in ("dryrun", "all"):
         print("## §Dry-run\n")
         print(dryrun_table())

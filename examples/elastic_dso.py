@@ -19,8 +19,15 @@ within 1e-3 of the fault-free objective, and leave a recovery ledger
 the NaN rollback, the quarantine + older-snapshot restore, and the
 wall-clock replanning escalation (lpt schedule, then live reshard).
 
+The chaos run also drives a ``repro.obs.RunRecorder``: every throughput
+sample, snapshot/restore/reshard span, and ledger event lands in ONE
+ordered JSONL run-event log (``--events-out``), rendered to a readable
+timeline (``--report-out``, via ``benchmarks.report run-report``) — the
+CI chaos artifact.
+
     PYTHONPATH=src python examples/elastic_dso.py [--epochs N]
-        [--fault-every K] [--ckpt-every K] [--chaos [--ledger-out F]]
+        [--fault-every K] [--ckpt-every K]
+        [--chaos [--ledger-out F] [--events-out F] [--report-out F]]
 """
 
 import argparse
@@ -30,8 +37,9 @@ import sys
 import tempfile
 import time
 
-sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(
-    os.path.abspath(__file__))), "src"))
+_REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(_REPO, "src"))
+sys.path.insert(0, _REPO)   # benchmarks.report renders the run report
 # 8 host devices BEFORE jax initializes — the mesh is a real 8-way shard_map
 os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
 
@@ -39,8 +47,10 @@ import numpy as np  # noqa: E402
 
 from repro.core.dso_dist import ShardedDSO, make_dso_mesh  # noqa: E402
 from repro.data.synthetic import make_classification  # noqa: E402
+from repro.obs import RunRecorder  # noqa: E402
 from repro.runtime import (FaultEvent, SnapshotStore, Supervisor,  # noqa: E402
-                           ledger_counts, periodic_crashes)
+                           ledger_counts, periodic_crashes,
+                           render_ledger_event)
 
 
 def run_chaos(args):
@@ -66,18 +76,21 @@ def run_chaos(args):
     plan = (FaultEvent(2, "nan", 1), FaultEvent(3, "crash"),
             FaultEvent(5, "crash"), FaultEvent(6, "corrupt"),
             FaultEvent(7, "crash"), FaultEvent(10, "slow", 2))
+    rec = RunRecorder(args.events_out,
+                      meta=dict(run="elastic_dso_chaos", m=prob.m, d=prob.d,
+                                epochs=epochs, eta0=args.eta0,
+                                fault_plan=[ev.describe() for ev in plan]))
     with tempfile.TemporaryDirectory() as ckpt_dir:
         sup = Supervisor(SnapshotStore(ckpt_dir), checkpoint_every=2,
                          eta0=args.eta0, fault_plan=plan,
                          straggler_delay_s=0.05, replan=True,
                          straggler_factor=1.5, straggler_patience=1,
-                         reshard_to=4)
+                         reshard_to=4, obs=rec)
         opt, ledger = sup.run_sharded(prob, epochs, mesh=make_dso_mesh(8),
                                       impl="auto", schedule="cyclic",
                                       seed=5)
         for ev in ledger:
-            print(f"  [ledger] {ev.kind}@{ev.epoch} {ev.action} "
-                  f"{dict(ev.detail)}")
+            print(f"  [ledger] {render_ledger_event(ev)}")
         counts = ledger_counts(ledger)
         primal = opt.metrics()["primal"]
         gap = abs(primal - ref_primal)
@@ -111,6 +124,14 @@ def run_chaos(args):
         with open(args.ledger_out, "w") as f:
             json.dump(out, f, indent=2, default=str)
         print(f"recovery ledger -> {args.ledger_out}")
+        # finalize the run-event log and render it to a readable timeline
+        rec.close()
+        from benchmarks.report import run_report
+        with open(args.report_out, "w") as f:
+            f.write("## §Run report\n\n" + run_report(args.events_out)
+                    + "\n")
+        print(f"run-event log -> {args.events_out} "
+              f"({len(rec.events)} events); report -> {args.report_out}")
         # every fault class detected/acted on, and the run still converged
         assert counts.get("health", 0) >= 1, "NaN never detected"
         assert sup.store.quarantined, "corrupt snapshot never quarantined"
@@ -134,6 +155,11 @@ def main(argv=None):
                     help="run the self-healing gauntlet (NaN + crashes + "
                          "corrupt snapshot + persistent straggler) instead")
     ap.add_argument("--ledger-out", default="elastic-chaos-ledger.json")
+    ap.add_argument("--events-out", default="elastic-chaos-events.jsonl",
+                    help="--chaos: run-event JSONL log (RunRecorder)")
+    ap.add_argument("--report-out", default="elastic-chaos-report.md",
+                    help="--chaos: rendered run report "
+                         "(benchmarks.report run-report)")
     args = ap.parse_args(argv)
     if args.chaos:
         return run_chaos(args)

@@ -171,8 +171,11 @@ class ShardedDSO:
     def __init__(self, prob: Problem, mesh: Mesh | None = None,
                  row_batches: int = 1, use_adagrad: bool = True,
                  alpha0: float = 0.0, impl: str = "jnp",
-                 schedule: str = "cyclic", seed: int = 0):
+                 schedule: str = "cyclic", seed: int = 0, obs=None):
         self.prob = prob
+        # observability seam (duck-typed recorder or None; never required):
+        # metrics() mirrors its eval scalars into obs gauges when attached
+        self.obs = obs
         self.mesh = mesh or make_dso_mesh()
         self.p = self.mesh.devices.size
         self.backend, data = resolve_backend_and_build(prob, impl, self.p,
@@ -304,11 +307,16 @@ class ShardedDSO:
 
     def metrics(self) -> dict:
         w, a = self.w_full(), self.alpha_full()
-        return dict(
+        out = dict(
             epoch=self.epochs_done,
             primal=float(primal_objective(self.prob, w)),
             gap=float(duality_gap(self.prob, w, a)),
         )
+        if self.obs is not None:
+            for k, v in out.items():
+                if k != "epoch":
+                    self.obs.metrics.gauge(f"eval.{k}").set(v)
+        return out
 
 
 def run_dso_sharded(prob: Problem, epochs: int = 10, eta0: float = 0.1,

@@ -59,8 +59,21 @@ code-path *product* into a *sum*:
                         ^
                         |  evaluation hooks (evaluate.py):
                         |  problem_eval_hook (dense objectives) |
+                        |  pd_gap_eval_hook (P(w) - D(alpha), the
+                        |  paper's convergence certificate) |
                         |  make_csr_primal_eval (jitted chunked
                         |  CSR matvec — out-of-core, no host numpy)
+
+   +------------------ OBSERVABILITY (repro/obs) ----------------------+
+   |  solve(..., obs=rec) / solve_serial(..., obs=rec): duck-typed     |
+   |  RunRecorder — per-chunk epoch_chunk spans (synced with           |
+   |  block_until_ready so they time completed epochs), rows/s, nnz/s, |
+   |  packed-bytes/s and eta gauges, eval.* gauges from every history  |
+   |  entry, snapshot_save / restore / eval spans; obs=None (default)  |
+   |  adds NO calls and NO allocations to the chunk loop and keeps     |
+   |  trajectories bit-identical (the metrics-off contract, pinned by  |
+   |  tests/test_obs.py and the obs_overhead gate in BENCH_dso.json)   |
+   +-------------------------------------------------------------------+
 
    +--------------------- RUNTIME (repro/runtime) ---------------------+
    |  elastic execution around the engine (see runtime/__init__.py     |
@@ -114,7 +127,8 @@ from repro.engine.data import (DSOState, GridData, TileData, as_tile_data,
 from repro.engine.driver import (SolveResult, inner_iteration, run_epoch,
                                  run_epochs, solve, solve_serial,
                                  warn_ragged_eval)
-from repro.engine.evaluate import make_csr_primal_eval, problem_eval_hook
+from repro.engine.evaluate import (make_csr_primal_eval, pd_gap_eval_hook,
+                                   problem_eval_hook)
 from repro.engine.schedules import (SCHEDULES, Schedule, cyclic_perms,
                                     fixed_schedule, get_schedule,
                                     lpt_latin_square)
@@ -128,7 +142,8 @@ __all__ = [
     "init_state_data", "make_grid_data", "prob_meta", "tile_dims",
     "SolveResult", "inner_iteration", "run_epoch", "run_epochs", "solve",
     "solve_serial", "warn_ragged_eval", "make_csr_primal_eval",
-    "problem_eval_hook", "SCHEDULES", "Schedule", "cyclic_perms",
+    "pd_gap_eval_hook", "problem_eval_hook",
+    "SCHEDULES", "Schedule", "cyclic_perms",
     "fixed_schedule", "get_schedule", "lpt_latin_square",
     "block_tile_step", "eq8_apply", "sparse_tile_step",
 ]

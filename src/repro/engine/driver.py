@@ -18,6 +18,7 @@ divisor suggestion.
 from __future__ import annotations
 
 import functools
+import time
 import warnings
 from typing import Any, NamedTuple
 
@@ -205,6 +206,46 @@ def _next_multiple(t: int, k: int) -> int:
     return (t // k + 1) * k
 
 
+# ------------------------------------------------- observability (obs=) --
+#
+# The obs seam is duck-typed like store=/health=: the engine never imports
+# repro.obs.  Everything below runs ONLY under ``if obs is not None`` —
+# the metrics-off contract (obs/__init__.py) is that the chunk loop does
+# no obs work and allocates nothing when obs is None.
+
+
+def _obs_throughput(obs, *, rows: float, nnz: float, payload_bytes: float):
+    """Bind the static per-epoch work totals once per run; returns the
+    per-chunk callback recording the throughput gauges."""
+    g_rows = obs.metrics.gauge("rows_per_s")
+    g_nnz = obs.metrics.gauge("nnz_per_s")
+    g_bytes = obs.metrics.gauge("packed_bytes_per_s")
+    g_eta = obs.metrics.gauge("eta")
+    h_epoch = obs.metrics.histogram("epoch_s")
+
+    def record(n: int, dt: float, eta: float):
+        dt = max(dt, 1e-12)
+        g_rows.set(rows * n / dt)
+        g_nnz.set(nnz * n / dt)
+        g_bytes.set(payload_bytes * n / dt)
+        g_eta.set(eta)
+        h_epoch.observe(dt / n)
+
+    return record
+
+
+def _obs_eval(obs, entry):
+    """Record every numeric field of an evaluation-history entry as an
+    ``eval.<key>`` gauge (primal, gap, pd_gap, ... — whatever the hook
+    computes becomes a standard metric).  Non-dict entries (custom hooks)
+    are left alone."""
+    if not isinstance(entry, dict):
+        return
+    for k, v in entry.items():
+        if k != "epoch" and isinstance(v, (int, float)):
+            obs.metrics.gauge(f"eval.{k}").set(v)
+
+
 def solve(source, *, backend="auto", schedule="cyclic", p: int = 4,
           epochs: int = 10, eta0: float = 0.1, use_adagrad: bool = True,
           row_batches: int = 1, alpha0: float = 0.0, eval_every: int = 1,
@@ -212,7 +253,7 @@ def solve(source, *, backend="auto", schedule="cyclic", p: int = 4,
           loss_name: str | None = None, reg_name: str | None = None,
           lam: float | None = None, m: int | None = None,
           d: int | None = None, checkpoint_every: int = 0, store=None,
-          init=None, health=None) -> SolveResult:
+          init=None, health=None, obs=None) -> SolveResult:
     """The one epoch driver behind grid / random / out-of-core execution.
 
     ``source`` is either a dense ``Problem`` (the grid data is built here,
@@ -256,6 +297,17 @@ def solve(source, *, backend="auto", schedule="cyclic", p: int = 4,
     ``health.max_retries`` rollbacks are spent, ``health.exhausted``
     either raises ``HealthError`` or requests degradation to the
     paper-exact ``solve_serial`` safe mode (Problem sources only).
+
+    Observability seam (``repro.obs``): ``obs`` (duck-typed, e.g.
+    ``obs.RunRecorder``) receives, per chunk, a ``span("epoch_chunk")``
+    (the chunk is synced with ``block_until_ready`` so the span times
+    completed epochs, not async dispatch) plus rows/s, nnz/s, packed
+    payload bytes/s, and eta gauges; ``span("eval")`` /
+    ``span("snapshot_save")`` / ``span("restore")`` around those
+    boundaries; every evaluation-history field as an ``eval.<key>``
+    gauge; and (when ``health`` is given without its own recorder) the
+    health guard's ledger events.  ``obs=None`` (default) is a true
+    no-op: no obs calls, no allocations, bit-identical trajectories.
     """
     if eval_every < 1:
         raise ValueError(f"eval_every must be >= 1, got {eval_every}")
@@ -340,6 +392,17 @@ def solve(source, *, backend="auto", schedule="cyclic", p: int = 4,
         key = jax.random.PRNGKey(seed)
         t, history = 0, []
     eta_live = float(eta0)   # backed off per rollback under a health guard
+    if obs is not None:
+        # static per-epoch work totals, computed once: every epoch touches
+        # every nonzero exactly once, streaming the layout payload once
+        obs.record(type="meta", phase="solve", epochs=int(epochs), **cfg)
+        record_chunk = _obs_throughput(
+            obs, rows=float(m),
+            nnz=float(np.asarray(tile.row_nnz_g * tile.row_valid).sum()),
+            payload_bytes=float(sum(getattr(a, "nbytes", 0)
+                                    for a in tile.arrays)))
+        if health is not None and getattr(health, "obs", None) is None:
+            health.obs = obs   # ledger events join the same stream
     while t < epochs:
         if health is not None:
             state = health.inject(state, t)
@@ -351,6 +414,13 @@ def solve(source, *, backend="auto", schedule="cyclic", p: int = 4,
         n = min(stops) - t
         key, perms = sched.draw(key, t, n, p_, **sched_ctx)
         etas = eta_schedule(eta_live, t, n, use_adagrad)
+        # manual enter/exit (not contextlib) so the obs-off loop body
+        # allocates nothing — the metrics-off contract
+        span = obs.span("epoch_chunk", t0=t, epochs=n) \
+            if obs is not None else None
+        if span is not None:
+            span.__enter__()
+            t_chunk = time.perf_counter()
         if scan_epochs:
             state = run_epochs(tile, state, perms, etas, lam_f, m_f,
                                w_lo, w_hi, **kw)
@@ -358,6 +428,11 @@ def solve(source, *, backend="auto", schedule="cyclic", p: int = 4,
             for k in range(n):
                 state = run_epoch(tile, state, perms[k], etas[k], lam_f,
                                   m_f, w_lo, w_hi, **kw)
+        if span is not None:
+            # sync so the span times completed epochs, not async dispatch
+            jax.block_until_ready(state)
+            record_chunk(n, time.perf_counter() - t_chunk, eta_live)
+            span.__exit__(None, None, None)
         t_new = t + n
         failure = None
         if health is not None:
@@ -366,8 +441,15 @@ def solve(source, *, backend="auto", schedule="cyclic", p: int = 4,
             failure = health.check_state(state)
         if failure is None and eval_hook is not None and (
                 t_new % chunk == 0 or t_new == epochs):
-            history.append(eval_hook(t_new, gather_w(state, d),
-                                     gather_alpha(state, m)))
+            span = obs.span("eval", epoch=t_new) if obs is not None else None
+            if span is not None:
+                span.__enter__()
+            entry = eval_hook(t_new, gather_w(state, d),
+                              gather_alpha(state, m))
+            history.append(entry)
+            if span is not None:
+                _obs_eval(obs, entry)
+                span.__exit__(None, None, None)
             if health is not None:
                 failure = health.check_history(history)
         if failure is not None:
@@ -382,7 +464,11 @@ def solve(source, *, backend="auto", schedule="cyclic", p: int = 4,
                                         eta0=eta_live, seed=seed,
                                         use_adagrad=use_adagrad,
                                         alpha0=alpha0,
-                                        eval_every=eval_every)
+                                        eval_every=eval_every, obs=obs)
+            span = obs.span("restore", epoch=t_new, failure=failure) \
+                if obs is not None else None
+            if span is not None:
+                span.__enter__()
             snap = None
             if store is not None:
                 try:
@@ -407,12 +493,20 @@ def solve(source, *, backend="auto", schedule="cyclic", p: int = 4,
                         epochs_lost=t_new - resumed, retry=health.retries,
                         failure=failure, resumed_from=resumed,
                         eta0=eta_live)
+            if span is not None:
+                span.__exit__(None, None, None)
             t = resumed
             continue
         t = t_new
         if store is not None and (t % checkpoint_every == 0 or t == epochs):
+            span = obs.span("snapshot_save", epoch=t) \
+                if obs is not None else None
+            if span is not None:
+                span.__enter__()
             store.save(state=state, key=key, epochs_done=t,
                        history=list(history), config=cfg)
+            if span is not None:
+                span.__exit__(None, None, None)
     return SolveResult(gather_w(state, d), gather_alpha(state, m), history,
                        state)
 
@@ -477,9 +571,11 @@ def _serial_epochs(ii, jj, vv, perms, etas, w, alpha, gw, ga, y, row_nnz,
 def solve_serial(prob: Problem, epochs: int = 10, eta0: float = 0.1,
                  seed: int = 0, use_adagrad: bool = True,
                  alpha0: float = 0.0, eval_every: int = 1,
-                 eval_hook="auto") -> SolveResult:
+                 eval_hook="auto", obs=None) -> SolveResult:
     """Paper-exact Algorithm 1 with p=1 (sequential pointwise updates),
-    driven through the engine's evaluation-chunk loop."""
+    driven through the engine's evaluation-chunk loop.  ``obs`` is the
+    same duck-typed observability seam as ``solve`` (chunk spans +
+    throughput gauges + eval metrics; None = true no-op)."""
     if eval_every < 1:
         raise ValueError(f"eval_every must be >= 1, got {eval_every}")
     ii, jj, vv = _coords(prob)
@@ -496,12 +592,25 @@ def solve_serial(prob: Problem, epochs: int = 10, eta0: float = 0.1,
     key = jax.random.PRNGKey(seed)
     history = []
     t = 0
+    if obs is not None:
+        obs.record(type="meta", phase="solve_serial", epochs=int(epochs),
+                   m=prob.m, d=prob.d, nnz=int(nnz), eta0=float(eta0),
+                   loss_name=prob.loss_name, reg_name=prob.reg_name,
+                   seed=int(seed))
+        record_chunk = _obs_throughput(obs, rows=float(prob.m),
+                                       nnz=float(nnz),
+                                       payload_bytes=float(12 * nnz))
     while t < epochs:
         n = min(eval_every, epochs - t)
         perms = []
         for _ in range(n):
             key, sk = jax.random.split(key)
             perms.append(jax.random.permutation(sk, nnz))
+        span = obs.span("epoch_chunk", t0=t, epochs=n) \
+            if obs is not None else None
+        if span is not None:
+            span.__enter__()
+            t_chunk = time.perf_counter()
         w, alpha, gw, ga = _serial_epochs(
             ii, jj, vv, jnp.stack(perms), eta_schedule(eta0, t, n,
                                                        use_adagrad),
@@ -509,7 +618,14 @@ def solve_serial(prob: Problem, epochs: int = 10, eta0: float = 0.1,
             jnp.float32(prob.lam), jnp.float32(-box), jnp.float32(box),
             loss_name=prob.loss_name, reg_name=prob.reg_name, m=prob.m,
             use_adagrad=use_adagrad)
+        if span is not None:
+            jax.block_until_ready((w, alpha))
+            record_chunk(n, time.perf_counter() - t_chunk, eta0)
+            span.__exit__(None, None, None)
         t += n
         if hook is not None:
-            history.append(hook(t, w, alpha))
+            entry = hook(t, w, alpha)
+            history.append(entry)
+            if obs is not None:
+                _obs_eval(obs, entry)
     return SolveResult(w, alpha, history, None)

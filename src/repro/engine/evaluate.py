@@ -5,7 +5,9 @@ with the gathered (unpadded) iterates; the driver appends its dicts to the
 ``SolveResult`` history.  Two families:
 
   ``problem_eval_hook``   — dense ``Problem`` objectives (primal, duality
-                            gap, optionally the saddle value).
+                            gap, optionally the saddle value);
+                            ``pd_gap_eval_hook`` is the variant reporting
+                            the primal-dual gap P(w) - D(alpha) itself.
   ``make_csr_primal_eval``— out-of-core: P(w) through a jitted, CHUNKED
                             CSR matvec that never densifies and never
                             round-trips to host numpy.  The CSR stream
@@ -25,8 +27,8 @@ import numpy as np
 
 from repro.core.losses import get_loss
 from repro.core.regularizers import get_regularizer
-from repro.core.saddle import (duality_gap, primal_objective,
-                               saddle_objective)
+from repro.core.saddle import (dual_objective, duality_gap,
+                               primal_objective, saddle_objective)
 
 #: default nnz chunk of the out-of-core evaluation scan (float32+int32
 #: working set ~12 MB — comfortably VMEM/L2-resident on any backend)
@@ -43,6 +45,24 @@ def problem_eval_hook(prob, *, saddle: bool = True):
         if saddle:
             h["saddle"] = float(saddle_objective(prob, w, alpha))
         return h
+
+    return hook
+
+
+def pd_gap_eval_hook(prob):
+    """History hook reporting the primal-dual gap P(w) - D(alpha).
+
+    The gap is the paper's actual convergence certificate (Section 2: the
+    saddle formulation sandwiches the optimum between the two
+    objectives), so it is the quantity worth watching per epoch; with
+    ``solve(..., obs=rec)`` every entry also lands as ``eval.primal`` /
+    ``eval.dual`` / ``eval.pd_gap`` gauges in the run-event log.
+    """
+
+    def hook(t, w, alpha):
+        p = float(primal_objective(prob, w))
+        d = float(dual_objective(prob, alpha))
+        return dict(epoch=t, primal=p, dual=d, pd_gap=p - d)
 
     return hook
 

@@ -49,6 +49,20 @@ elastic.  Data flow:
                             replans (lpt schedule, then live reshard).
                             Returns (opt, recovery ledger).
 
+Observability (``repro.obs``, duck-typed ``obs=`` — this package never
+imports it):
+
+        Supervisor(..., obs=rec) / HealthGuard (rec bound by solve)
+        |   every LedgerEvent is ALSO forwarded to the recorder
+        |   (record_ledger), and snapshot_save / restore / reshard /
+        |   epoch_chunk land as timed spans next to the per-chunk
+        |   throughput gauges — one ordered run-event JSONL stream
+        v
+        obs.RunRecorder ──> benchmarks/report.py --section run-report
+
+``render_ledger_event`` / ``render_ledger`` are the one human-readable
+rendering of that ledger, shared by the examples and the run report.
+
 Nothing here re-implements solver math: snapshots capture exactly what the
 epoch driver threads between chunks, which is why resume can promise 0.0
 drift instead of "close enough".
@@ -56,7 +70,8 @@ drift instead of "close enough".
 
 from repro.runtime.health import (HealthError, HealthGuard, LedgerEvent,
                                   NaNInjector, WallClockMonitor, all_finite,
-                                  ledger_counts, objective_regression)
+                                  ledger_counts, objective_regression,
+                                  render_ledger, render_ledger_event)
 from repro.runtime.reshard import reshard, reshard_state, retile
 from repro.runtime.resume import check_resumable, resume, solve_kwargs
 from repro.runtime.snapshot import (DSOSnapshot, SnapshotIntegrityError,
@@ -73,7 +88,7 @@ __all__ = [
     "save_pytree", "save_snapshot", "verify_pytree",
     "HealthError", "HealthGuard", "LedgerEvent", "NaNInjector",
     "WallClockMonitor", "all_finite", "ledger_counts",
-    "objective_regression",
+    "objective_regression", "render_ledger", "render_ledger_event",
     "check_resumable", "resume", "solve_kwargs",
     "reshard", "reshard_state", "retile",
     "FaultEvent", "Supervisor", "make_fault_plan", "periodic_crashes",

@@ -139,6 +139,45 @@ def ledger_counts(ledger) -> dict:
     return out
 
 
+def render_ledger_event(ev) -> str:
+    """One recovery-ledger entry as a human-readable line.
+
+    Accepts a ``LedgerEvent`` or any dict-like with the same keys (the
+    recorder's JSONL ``type="ledger"`` events round-trip through here) —
+    the ONE rendering the supervisor example, the health guard, and the
+    run-report all print, so ledger lines look identical everywhere.
+    """
+    kind = ev["kind"]
+    epoch = ev.get("epoch", 0)
+    action = ev.get("action", "")
+    bits = [f"{kind}@{epoch}"]
+    if action:
+        bits.append(action)
+    lost = ev.get("epochs_lost", 0)
+    if lost:
+        bits.append(f"(lost {lost} epoch{'s' if lost != 1 else ''})")
+    retry = ev.get("retry", 0)
+    if retry:
+        bits.append(f"retry={retry}")
+    detail = (ev.detail if hasattr(ev, "detail")
+              else {k: v for k, v in ev.items()
+                    if k not in ("seq", "ts", "type", "kind", "epoch",
+                                 "action", "epochs_lost", "retry")})
+    if detail:
+        bits.append(" ".join(f"{k}={v}" for k, v in detail.items()))
+    return " ".join(bits)
+
+
+def render_ledger(ledger, *, prefix: str = "  [ledger] ") -> str:
+    """A whole recovery ledger as one printable block (plus the kind
+    counts on the last line); empty ledgers render as 'no events'."""
+    if not ledger:
+        return f"{prefix}no events"
+    lines = [prefix + render_ledger_event(ev) for ev in ledger]
+    lines.append(f"{prefix}counts: {ledger_counts(ledger)}")
+    return "\n".join(lines)
+
+
 # ---------------------------------------------------------------- chaos --
 
 
@@ -208,6 +247,9 @@ class HealthGuard:
         self.injector = injector
         self.retries = 0
         self.ledger: list = []
+        # observability seam: ``engine.solve(obs=...)`` binds its recorder
+        # here (when unset), so guard decisions land in the run-event log
+        self.obs = None
 
     # the four driver-facing hooks ---------------------------------------
     def inject(self, state, t: int):
@@ -224,6 +266,8 @@ class HealthGuard:
 
     def record(self, event: LedgerEvent):
         self.ledger.append(event)
+        if self.obs is not None:
+            self.obs.record_ledger(event)
 
     def note(self, *, kind: str, epoch: int = 0, action: str = "",
              epochs_lost: int = 0, retry: int = 0, **detail):

@@ -70,7 +70,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.dso_dist import ShardedDSO, make_dso_mesh
-from repro.engine.driver import _next_multiple
+from repro.engine.driver import _next_multiple, _obs_throughput
 from repro.runtime.health import (LedgerEvent, WallClockMonitor, all_finite,
                                   objective_regression)
 from repro.runtime.reshard import reshard_state
@@ -141,7 +141,7 @@ class Supervisor:
                  max_restores: int = 5, regression_ratio: float | None = None,
                  replan: bool = False, straggler_factor: float = 1.8,
                  straggler_patience: int = 1, lpt_relief: float = 0.5,
-                 reshard_to: int | None = None):
+                 reshard_to: int | None = None, obs=None):
         if checkpoint_every < 1:
             raise ValueError(
                 f"checkpoint_every must be >= 1, got {checkpoint_every}")
@@ -164,6 +164,10 @@ class Supervisor:
         self.replan = replan
         self.lpt_relief = lpt_relief
         self.reshard_to = reshard_to
+        # observability seam (duck-typed obs.RunRecorder, or None): every
+        # ledger event, snapshot/restore/reshard span, and per-chunk
+        # throughput gauge lands in ONE ordered run-event stream
+        self.obs = obs
         self.log: list = []
         self.history: list = []
         # recovery bookkeeping: which snapshot we last restored from and
@@ -181,7 +185,31 @@ class Supervisor:
 
     # ------------------------------------------------------------ pieces --
 
+    def _note(self, ev: LedgerEvent) -> LedgerEvent:
+        """The ONE ledger append: every supervision decision lands in
+        ``self.log`` and (when a recorder is attached) in the obs event
+        stream, interleaved with the throughput samples around it."""
+        self.log.append(ev)
+        if self.obs is not None:
+            self.obs.record_ledger(ev)
+        return ev
+
+    def _span(self, name: str, **attrs):
+        """Manually driven obs span (None when obs is off) — the caller
+        pairs ``__enter__``/``__exit__`` around the timed region."""
+        if self.obs is None:
+            return None
+        span = self.obs.span(name, **attrs)
+        span.__enter__()
+        return span
+
+    @staticmethod
+    def _end(span) -> None:
+        if span is not None:
+            span.__exit__(None, None, None)
+
     def _save(self, opt: ShardedDSO) -> None:
+        span = self._span("snapshot_save", epoch=int(opt.epochs_done))
         if self.record_metrics:
             self.history.append(opt.metrics())
         # the supervisor owns the step size, cadence, and recovery policy,
@@ -195,6 +223,7 @@ class Supervisor:
         self.store.save(state=opt.solver_state(), key=opt.key,
                         epochs_done=opt.epochs_done,
                         history=list(self.history), config=cfg)
+        self._end(span)
         if (self._last_restore is not None
                 and opt.epochs_done > self._last_restore):
             self._restore_streak = 0   # progress past the restore point
@@ -204,12 +233,15 @@ class Supervisor:
         (resume on a resized cluster)."""
         st = snap.state
         if tuple(st.w_grid.shape) != (opt.p, opt.db):
-            self.log.append(LedgerEvent(
+            self._note(LedgerEvent(
                 kind="reshard_on_resume", epoch=int(snap.epochs_done),
                 action="reshard_state",
                 detail=dict(snapshot_p=int(st.w_grid.shape[0]),
                             mesh_p=opt.p)))
+            span = self._span("reshard", epoch=int(snap.epochs_done),
+                              p_from=int(st.w_grid.shape[0]), p_to=opt.p)
             st = reshard_state(st, opt.prob.m, opt.prob.d, opt.p)
+            self._end(span)
         opt.restore(st, key=snap.key, epochs_done=snap.epochs_done)
         self.history = list(snap.history)
 
@@ -218,9 +250,11 @@ class Supervisor:
         """Restore-latest-valid with streak-capped eta backoff — the one
         recovery path behind crashes AND failed health checks."""
         at = int(opt.epochs_done)
+        span = self._span("restore", epoch=at, failure=failure or kind)
         try:
             snap = self.store.load()   # latest-VALID-wins, quarantines
         except FileNotFoundError as e:
+            self._end(span)
             raise RuntimeError(
                 f"cannot recover from {failure or kind} at epoch {at}: "
                 f"no valid snapshot left in {self.store.directory}") from e
@@ -229,6 +263,7 @@ class Supervisor:
                                 if ep == self._last_restore else 1)
         self._last_restore = ep
         if self._restore_streak > self.max_restores:
+            self._end(span)
             raise RuntimeError(
                 f"restored from snapshot {self.store.path(ep)} "
                 f"{self._restore_streak} consecutive times without "
@@ -247,11 +282,12 @@ class Supervisor:
             # ends a crash ping-pong.
             self.eta0 *= self.eta_decay
             detail["eta0"] = self.eta0
-        self.log.append(LedgerEvent(kind=kind, epoch=at, action="restore",
-                                    epochs_lost=at - ep,
-                                    retry=self._restore_streak,
-                                    detail=detail))
+        self._note(LedgerEvent(kind=kind, epoch=at, action="restore",
+                               epochs_lost=at - ep,
+                               retry=self._restore_streak,
+                               detail=detail))
         self._adopt(opt, snap)
+        self._end(span)
         return opt
 
     def _rebuild(self, opt: ShardedDSO, mesh, dso_kw: dict) -> ShardedDSO:
@@ -276,7 +312,7 @@ class Supervisor:
             opt = self._rebuild(opt, opt.mesh, dso_kw)
             self._relief = self.lpt_relief
             self._monitor.calm()      # baseline kept: escalate if no help
-            self.log.append(LedgerEvent(
+            self._note(LedgerEvent(
                 kind="straggler_replan", epoch=t, action="schedule_lpt",
                 detail=dict(relief=self._relief)))
         elif self._replan_stage == 1:
@@ -284,10 +320,12 @@ class Supervisor:
             if self.store.latest() != t:
                 self._save(opt)       # live reshard: nothing is lost
             p_old = opt.p
+            span = self._span("reshard", epoch=t, p_from=p_old, p_to=p_new)
             opt = self._rebuild(opt, make_dso_mesh(p_new), dso_kw)
+            self._end(span)
             self._slow, self._relief = None, 0.0   # slow worker shed
             self._monitor.reset()     # epoch cost structure changed
-            self.log.append(LedgerEvent(
+            self._note(LedgerEvent(
                 kind="straggler_replan", epoch=t, action="reshard",
                 detail=dict(p_from=p_old, p_to=p_new)))
         else:
@@ -304,10 +342,12 @@ class Supervisor:
             if self.store.latest() != t:
                 self._save(opt)       # live reshard: nothing is lost
             p_old = opt.p
+            span = self._span("reshard", epoch=t, p_from=p_old, p_to=ev.arg)
             opt = self._rebuild(opt, make_dso_mesh(ev.arg), dso_kw)
+            self._end(span)
             if self._monitor is not None:
                 self._monitor.reset()
-            self.log.append(LedgerEvent(
+            self._note(LedgerEvent(
                 kind="reshard", epoch=t, action="reshard",
                 detail=dict(p_from=p_old, p_to=ev.arg)))
             return opt
@@ -318,9 +358,9 @@ class Supervisor:
             idx = int(ev.arg or 0)
             opt.restore(st._replace(w_grid=st.w_grid.at[idx].set(jnp.nan)),
                         key=opt.key, epochs_done=t)
-            self.log.append(LedgerEvent(kind="nan", epoch=t,
-                                        action="injected",
-                                        detail=dict(block=idx)))
+            self._note(LedgerEvent(kind="nan", epoch=t,
+                                   action="injected",
+                                   detail=dict(block=idx)))
             return opt
         if ev.kind == "corrupt":
             # chaos: bit-flip one byte INSIDE the first leaf's npy payload
@@ -336,21 +376,21 @@ class Supervisor:
                 byte = f.read(1)
                 f.seek(-1, 1)
                 f.write(bytes([byte[0] ^ 0xFF]))
-            self.log.append(LedgerEvent(kind="corrupt", epoch=t,
-                                        action="bit_flipped",
-                                        detail=dict(snapshot=ep)))
+            self._note(LedgerEvent(kind="corrupt", epoch=t,
+                                   action="bit_flipped",
+                                   detail=dict(snapshot=ep)))
             return opt
         if ev.kind == "slow":
             self._slow = ev.arg
             self._relief = 1.0
-            self.log.append(LedgerEvent(
+            self._note(LedgerEvent(
                 kind="slow", epoch=t, action="persistent_straggler",
                 detail=dict(worker=ev.arg,
                             delay_s_per_epoch=self.straggler_delay_s)))
             return opt
         # straggler: bulk-synchronous math is unchanged; record (and
         # optionally simulate) the one-shot wall-clock skew
-        self.log.append(LedgerEvent(
+        self._note(LedgerEvent(
             kind="straggler", epoch=t, action="simulated_delay",
             detail=dict(worker=ev.arg,
                         simulated_delay_s=self.straggler_delay_s)))
@@ -371,13 +411,29 @@ class Supervisor:
         (also persisted inside each snapshot).
         """
         dso_kw = dict(dso_kw)
+        if self.obs is not None:
+            # every solver built along the way (rebuilds included, via
+            # dso_kw) mirrors its eval metrics into the same recorder
+            dso_kw.setdefault("obs", self.obs)
         opt = ShardedDSO(prob, mesh, **dso_kw)
+        record_chunk = None
+        if self.obs is not None:
+            self.obs.record(
+                type="meta", phase="run_sharded", epochs=int(epochs), p=opt.p,
+                m=int(prob.m), d=int(prob.d), eta0=float(self.eta0),
+                checkpoint_every=int(self.checkpoint_every),
+                fault_plan=[ev.describe() for ev in self.fault_plan])
+            record_chunk = _obs_throughput(
+                self.obs, rows=float(prob.m),
+                nnz=float(np.asarray(prob.row_nnz).sum()),
+                payload_bytes=float(sum(getattr(a, "nbytes", 0)
+                                        for a in opt._data_shards)))
         if self.store.latest() is not None:
             snap = self.store.load()
             self._adopt(opt, snap)
-            self.log.append(LedgerEvent(kind="resume",
-                                        epoch=int(opt.epochs_done),
-                                        action="adopt_snapshot"))
+            self._note(LedgerEvent(kind="resume",
+                                   epoch=int(opt.epochs_done),
+                                   action="adopt_snapshot"))
         else:
             self._save(opt)           # epoch-0 anchor for early crashes
         # events in the already-completed past are gone; an event AT the
@@ -393,12 +449,16 @@ class Supervisor:
             if pending:
                 stops.append(max(pending[0].epoch, t + 1))
             n = min(stops) - t
+            span = self._span("epoch_chunk", t0=t, epochs=n)
             t0 = time.perf_counter()
             opt.run_epochs(n, self.eta0)
             opt.wait()
             if self._slow is not None and self.straggler_delay_s:
                 time.sleep(self.straggler_delay_s * n * self._relief)
             dt = time.perf_counter() - t0
+            if record_chunk is not None:
+                record_chunk(n, dt, self.eta0)
+            self._end(span)
             t = opt.epochs_done
             # numerical-health lane: the finite probe gates the snapshot —
             # a poisoned iterate must never reach disk

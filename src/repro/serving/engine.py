@@ -10,6 +10,7 @@ continuous-batching slot reuse.
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Any
 
 import jax
@@ -42,7 +43,7 @@ class DecodeEngine:
     """Minimal batched decoder (greedy/temperature) for CPU-scale models."""
 
     def __init__(self, cfg: ModelConfig, params, batch: int, seq_len: int,
-                 seed: int = 0):
+                 seed: int = 0, obs=None):
         self.cfg = cfg
         self.params = params
         self.batch = batch
@@ -50,6 +51,9 @@ class DecodeEngine:
         self.state = M.init_decode_state(cfg, batch, seq_len)
         self.step_fn = jax.jit(make_serve_step(cfg, seq_len=seq_len))
         self.key = jax.random.PRNGKey(seed)
+        # observability seam: each run() is a serve_batch span with
+        # request/token counters and a tokens/s gauge (see repro.obs)
+        self.obs = obs
 
     def _step(self, tokens, pos):
         logits, self.state = self.step_fn(self.params, self.state, tokens,
@@ -64,6 +68,11 @@ class DecodeEngine:
         exercises the same serve_step)."""
         assert len(requests) <= self.batch
         reqs = list(requests)
+        span = (self.obs.span("serve_batch", requests=len(reqs))
+                if self.obs is not None else None)
+        if span is not None:
+            span.__enter__()
+            t_serve = time.perf_counter()
         maxp = max(len(r.prompt) for r in reqs)
         pad_id = 0
         cur = [list(r.prompt) for r in reqs] + \
@@ -98,4 +107,12 @@ class DecodeEngine:
             last = nxt[:, None].astype(jnp.int32)
             if all(r.done for r in reqs):
                 break
+        if span is not None:
+            jax.block_until_ready(last)
+            dt = max(time.perf_counter() - t_serve, 1e-12)
+            toks = sum(len(r.out) for r in reqs)
+            self.obs.metrics.counter("serve.requests").inc(len(reqs))
+            self.obs.metrics.counter("serve.tokens").inc(toks)
+            self.obs.metrics.gauge("serve.tokens_per_s").set(toks / dt)
+            span.__exit__(None, None, None)
         return reqs
