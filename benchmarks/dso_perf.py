@@ -50,7 +50,22 @@
      chunk's epochs.  Gate: <= 2% of epoch wall time at the ``dso_ckpt``
      shape (obs=None is a structural no-op, pinned by tests/test_obs.py).
 
-  8. ``dso_chaos`` — the self-healing gauntlet end to end: runs
+  8. ``dso_onekernel`` (``--bucketed-onekernel``) — one-kernel bucketed
+     dispatch vs the legacy ``lax.switch``-over-buckets dispatch, same
+     K-bucketed ragged layout.  The one-kernel path streams every tile
+     from the flat chunk view through a single staged step (the
+     scalar-prefetch Pallas kernel, and the same staged math in XLA for
+     ``sparse_bucketed_jnp``); the switch path evaluates one branch per
+     bucket — which the single-device grid simulator's vmap turns into
+     ALL branches via select.  Gate (at tile-K skew >= 4 with >= 3
+     buckets): the one-kernel epoch is >= 1.3x faster than the switch
+     epoch (measured on the XLA pair — the compiled apples-to-apples on
+     this container; the interpret-mode Pallas pair rides along as
+     trend), and the one-kernel Pallas trajectory equals
+     ``sparse_bucketed_jnp`` with max|diff| = 0.0 (bit-identical staged
+     math, the PR 8 contract).
+
+  9. ``dso_chaos`` — the self-healing gauntlet end to end: runs
      ``examples/elastic_dso.py --chaos`` (NaN injection, crashes off the
      checkpoint boundaries, a bit-flipped latest snapshot, a persistent
      straggler replanned away) as a subprocess and gates on its recovery
@@ -404,6 +419,117 @@ def bench_bucketed_skewed(m=4096, d=4096, density=0.05, alpha=1.3, p=8,
     return out
 
 
+def bench_bucketed_onekernel(m=4096, d=256, density=0.2, alpha=2.0, p=8,
+                             epochs=4, repeats=3, traj_m=96, traj_d=128,
+                             traj_density=0.3, traj_alpha=2.0, traj_p=4,
+                             traj_epochs=2, pallas_shape=(512, 256, 4),
+                             gate=True):
+    """One-kernel bucketed dispatch vs lax.switch (the ``dso_onekernel``
+    gate).
+
+    Epoch wall-clock on the XLA pair (``sparse_bucketed_jnp`` = the
+    one-kernel staged math vs ``sparse_bucketed_jnp_switch`` = the legacy
+    bucket switch) at a gather-dominated power-law shape: under the grid
+    simulator's vmap the switch lowers to a select evaluating EVERY
+    bucket's branch (sum of all bucket widths per tile), while the staged
+    one-kernel path reads each tile once at its padded chunk count.  The
+    interpret-mode Pallas pair (1 launch vs one per bucket) rides along as
+    trend at a smaller shape.  Timer hygiene as everywhere in this file:
+    warmup at the timed chunk length, ``perf_counter`` around a
+    ``block_until_ready`` run, min over repeats.
+
+    Trajectory leg: the one-kernel Pallas backend must equal
+    ``sparse_bucketed_jnp`` with max|diff| = 0.0 — they run the same
+    staged math, so the PR 8 contract is bitwise, not allclose.
+    """
+    import jax
+    import numpy as np
+    from repro.core.dso import run_dso_grid
+    from repro.data.synthetic import make_skewed_classification
+    from repro.sparse.format import (make_bucketed_grid_data,
+                                     problem_k_per_tile, tile_k_skew)
+
+    def timed_epoch(prob, impl, p_, epochs_, repeats_):
+        jax.block_until_ready(
+            run_dso_grid(prob, p=p_, epochs=epochs_, eta0=0.5,
+                         eval_every=epochs_, impl=impl)[:2])  # warmup+jit
+        best = float("inf")
+        for _ in range(repeats_):
+            t0 = time.perf_counter()
+            w, a, _ = run_dso_grid(prob, p=p_, epochs=epochs_, eta0=0.5,
+                                   eval_every=epochs_, impl=impl)
+            jax.block_until_ready((w, a))
+            best = min(best, (time.perf_counter() - t0) / epochs_)
+        return best
+
+    # ---- timed leg: XLA one-kernel math vs XLA bucket switch ----------
+    prob = make_skewed_classification(m=m, d=d, density=density, alpha=alpha,
+                                      loss="hinge", lam=1e-3, seed=0)
+    layout = make_bucketed_grid_data(prob, p, 1)
+    skew = float(tile_k_skew(problem_k_per_tile(prob, p)))
+    t_one = timed_epoch(prob, "sparse_bucketed_jnp", p, epochs, repeats)
+    t_switch = timed_epoch(prob, "sparse_bucketed_jnp_switch", p, epochs,
+                           repeats)
+
+    # ---- trend leg: the Pallas pair through the interpreter -----------
+    pm, pd, pp = pallas_shape
+    pprob = make_skewed_classification(m=pm, d=pd, density=0.15, alpha=1.8,
+                                       loss="hinge", lam=1e-3, seed=0)
+    tp_one = timed_epoch(pprob, "sparse_bucketed_pallas", pp, 2, 1)
+    tp_switch = timed_epoch(pprob, "sparse_bucketed_pallas_switch", pp, 2, 1)
+
+    # ---- trajectory leg: one-kernel Pallas == flat jnp, bitwise -------
+    max_diff = 0.0
+    for loss, reg in [("hinge", "l2"), ("logistic", "l1"), ("square", "l2")]:
+        tprob = make_skewed_classification(
+            m=traj_m, d=traj_d, density=traj_density, alpha=traj_alpha,
+            loss=loss, lam=1e-3, seed=3, reg=reg)
+        w1, a1, _ = run_dso_grid(tprob, p=traj_p, epochs=traj_epochs,
+                                 eta0=0.5, row_batches=2,
+                                 impl="sparse_bucketed_jnp")
+        w2, a2, _ = run_dso_grid(tprob, p=traj_p, epochs=traj_epochs,
+                                 eta0=0.5, row_batches=2,
+                                 impl="sparse_bucketed_pallas")
+        max_diff = max(max_diff,
+                       float(np.abs(np.asarray(w1) - np.asarray(w2)).max()),
+                       float(np.abs(np.asarray(a1) - np.asarray(a2)).max()))
+
+    out = {
+        "problem": {"m": m, "d": d, "density": density, "alpha": alpha,
+                    "p": p, "epochs": epochs,
+                    "bucket_ks": list(layout.bucket_ks),
+                    "n_buckets": len(layout.bucket_ks),
+                    "tile_k_skew": skew},
+        "onekernel_s_per_epoch": t_one,
+        "switch_s_per_epoch": t_switch,
+        "pallas_interpret_trend": {
+            "shape": list(pallas_shape),
+            "onekernel_s_per_epoch": tp_one,
+            "switch_s_per_epoch": tp_switch,
+            "speedup": tp_switch / tp_one,
+            "note": "Pallas interpreter on CPU — launch-count trend only",
+        },
+    }
+    if not gate:
+        out["note"] = "smoke shape — gate not evaluated"
+        return out
+    speedup = t_switch / t_one
+    out["gate"] = {
+        "metric": "one-kernel bucketed epoch vs lax.switch epoch (XLA "
+                  "pair) at tile-K skew >= 4 with >= 3 buckets, AND the "
+                  "one-kernel Pallas trajectory equal to "
+                  "sparse_bucketed_jnp with max|diff| = 0.0",
+        "threshold": 1.3,
+        "speedup_onekernel_over_switch": speedup,
+        "min_skew": 4.0,
+        "min_buckets": 3,
+        "trajectory_max_diff": max_diff,
+        "pass": bool(speedup >= 1.3 and skew >= 4.0
+                     and len(layout.bucket_ks) >= 3 and max_diff == 0.0),
+    }
+    return out
+
+
 def bench_checkpoint_overhead(m=8192, d=2048, density=0.05, p=4,
                               epochs=20, every=5, repeats=3,
                               snap_repeats=10, probe_repeats=20):
@@ -652,6 +778,11 @@ def main(argv=None):
                     help="also run the slow pointwise-vs-tile comparison")
     ap.add_argument("--sparse", action="store_true",
                     help="also run the dense-vs-sparse traffic comparison")
+    ap.add_argument("--bucketed-onekernel", action="store_true",
+                    help="run ONLY the one-kernel-vs-switch dispatch "
+                         "section (dso_onekernel gate) and merge it into "
+                         "the existing record — the default sections are "
+                         "skipped so their recorded numbers are preserved")
     ap.add_argument("--smoke", action="store_true",
                     help="no-gate dry run at toy sizes: exercises every "
                          "benchmarked code path (kernel wrappers, donated "
@@ -675,6 +806,10 @@ def main(argv=None):
             "dso_sparse_skewed": bench_bucketed_skewed(
                 m=256, d=256, density=0.05, p=4, traj_m=48, traj_d=32,
                 traj_epochs=1),
+            "dso_onekernel": bench_bucketed_onekernel(
+                m=256, d=64, density=0.2, alpha=2.0, p=4, epochs=1,
+                repeats=1, traj_m=48, traj_d=32, traj_epochs=1,
+                pallas_shape=(64, 64, 2), gate=False),
             "dso_ckpt": bench_checkpoint_overhead(
                 m=256, d=128, epochs=4, every=2, repeats=1,
                 snap_repeats=2, probe_repeats=2),
@@ -685,19 +820,22 @@ def main(argv=None):
         print(json.dumps(out, indent=1))
         return
 
-    out = {
-        "epoch_scan_vs_loop": bench_epoch_scan_vs_loop(),
-        "kernel_fused_vs_twopass": bench_kernel_fused_vs_twopass(),
-        "hbm_roofline": hbm_roofline(),
-        "dso_ckpt": bench_checkpoint_overhead(),
-        "obs_overhead": bench_obs_overhead(),
-        "dso_chaos": bench_chaos(),
-    }
-    if args.sparse:
-        out["dso_sparse"] = bench_sparse_vs_dense()
-        out["dso_sparse_skewed"] = bench_bucketed_skewed()
-    if args.full:
-        out["paper_comparison"] = bench_paper_comparison()
+    if args.bucketed_onekernel:
+        out = {"dso_onekernel": bench_bucketed_onekernel()}
+    else:
+        out = {
+            "epoch_scan_vs_loop": bench_epoch_scan_vs_loop(),
+            "kernel_fused_vs_twopass": bench_kernel_fused_vs_twopass(),
+            "hbm_roofline": hbm_roofline(),
+            "dso_ckpt": bench_checkpoint_overhead(),
+            "obs_overhead": bench_obs_overhead(),
+            "dso_chaos": bench_chaos(),
+        }
+        if args.sparse:
+            out["dso_sparse"] = bench_sparse_vs_dense()
+            out["dso_sparse_skewed"] = bench_bucketed_skewed()
+        if args.full:
+            out["paper_comparison"] = bench_paper_comparison()
 
     os.makedirs(os.path.join(HERE, "results"), exist_ok=True)
     for path in (os.path.join(HERE, "results", "dso_perf.json"),

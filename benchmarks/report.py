@@ -62,14 +62,17 @@ def roofline_table() -> str:
         if not f.endswith(".json"):
             continue
         r = json.load(open(os.path.join(ROOFLINE, f)))
+        buckets = (f" buckets {r['bucket_ks']};" if "bucket_ks" in r else "")
         lines.append(
-            f"- **{r['arch']} / {r['shape']}**: "
+            f"- **{r['backend']} / {r['shape']}** "
+            f"(m={r['m']} d={r['d']} p={r['p']} nnz={r['nnz']};{buckets} "
+            f"compile {r['compile_s']}s): "
             f"flops/dev {r['flops_per_device']:.3e}, "
             f"bytes/dev {r['bytes_per_device']:.3e}, "
             f"wire/dev {r['wire_bytes_per_device']:.3e}; "
             f"dominant **{r['dominant']}**; "
-            f"MODEL_FLOPS {r['model_flops']:.3e} "
-            f"(useful ratio {r['useful_flops_ratio']:.2f})")
+            f"useful flops {r['useful_flops']:.3e} "
+            f"(ratio {r['useful_flops_ratio']:.3f})")
     return "\n".join(lines)
 
 

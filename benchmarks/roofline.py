@@ -1,32 +1,47 @@
-import os
-os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+"""DSO tile-step roofline: compute / memory / collective terms per
+(backend x shape), derived from the jit-compiled epoch's own cost model.
 
-"""Roofline analysis (deliverable g): three terms per (arch x shape) on the
-single-pod 16x16 mesh, derived from compiled dry-run artifacts with
-UNROLLED layer stacks (XLA's cost model counts while-loop bodies once, so
-the scanned lowering undercounts by ~n_layers — verified empirically). To
-keep compile times sane we unroll one and two pattern-groups of depth and
-extrapolate linearly to the full depth (exact: per-layer cost is
-depth-independent at fixed width; see ``analyze``).
+For each XLA-compiled tile backend we ``lower(...).compile()`` the SAME
+``run_epoch`` dispatch the solver runs (one epoch of Algorithm 1 on the
+p x p grid simulator) and read ``compiled.cost_analysis()``:
 
-    compute term    = HLO_flops_per_device / 197e12        (bf16 MXU peak)
-    memory term     = HLO_bytes_per_device / 819e9         (HBM bandwidth)
-    collective term = wire_bytes_per_device / 50e9         (per-link ICI)
+    compute term    = HLO_flops_per_device / 197e12      (bf16 MXU peak)
+    memory term     = HLO_bytes_per_device / 819e9       (HBM bandwidth)
+    collective term = wire_bytes_per_device / 50e9       (per-link ICI)
 
-HLO quantities come from ``compiled.cost_analysis()`` (per-device SPMD
-module); wire bytes from parsing every collective in ``compiled.as_text()``
-with ring-cost factors and true replica-group sizes.
+The grid simulator executes all p tiles' work in one process, so
+per-device quantities are total / p.  The simulator has no real
+collectives — the ICI term is the analytic DSO ring cost instead: per
+epoch each machine sends its padded primal block (w, and gw under
+AdaGrad) around the ring once, in p stage-hops of db floats each, so
+wire_bytes_per_device = (2 if adagrad else 1) * 4 * p * db.
 
-MODEL_FLOPS uses the standard estimate: 6*N*D for training (N = params,
-MoE: active params), 2*N*D for inference, D = tokens processed. The ratio
-MODEL_FLOPS / (HLO_flops * chips) exposes remat/redundancy waste.
+``useful_flops`` is the paper-level work per epoch — 4 flops per stored
+nonzero (multiply+add in the dual gather, multiply+add in the primal
+scatter) — and ``useful_flops_ratio`` divides it by what the compiled
+module actually executes.  This is the one-kernel story in one number:
+under the grid simulator's vmap, ``lax.switch`` over K-buckets lowers to
+a select that evaluates EVERY bucket's branch, so the switch backend's
+HLO flops (and bytes) grow with the bucket count while the flat staged
+layout reads each tile once — compare ``sparse_bucketed_jnp`` against
+``sparse_bucketed_jnp_switch`` at the same shape.
+
+Pallas backends are excluded: on this host they run through the
+interpreter, so ``cost_analysis`` would price the emulation, not the
+kernel.  The one-kernel Pallas path shares its math (and so its flop
+count) with ``sparse_bucketed_jnp`` by construction.
+
+Outputs: one JSON per (backend x shape) under
+``benchmarks/results/roofline/`` plus a ``dso_roofline`` summary merged
+into ``BENCH_dso.json`` (skipped in ``--smoke``, which runs tiny shapes
+end-to-end and writes only the per-pair JSONs for the CI artifact).
 """
 
-import argparse     # noqa: E402
-import dataclasses  # noqa: E402
-import json         # noqa: E402
-import sys          # noqa: E402
-import time         # noqa: E402
+import argparse
+import json
+import os
+import sys
+import time
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 sys.path.insert(0, os.path.join(REPO, "src"))
@@ -38,148 +53,183 @@ ICI_BW = 50e9         # bytes/s / link
 RESULTS = os.path.join(os.path.dirname(os.path.abspath(__file__)),
                        "results", "roofline")
 
+BACKENDS = ("dense_jnp", "sparse_jnp", "sparse_bucketed_jnp",
+            "sparse_bucketed_jnp_switch")
 
-def model_flops(cfg, shape) -> float:
-    n = cfg.active_param_count()
-    if shape.kind == "train":
-        return 6.0 * n * shape.global_batch * shape.seq_len
-    if shape.kind == "prefill":
-        return 2.0 * n * shape.global_batch * shape.seq_len
-    return 2.0 * n * shape.global_batch  # decode: one token per sequence
-
-
-def _depth_unit(cfg) -> int:
-    """Depth granularity: one repeating pattern group."""
-    if cfg.arch_type == "hybrid":
-        return cfg.shared_attn_every          # 6 mamba + 1 shared block
-    if cfg.arch_type == "vlm":
-        return cfg.cross_attn_every           # 4 self + 1 cross
-    return 2
+# gather-dominated power-law shapes where the bucketed layout matters;
+# "tall" is the dso_onekernel gate shape (see dso_perf.py)
+SHAPES = {
+    "tall": dict(m=4096, d=256, density=0.2, alpha=2.0, p=8),
+    "square": dict(m=1024, d=1024, density=0.05, alpha=1.5, p=4),
+}
+SMOKE_SHAPES = {
+    "smoke_tall": dict(m=256, d=64, density=0.2, alpha=2.0, p=4),
+    "smoke_square": dict(m=128, d=128, density=0.1, alpha=1.5, p=2),
+}
 
 
-def _measure(arch, shape_name, n_layers, extra):
-    from repro.launch import dryrun
-    ex = dict(extra or {})
-    ex["n_layers"] = n_layers
-    jit_fn, args, mesh, cfg = dryrun.build(arch, shape_name, multi_pod=False,
-                                           unroll=True, extra=ex)
-    with mesh:  # ambient mesh for with_sharding_constraint(PartitionSpec)
-        compiled = jit_fn.lower(*args).compile()
-    cost = compiled.cost_analysis() or {}
-    coll = dryrun.parse_collectives(compiled.as_text())
-    wire = sum(d["wire_bytes"] for k, d in coll.items()
-               if not k.startswith("__"))
-    return (float(cost.get("flops", 0.0)),
-            float(cost.get("bytes accessed", 0.0)), wire, coll, mesh, cfg)
+def useful_flops(nnz: int, m: int, d: int) -> float:
+    """Paper-level work per epoch: one multiply+add per stored nonzero in
+    the dual gather and one in the primal scatter, plus O(m + d) vector
+    updates (Eq. 8 steps; counted at 8 flops per row/column)."""
+    return 4.0 * nnz + 8.0 * (m + d)
 
 
-def analyze(arch: str, shape_name: str, *, save=True,
-            extra: dict | None = None, tag_suffix: str = "") -> dict:
-    """Two-depth unrolled measurement + exact linear extrapolation in depth.
+def analyze(backend: str, shape_name: str, spec: dict | None = None, *,
+            row_batches: int = 1, save: bool = True) -> dict:
+    """Compile one ``run_epoch`` for (backend, shape) and price it."""
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.data.synthetic import make_skewed_classification
+    from repro.engine.data import (as_tile_data, init_state, prob_meta,
+                                   tile_dims)
+    from repro.engine.driver import resolve_backend_and_build, run_epoch
+    from repro.engine.schedules import cyclic_perms
 
-    Per-layer cost is depth-independent (same width), so
-    cost(L) = nonlayer + L * per_layer exactly; we measure at L = u and
-    L = 2u (u = one pattern group) and extrapolate to the full depth.
-    Compiling the full config unrolled is exact too but takes tens of
-    minutes per pair at 512-way SPMD on this host.
-    """
-    from repro.configs.registry import INPUT_SHAPES, get_config
-
+    spec = dict(spec or SHAPES[shape_name])
     t0 = time.time()
-    cfg_full = get_config(arch)
-    u = _depth_unit(cfg_full)
-    f1, b1, w1, _, _, _ = _measure(arch, shape_name, u, extra)
-    f2, b2, w2, coll, mesh, cfg = _measure(arch, shape_name, 2 * u, extra)
-    L = cfg_full.n_layers
-    scale = L / u  # total depth in pattern-group units (hybrid: +rem/u)
+    p = spec.pop("p")
+    prob = make_skewed_classification(loss="hinge", lam=1e-3, seed=0, **spec)
+    spec["p"] = p
+    be, data = resolve_backend_and_build(prob, backend, p, row_batches)
+    lam_f, m_f, _, _, _, w_lo, w_hi = prob_meta(prob)
+    tile = as_tile_data(data, bucketed_payload=be.payload)
+    p_, mb, db = tile_dims(tile)
+    state = init_state(prob, data)
+    perm = cyclic_perms(1, p_)[0]
 
-    def extrap(c1, c2):
-        per_u = c2 - c1
-        nonlayer = c1 - per_u
-        return nonlayer + scale * per_u
+    compiled = run_epoch.lower(
+        tile, state, perm, jnp.float32(0.1), lam_f, m_f, w_lo, w_hi,
+        backend=be.name, loss_name=prob.loss_name, reg_name=prob.reg_name,
+        use_adagrad=True, row_batches=row_batches, p=p_, db=db).compile()
+    cost = compiled.cost_analysis() or {}
+    if isinstance(cost, (list, tuple)):   # older jaxlibs wrap in a list
+        cost = cost[0] if cost else {}
 
-    flops_dev = extrap(f1, f2)
-    bytes_dev = extrap(b1, b2)
-    wire_dev = extrap(w1, w2)
-    shape = INPUT_SHAPES[shape_name]
-    n_dev = int(mesh.devices.size)
-    cfg = cfg_full
+    flops = float(cost.get("flops", 0.0))
+    hbm_bytes = float(cost.get("bytes accessed", 0.0))
+    flops_dev = flops / p_
+    bytes_dev = hbm_bytes / p_
+    wire_dev = 2.0 * 4.0 * p_ * db   # w + gw ring, p hops of db floats
 
-    t_compute = flops_dev / PEAK_FLOPS
-    t_memory = bytes_dev / HBM_BW
-    t_coll = wire_dev / ICI_BW
-    terms = {"compute_s": t_compute, "memory_s": t_memory,
-             "collective_s": t_coll}
-    dominant = max(terms, key=terms.get)
-    mf = model_flops(cfg, shape)
-    useful = mf / max(flops_dev * n_dev, 1.0)
+    nnz = int(np.asarray(tile.tile_row_nnz_g).sum())
+    terms = {"compute_s": flops_dev / PEAK_FLOPS,
+             "memory_s": bytes_dev / HBM_BW,
+             "collective_s": wire_dev / ICI_BW}
+    uf = useful_flops(nnz, prob.m, prob.d)
 
     rec = dict(
-        arch=arch, shape=shape_name, mesh="16x16", n_devices=n_dev,
+        backend=be.name, shape=shape_name, **spec,
+        row_batches=row_batches, mb=mb, db=db, nnz=nnz,
         flops_per_device=flops_dev, bytes_per_device=bytes_dev,
         wire_bytes_per_device=wire_dev,
-        compute_s=t_compute, memory_s=t_memory, collective_s=t_coll,
-        dominant=dominant.replace("_s", ""),
-        model_flops=mf, useful_flops_ratio=useful,
-        collectives=coll, compile_s=round(time.time() - t0, 1),
-        params=cfg.param_count(), active_params=cfg.active_param_count(),
+        **terms,
+        dominant=max(terms, key=terms.get).replace("_s", ""),
+        intensity_flops_per_byte=flops_dev / max(bytes_dev, 1.0),
+        useful_flops=uf, useful_flops_ratio=uf / max(flops, 1.0),
+        compile_s=round(time.time() - t0, 2),
     )
+    if hasattr(data, "bucket_ks") and data.bucket_ks is not None:
+        rec["bucket_ks"] = [int(k) for k in data.bucket_ks]
     if save:
         os.makedirs(RESULTS, exist_ok=True)
         with open(os.path.join(
-                RESULTS, f"{arch}__{shape_name}{tag_suffix}.json"), "w") as f:
+                RESULTS, f"{be.name}__{shape_name}.json"), "w") as f:
             json.dump(rec, f, indent=1)
     return rec
 
 
-def report(directory=RESULTS, include_tags: bool = False) -> str:
-    """Markdown table over saved roofline records. Baseline records are
-    ``<arch>__<shape>.json``; hillclimb variants carry an extra ``__<tag>``
-    and are excluded unless ``include_tags``."""
+def summarize(records: list[dict]) -> dict:
+    """``dso_roofline`` BENCH entry: per shape, the bucketed pair's cost
+    ratios (switch over one-kernel-math) and each backend's dominant
+    roofline term."""
+    out = {"peak_flops": PEAK_FLOPS, "hbm_bw": HBM_BW, "ici_bw": ICI_BW,
+           "shapes": {}}
+    by = {(r["backend"], r["shape"]): r for r in records}
+    for shape in sorted({r["shape"] for r in records}):
+        one = by.get(("sparse_bucketed_jnp", shape))
+        sw = by.get(("sparse_bucketed_jnp_switch", shape))
+        entry = {"dominant": {r["backend"]: r["dominant"]
+                              for r in records if r["shape"] == shape},
+                 "useful_flops_ratio": {
+                     r["backend"]: r["useful_flops_ratio"]
+                     for r in records if r["shape"] == shape}}
+        if one and sw:
+            entry["switch_over_onekernel"] = {
+                "flops": sw["flops_per_device"] /
+                max(one["flops_per_device"], 1.0),
+                "bytes": sw["bytes_per_device"] /
+                max(one["bytes_per_device"], 1.0),
+            }
+        out["shapes"][shape] = entry
+    return out
+
+
+def report(directory=RESULTS) -> str:
+    """Markdown table over the saved per-(backend x shape) records."""
     lines = [
-        "| arch | shape | variant | compute s | memory s | collective s | "
-        "dominant | useful-FLOP ratio |",
+        "| backend | shape | dominant | compute s | memory s | "
+        "collective s | flops/byte | useful-FLOP ratio |",
         "|---|---|---|---|---|---|---|---|",
     ]
     for f in sorted(os.listdir(directory)):
         if not f.endswith(".json"):
             continue
-        parts = f[:-5].split("__")
-        tag = parts[2] if len(parts) > 2 else "baseline"
-        if tag != "baseline" and not include_tags:
-            continue
         r = json.load(open(os.path.join(directory, f)))
         lines.append(
-            f"| {r['arch']} | {r['shape']} | {tag} | {r['compute_s']:.3e} | "
-            f"{r['memory_s']:.3e} | {r['collective_s']:.3e} | "
-            f"{r['dominant']} | {r['useful_flops_ratio']:.2f} |")
+            f"| {r['backend']} | {r['shape']} | {r['dominant']} | "
+            f"{r['compute_s']:.3e} | {r['memory_s']:.3e} | "
+            f"{r['collective_s']:.3e} | "
+            f"{r['intensity_flops_per_byte']:.2f} | "
+            f"{r['useful_flops_ratio']:.3f} |")
     return "\n".join(lines)
 
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch")
-    ap.add_argument("--shape")
-    ap.add_argument("--all", action="store_true")
-    ap.add_argument("--report", action="store_true")
+    ap.add_argument("--backend", help="one backend (default: all four)")
+    ap.add_argument("--shape", help="one shape (default: all)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny shapes; write per-pair JSONs for the CI "
+                         "artifact but leave BENCH_dso.json untouched")
+    ap.add_argument("--report", action="store_true",
+                    help="print the markdown table over saved records")
     args = ap.parse_args(argv)
     if args.report:
         print(report())
         return
-    from repro.configs.registry import ARCH_IDS, INPUT_SHAPES
-    pairs = ([(args.arch, args.shape)] if not args.all else
-             [(a, s) for a in ARCH_IDS for s in INPUT_SHAPES])
-    for a, s in pairs:
-        try:
-            r = analyze(a, s)
-            print(f"OK {a} {s} dominant={r['dominant']} "
-                  f"compute={r['compute_s']:.3e}s memory={r['memory_s']:.3e}s "
-                  f"coll={r['collective_s']:.3e}s useful={r['useful_flops_ratio']:.2f} "
+
+    shapes = SMOKE_SHAPES if args.smoke else SHAPES
+    backends = [args.backend] if args.backend else list(BACKENDS)
+    names = [args.shape] if args.shape else list(shapes)
+    records = []
+    for b in backends:
+        for s in names:
+            r = analyze(b, s, shapes.get(s))
+            records.append(r)
+            print(f"OK {b} {s} dominant={r['dominant']} "
+                  f"compute={r['compute_s']:.3e}s "
+                  f"memory={r['memory_s']:.3e}s "
+                  f"coll={r['collective_s']:.3e}s "
+                  f"useful={r['useful_flops_ratio']:.3f} "
                   f"(compile {r['compile_s']}s)")
-        except Exception as e:  # noqa: BLE001
-            import traceback
-            traceback.print_exc()
-            print(f"FAIL {a} {s}: {e}")
+
+    summary = summarize(records)
+    print(json.dumps(summary, indent=1))
+    if args.smoke:
+        return
+    for path in (os.path.join(REPO, "BENCH_dso.json"),
+                 os.path.join(os.path.dirname(RESULTS), "dso_perf.json")):
+        merged = {}
+        if os.path.exists(path):
+            try:
+                with open(path) as f:
+                    merged = json.load(f)
+            except (json.JSONDecodeError, OSError):
+                merged = {}
+        merged["dso_roofline"] = summary
+        with open(path, "w") as f:
+            json.dump(merged, f, indent=1)
 
 
 if __name__ == "__main__":

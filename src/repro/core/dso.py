@@ -142,22 +142,22 @@ def _impl_kw(data, impl, kw):
     backend = resolve_backend_for_layout(impl, layout)
     out = dict(kw)
     out["backend"] = backend.name
-    return out
+    return backend, out
 
 
 def _grid_epoch(data, state, eta_t, lam, m, w_lo, w_hi, *, impl="jnp",
                 **kw):
     """One epoch, one dispatch (legacy path; see ``_grid_epochs``)."""
-    kw = _impl_kw(data, impl, kw)
+    backend, kw = _impl_kw(data, impl, kw)
     perm = cyclic_perms(1, kw["p"])[0]
-    return run_epoch(as_tile_data(data), state, perm, eta_t, lam, m,
-                     w_lo, w_hi, **kw)
+    return run_epoch(as_tile_data(data, bucketed_payload=backend.payload),
+                     state, perm, eta_t, lam, m, w_lo, w_hi, **kw)
 
 
 def _grid_epochs(data, state, etas, lam, m, w_lo, w_hi, *, impl="jnp",
                  **kw):
     """``len(etas)`` cyclic epochs in ONE donated-scan dispatch."""
-    kw = _impl_kw(data, impl, kw)
+    backend, kw = _impl_kw(data, impl, kw)
     perms = cyclic_perms(etas.shape[0], kw["p"])
-    return run_epochs(as_tile_data(data), state, perms, etas, lam, m,
-                      w_lo, w_hi, **kw)
+    return run_epochs(as_tile_data(data, bucketed_payload=backend.payload),
+                      state, perms, etas, lam, m, w_lo, w_hi, **kw)

@@ -184,7 +184,7 @@ class ShardedDSO:
         self.schedule = get_schedule(schedule)
         self.key = jax.random.PRNGKey(seed)
         check_tile_stats(data, row_batches)
-        tile = as_tile_data(data)
+        tile = as_tile_data(data, bucketed_payload=self.backend.payload)
         _, self.mb, self.db = tile_dims(tile)
         state = init_state(prob, data, alpha0)
         self.use_adagrad = use_adagrad

@@ -15,13 +15,16 @@ code-path *product* into a *sum*:
         v                           |        CSRMatrix -- sparse_grid_from_csr
    GridData | SparseGridData <------+------------+    \- bucketed_grid_from_csr
             | BucketedGridData (K-bucketed ragged tiles: <= MAX_K_BUCKETS
-        |     pow2 widths, rectangular per bucket; impl="auto" picks it
-        |     when tile_k_skew >= BUCKET_SKEW_THRESHOLD in the sparse regime)
-        |  as_tile_data
+        |     pow2 widths packed into ONE flat buffer of K_CHUNK-wide
+        |     column chunks + an int32 chunk_lut/chunk_cnt table mapping
+        |     tile (q, b) -> its chunk list; impl="auto" picks it when
+        |     tile_k_skew >= BUCKET_SKEW_THRESHOLD in the sparse regime)
+        |  as_tile_data(bucketed_payload="flat" | "buckets")
         v
    TileData  (the common pytree: arrays=(Xg,) | (cols_g, vals_g) |
-        |     per-bucket (cols, vals)... + (bucket_id, bucket_pos),
-        |     labels, nnz statistics, padding masks)
+        |     flat (cols_fl, vals_fl, chunk_lut, chunk_cnt) — or, for the
+        |     legacy _switch backends, per-bucket (cols, vals)... +
+        |     (bucket_id, bucket_pos) — labels, nnz stats, padding masks)
         |
    +----+------------------- ENGINE ---------------------------------+
    |                                                                 |
@@ -33,9 +36,11 @@ code-path *product* into a *sum*:
    |    sparse_pallas            /                      Latin square |
    |    sparse_bucketed_jnp     /                       over per-tile|
    |    sparse_bucketed_pallas /                        nnz costs;   |
-   |      (lax.switch on the   |                        balanced=True|
-   |       tile's K-bucket)    |                        -> draw gets |
-   |         |                 |                        tile_nnz)    |
+   |      (ONE kernel: scalar- |                        balanced=True|
+   |       prefetched index    |                        -> draw gets |
+   |       map walks chunk_lut;|                        tile_nnz)    |
+   |       *_switch = legacy   |                                     |
+   |       per-bucket launch)  |                                     |
    |         |                 |                fixed(perms)         |
    |         |                 |                  |  draw(key,t0,n,p |
    |         |                 |                  |       [,tile_nnz])

@@ -24,18 +24,34 @@ Registered backends:
                           (falls back to the fused-kernel scan off-shape)
   sparse_jnp            — gather/scatter tile steps on block-ELL tiles
   sparse_pallas         — gather-based Pallas sparse kernel
-  sparse_bucketed_jnp   — sparse_jnp tile steps on the K-bucketed ragged
-                          layout: a ``lax.switch`` over the tile's bucket
-                          runs the step at that bucket's packed width
-  sparse_bucketed_pallas — same dispatch over the sparse Pallas kernel
+  sparse_bucketed_jnp   — one-kernel math on the K-bucketed ragged layout's
+                          *flat chunk view* in plain jnp: chunk staging via
+                          the tile's lut + the staged Eq.-(8) step
+                          (kernels/dso_sparse.py ``_staged_step_math``)
+  sparse_bucketed_pallas — the SAME staging + math as ONE scalar-prefetch
+                          Pallas kernel: grid = (row_batches, n_kc), the
+                          prefetched chunk lut drives the index map, no
+                          ``lax.switch`` anywhere — bit-identical to
+                          sparse_bucketed_jnp by construction
+  sparse_bucketed_jnp_switch / sparse_bucketed_pallas_switch
+                        — the legacy bucket dispatch: ``lax.switch`` over
+                          the tile's bucket into the uniform-K step at that
+                          bucket's packed width (kept as the comparison
+                          baseline; equal to the one-kernel pair to f32
+                          reduction order, not bitwise)
 
-Bucketed dispatch note: inside ``shard_map`` (one device per processor)
-the active tile's bucket index is a scalar, so the switch executes ONE
-branch and only that bucket's ``mb * K_bucket`` bytes stream from HBM —
-the layout's whole point.  Under the single-device grid simulator's vmap
-the switch lowers to a select that evaluates every branch; the simulator
-trades that compute for fidelity, the bytes claim belongs to the sharded
-driver (and to the analytic gate in ``benchmarks/dso_perf.py``).
+Bucketed payload note: the one-kernel pair streams the flat chunk view
+``(cols_fl, vals_fl, chunk_lut, chunk_cnt)``; the ``_switch`` pair needs
+the per-bucket rectangles + (p, p) index maps.  ``TileBackend.payload``
+("flat" | "buckets") records which variant a backend consumes, and every
+driver passes it to ``as_tile_data(..., bucketed_payload=...)``.  Inside
+``shard_map`` (one device per processor) the active tile's scalar lut
+prefetch (or, for _switch, the scalar bucket index) means only that tile's
+``mb * K_bucket`` bytes stream from HBM — the layout's whole point.  Under
+the single-device grid simulator's vmap the switch lowers to a select that
+evaluates every branch, while the one-kernel path stays one dynamic-sliced
+stream — which is why it also wins wall-clock in the simulator
+(``benchmarks/dso_perf.py --bucketed-onekernel``).
 
 Legacy ``impl`` selectors ("jnp", "pallas", "sparse", "sparse_pallas",
 "auto") resolve through ``resolve_backend``; unknown names raise
@@ -56,9 +72,12 @@ from repro.sparse.format import (BUCKET_SKEW_THRESHOLD,
 
 class TileBackend(NamedTuple):
     name: str
-    layout: str             # "dense" | "sparse"
+    layout: str             # "dense" | "sparse" | "bucketed"
     select_block: Callable  # (arrays_q, blk_id, blk_cols, db) -> block tuple
     block_step: Callable    # see module docstring
+    payload: str = "flat"   # bucketed payload variant this backend consumes
+                            # ("flat" chunk view | "buckets" rectangles);
+                            # ignored by dense/sparse layouts
 
 
 # --------------------------------------------------------------- selects --
@@ -78,9 +97,10 @@ def _sparse_select(arrays_q, blk_id, blk_cols, db):
 
 
 def _bucketed_select(arrays_q, blk_id, blk_cols, db):
-    # the bucketed tile slice is width-dependent, so the whole per-bucket
-    # payload rides through to the block step's lax.switch (which knows
-    # each branch's static K); only the active block id is added here
+    # the bucketed tile slice is width-dependent, so the whole payload
+    # (flat chunk view or per-bucket rectangles) rides through to the block
+    # step, which picks the tile's chunks via its lut row (flat) or its
+    # lax.switch branch (buckets); only the active block id is added here
     return tuple(arrays_q) + (blk_id,)
 
 
@@ -223,6 +243,50 @@ def _sparse_pallas_block_step(meta, block, y_q, w_blk, alpha_q, gw_blk, ga_q,
     return w_blk, alpha_q, gw_blk, ga_q
 
 
+def _bucketed_flat_args(meta, block):
+    """Shared unpacking of the flat-chunk-view payload: the processor's
+    whole flat buffer plus the active tile's lut row and live-chunk count
+    (dead lut slots are pre-clamped by the tiler, so downstream indexing
+    needs no branching)."""
+    lam, m, loss_name, reg_name, use_adagrad, w_lo, w_hi = meta
+    if not use_adagrad:
+        raise NotImplementedError(
+            "the one-kernel bucketed backends implement the AdaGrad step; "
+            "use sparse_jnp (uniform K) for use_adagrad=False")
+    cols_fl, vals_fl, lut_q, cnt_q, blk_id = block
+    n_kc = lut_q.shape[1]
+    lut_b = jax.lax.dynamic_slice(lut_q, (blk_id, 0), (1, n_kc))[0]
+    cnt_b = jax.lax.dynamic_index_in_dim(cnt_q, blk_id, keepdims=False)
+    return cols_fl, vals_fl, lut_b, cnt_b, loss_name, reg_name
+
+
+def _make_bucketed_flat_block_step(use_pallas: bool):
+    """One-kernel bucketed block steps on the flat chunk view.  Both
+    variants run the SAME staging + ``_staged_step_math``
+    (kernels/dso_sparse.py) — one as a single scalar-prefetch Pallas
+    launch, one as plain jnp — so their trajectories are bit-identical.
+    """
+
+    def step(meta, block, y_q, w_blk, alpha_q, gw_blk, ga_q, rn_q,
+             col_nnz_blk, trn_blk, tcn_blk, eta_t, row_batches):
+        lam, m, _, _, _, w_lo, w_hi = meta
+        cols_fl, vals_fl, lut_b, cnt_b, loss_name, reg_name = \
+            _bucketed_flat_args(meta, block)
+        scalars = jnp.stack([eta_t, lam, m, w_lo, w_hi]).astype(jnp.float32)
+        if use_pallas:
+            from repro.kernels import ops
+            fn = ops.dso_bucketed_block_step
+        else:
+            from repro.kernels import dso_sparse
+            fn = dso_sparse.dso_bucketed_block_step_jnp
+        return fn(
+            cols_fl, vals_fl, lut_b, cnt_b, y_q, w_blk, alpha_q, gw_blk,
+            ga_q, trn_blk, tcn_blk, rn_q, col_nnz_blk, scalars,
+            row_batches=row_batches, loss_name=loss_name, reg_name=reg_name)
+
+    return step
+
+
 # ---------------------------------------------------------------- registry --
 
 _BACKENDS: dict[str, TileBackend] = {}
@@ -341,7 +405,13 @@ register_backend(TileBackend("sparse_pallas", "sparse", _sparse_select,
                              _sparse_pallas_block_step))
 register_backend(TileBackend(
     "sparse_bucketed_jnp", "bucketed", _bucketed_select,
-    _make_bucketed_block_step(_sparse_jnp_block_step)))
+    _make_bucketed_flat_block_step(use_pallas=False)))
 register_backend(TileBackend(
     "sparse_bucketed_pallas", "bucketed", _bucketed_select,
-    _make_bucketed_block_step(_sparse_pallas_block_step)))
+    _make_bucketed_flat_block_step(use_pallas=True)))
+register_backend(TileBackend(
+    "sparse_bucketed_jnp_switch", "bucketed", _bucketed_select,
+    _make_bucketed_block_step(_sparse_jnp_block_step), payload="buckets"))
+register_backend(TileBackend(
+    "sparse_bucketed_pallas_switch", "bucketed", _bucketed_select,
+    _make_bucketed_block_step(_sparse_pallas_block_step), payload="buckets"))

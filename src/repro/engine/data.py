@@ -6,8 +6,9 @@ The p x p DSO grid exists in three layouts — dense row shards
 (``sparse.format.BucketedGridData``).  The engine does not care which:
 ``as_tile_data`` converts any of them into a ``TileData`` whose ``arrays``
 field carries the layout payload (``(Xg,)`` dense, ``(cols_g, vals_g)``
-sparse, per-bucket ``(cols, vals)`` pairs + the (p, p) bucket index maps
-for bucketed) next to the layout-independent labels, scaling statistics,
+sparse, and for bucketed either the flat chunk view + offset tables or the
+legacy per-bucket ``(cols, vals)`` pairs + (p, p) index maps — see
+``TileData``) next to the layout-independent labels, scaling statistics,
 and padding masks.  Every backend's block step and the single epoch driver
 consume only ``TileData``.
 """
@@ -54,12 +55,16 @@ class TileData(NamedTuple):
     """Layout-agnostic view of the grid: the one pytree every backend sees.
 
     ``arrays`` is the layout payload — ``(Xg,)`` for the dense backends,
-    ``(cols_g, vals_g)`` for the block-ELL sparse backends, and
-    ``(cols_0, vals_0, ..., cols_{B-1}, vals_{B-1}, bucket_id,
-    bucket_pos)`` for the K-bucketed ragged backends; everything else is
-    identical between layouts (and identical in VALUE too: all tilers
-    reproduce ``make_grid_data``'s statistics exactly, which is what makes
-    the trajectories match across backends).
+    ``(cols_g, vals_g)`` for the block-ELL sparse backends, and for the
+    K-bucketed ragged backends one of two variants (``as_tile_data``'s
+    ``bucketed_payload``): the default ``"flat"`` chunk view
+    ``(cols_fl, vals_fl, chunk_lut, chunk_cnt)`` the one-kernel backends
+    stream, or the legacy ``"buckets"`` form ``(cols_0, vals_0, ...,
+    cols_{B-1}, vals_{B-1}, bucket_id, bucket_pos)`` the ``lax.switch``
+    backends dispatch over; everything else is identical between layouts
+    (and identical in VALUE too: all tilers reproduce ``make_grid_data``'s
+    statistics exactly, which is what makes the trajectories match across
+    backends).
     """
 
     arrays: tuple          # (Xg,) | (cols_g, vals_g) | bucketed payload
@@ -76,7 +81,7 @@ class TileData(NamedTuple):
             return "dense"
         if len(self.arrays) == 2:
             return "sparse"
-        return "bucketed"      # 2 * n_buckets cols/vals + 2 index maps
+        return "bucketed"      # flat chunk view or per-bucket cols/vals
 
 
 class DSOState(NamedTuple):
@@ -87,14 +92,31 @@ class DSOState(NamedTuple):
     epoch: Array     # scalar int32
 
 
-def as_tile_data(data) -> TileData:
+def as_tile_data(data, *, bucketed_payload: str = "flat") -> TileData:
     """``GridData`` | ``SparseGridData`` | ``BucketedGridData`` |
-    ``TileData`` -> ``TileData``."""
+    ``TileData`` -> ``TileData``.
+
+    ``bucketed_payload`` picks the bucketed layout's payload variant (each
+    backend requests its own via ``TileBackend.payload``): ``"flat"`` — the
+    device-resident flat chunk view the one-kernel backends stream;
+    ``"buckets"`` — the per-bucket rectangles (uploaded from their host
+    numpy form here) + index maps the legacy ``lax.switch`` backends
+    dispatch over.
+    """
     if isinstance(data, TileData):
         return data
     if isinstance(data, BucketedGridData):
-        arrays = tuple(a for cv in zip(data.cols_b, data.vals_b)
-                       for a in cv) + (data.bucket_id, data.bucket_pos)
+        if bucketed_payload == "flat":
+            arrays = (data.cols_fl, data.vals_fl, data.chunk_lut,
+                      data.chunk_cnt)
+        elif bucketed_payload == "buckets":
+            arrays = tuple(jnp.asarray(a)
+                           for cv in zip(data.cols_b, data.vals_b)
+                           for a in cv) + (data.bucket_id, data.bucket_pos)
+        else:
+            raise ValueError(
+                f"bucketed_payload must be 'flat' or 'buckets', "
+                f"got {bucketed_payload!r}")
     elif isinstance(data, SparseGridData):
         arrays = (data.cols_g, data.vals_g)
     else:

@@ -351,7 +351,7 @@ def solve(source, *, backend="auto", schedule="cyclic", p: int = 4,
         if eval_hook == "auto":
             eval_hook = None
     check_tile_stats(data, row_batches)
-    tile = as_tile_data(data)
+    tile = as_tile_data(data, bucketed_payload=be.payload)
     p_, mb_, db = tile_dims(tile)
     kw = dict(backend=be.name, loss_name=loss_name, reg_name=reg_name,
               use_adagrad=use_adagrad, row_batches=row_batches, p=p_, db=db)

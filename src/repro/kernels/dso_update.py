@@ -68,18 +68,32 @@ above pads every tile to the GRID's max K, so on power-law feature
 distributions (a few tiles 10-50x denser than the median) both the
 streamed and the resident bytes are paid at the worst tile's width
 everywhere.  The bucketed layout groups tiles into <= 4 power-of-two
-widths and the block step ``lax.switch``es on the active tile's bucket:
+widths; the grid's payload is ONE flat ragged buffer of K_CHUNK-wide
+column chunks plus an int32 chunk lookup table, and the block step is a
+SINGLE Pallas launch whose scalar-prefetched index map walks the table
+(``dso_sparse.dso_bucketed_block_step_pallas``; data flow diagram there):
 
-    bucket_id/bucket_pos (p, p) ── which (bucket, slot) holds tile (q, b)
-    bucket k: cols/vals (p, slots_k, mb, K_k) ── rectangular per bucket
-         └─> switch(bucket) -> the SAME sparse kernel above at width K_k
+    cols_fl/vals_fl (p, n_chunks, mb, Kc) ── flat chunk pool, all buckets
+    chunk_lut (p, p, n_kc) i32 / chunk_cnt (p, p) ── tile -> chunk indices
+         └─> grid (row_batches, n_kc), PrefetchScalarGridSpec: block kc of
+             row batch mi is chunk lut[kc] — the index map IS the dispatch,
+             no lax.switch, one launch per block step; kc past cnt repeats
+             the last live chunk and is masked in VMEM staging
 
 so a tile step streams 8*mb*K_bucket bytes (its own width) instead of
 8*mb*max-K, and the resident grid shrinks from p^2*mb*max-K to
 sum_k slots_k*mb*K_k — epoch cost tracks real nnz, not max-K padding
 (dso_sparse_skewed gate in BENCH_dso.json: >= 3x on both).  The
 trajectory is identical to ``sparse_jnp`` (same statistics, same Eq.-8
-math; padding slots contribute exact zeros at every width).
+math; padding slots contribute exact zeros at every width), and
+bit-identical to ``sparse_bucketed_jnp``, whose jnp twin runs the same
+staged math.  The legacy per-bucket ``lax.switch`` dispatch survives as
+``sparse_bucketed_{jnp,pallas}_switch`` (payload="buckets": rectangular
+per-bucket cols/vals (p, slots_k, mb, K_k) + bucket_id/bucket_pos maps)
+— one launch per bucket, and under the grid simulator's vmap the switch
+lowers to a select that executes EVERY bucket's branch (dso_onekernel
+gate in BENCH_dso.json: one-kernel >= 1.3x faster per epoch at tile-K
+skew >= 4).
 
 The legacy two-pass kernels are kept as ``dso_tile_step_pallas_twopass``
 for regression tests and the fused-vs-two-pass benchmark

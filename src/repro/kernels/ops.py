@@ -7,6 +7,7 @@ set ``interpret=False`` (the default flips on backend detection).
 from __future__ import annotations
 
 import functools
+import os
 
 import jax
 import jax.numpy as jnp
@@ -21,8 +22,20 @@ def _on_tpu() -> bool:
 def _resolve_interpret(interpret: bool | None) -> bool:
     """``interpret=None`` -> backend auto-detection: compiled (Mosaic) on a
     real TPU, the Pallas interpreter everywhere else.  Every kernel wrapper
-    resolves through here so the default is pinned in one place."""
-    return (not _on_tpu()) if interpret is None else interpret
+    resolves through here so the default is pinned in one place.
+
+    ``REPRO_FORCE_INTERPRET=1`` (or ``0``) in the environment overrides the
+    auto-detection — but never an explicit ``interpret=`` argument — so a
+    whole run can be forced onto the interpreter (TPU triage) or onto the
+    compiled path (capturing Mosaic errors in CI) without threading a flag
+    through every call site.
+    """
+    if interpret is not None:
+        return interpret
+    env = os.environ.get("REPRO_FORCE_INTERPRET")
+    if env is not None and env.strip() != "":
+        return env.strip() not in ("0", "false", "False")
+    return not _on_tpu()
 
 
 def _pad_axis(x, axis: int, mult: int):
@@ -174,18 +187,29 @@ def dso_block_step(X, y, w, alpha, gw, ga, tile_row_nnz, tile_col_nnz,
     return w2[:D], a2, gw2[:D], ga2
 
 
-@functools.lru_cache(maxsize=1)
 def mosaic_sparse_gather_error() -> str | None:
-    """Probe the default backend for the sparse kernel's gating ops.
+    """Probe the *current* default backend for the sparse kernels' gating
+    ops (2-D gather + scatter-add).  Returns ``None`` when the backend
+    lowers them, else the lowering error string — the ROADMAP
+    "Mosaic-native scatter/gather" seam: fall back LOUDLY instead of
+    surfacing an opaque Mosaic error from inside the real kernel.
+
+    The probe result is cached *per platform name*, not per process: test
+    harnesses (and multi-backend processes) can switch the default backend
+    under a running JAX, and a probe verdict for ``cpu`` must not be served
+    for ``tpu`` or vice versa.
+    """
+    return _mosaic_sparse_gather_error(jax.default_backend())
+
+
+@functools.lru_cache(maxsize=None)
+def _mosaic_sparse_gather_error(platform: str) -> str | None:
+    """Run the probe on ``platform`` (assumed to be the current default
+    backend — the cache key merely scopes the verdict).
 
     Compiles (and runs) a minimal Pallas kernel exercising exactly what
     ``kernels/dso_sparse.py`` needs beyond the dense kernels: a 2-D gather
-    from a VMEM vector and a scatter-add back into it.  Returns ``None``
-    when the backend lowers it (TPU with Mosaic scatter/gather support),
-    else the lowering error string — the ROADMAP "Mosaic-native
-    scatter/gather" step-2 seam: fall back LOUDLY instead of surfacing an
-    opaque Mosaic error from inside the real kernel.  Cached per process
-    (the platform does not change under a running JAX).
+    from a VMEM vector and a scatter-add back into it.
     """
     from jax.experimental import pallas as pl
 
@@ -248,6 +272,46 @@ def dso_sparse_block_step(cols, vals, y, w, alpha, gw, ga, tile_row_nnz,
         tile_row_nnz[:Mk], tile_col_nnz, row_nnz[:Mk], col_nnz, scalars,
         row_batches=row_batches, loss_name=loss_name, reg_name=reg_name,
         interpret=interpret)
+    if Mk < M:  # truncated trailing rows pass through unchanged
+        a2 = jnp.concatenate([a2, alpha[Mk:]])
+        ga2 = jnp.concatenate([ga2, ga[Mk:]])
+    return w2, a2, gw2, ga2
+
+
+def dso_bucketed_block_step(cols_fl, vals_fl, lut, cnt, y, w, alpha, gw, ga,
+                            tile_row_nnz, tile_col_nnz, row_nnz, col_nnz,
+                            scalars, *, row_batches: int, loss_name: str,
+                            reg_name: str, interpret: bool | None = None):
+    """One-kernel K-bucketed counterpart of ``dso_sparse_block_step``: all
+    ``row_batches`` sequential tile steps of an active block streamed from
+    the flat chunk view (kernels/dso_sparse.py scalar-prefetch kernel).
+
+    ``cols_fl``/``vals_fl`` (n_chunks, M, K_CHUNK) are the processor's
+    whole flat buffer; ``lut`` (n_kc,)/``cnt`` () select this tile's
+    chunks.  Same truncation, interpret resolution, and Mosaic probe
+    gating as the uniform-K sparse wrapper.
+    """
+    interpret = _resolve_interpret(interpret)
+    if not interpret:
+        err = mosaic_sparse_gather_error()
+        if err is not None:
+            raise ValueError(
+                f"bucketed one-kernel Pallas backend requested compiled "
+                f"(interpret=False) but the {jax.default_backend()!r} "
+                f"backend cannot lower its scatter-add / 2-D gather "
+                f"(probe failed: {err.splitlines()[0]}); use the "
+                f"'sparse_bucketed_jnp' backend (bit-identical math "
+                f"through XLA) or pass interpret=True for the Pallas "
+                f"interpreter")
+    from repro.kernels import dso_sparse
+    M = y.shape[0]
+    rb = M // row_batches
+    Mk = rb * row_batches
+    w2, a2, gw2, ga2 = dso_sparse.dso_bucketed_block_step_pallas(
+        cols_fl[:, :Mk], vals_fl[:, :Mk], lut, cnt, y[:Mk], w, alpha[:Mk],
+        gw, ga[:Mk], tile_row_nnz[:Mk], tile_col_nnz, row_nnz[:Mk], col_nnz,
+        scalars, row_batches=row_batches, loss_name=loss_name,
+        reg_name=reg_name, interpret=interpret)
     if Mk < M:  # truncated trailing rows pass through unchanged
         a2 = jnp.concatenate([a2, alpha[Mk:]])
         ga2 = jnp.concatenate([ga2, ga[Mk:]])

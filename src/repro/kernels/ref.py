@@ -76,6 +76,26 @@ def dso_sparse_block_step_ref(cols, vals, y, w, alpha, gw, ga, row_nnz,
     return w, alpha_new, gw, ga_new
 
 
+def dso_bucketed_block_step_ref(cols_fl, vals_fl, lut, cnt, y, w, alpha, gw,
+                                ga, row_nnz, col_nnz, scalars, *,
+                                row_batches: int, loss_name: str,
+                                reg_name: str):
+    """Oracle for the one-kernel bucketed step: reassemble the tile's
+    packed (M, cnt * K_CHUNK) rectangle from its flat chunks at the exact
+    bucket width (host-concrete ``lut``/``cnt`` — no clamped dead slots,
+    no zero-padding to the max width) and delegate to the uniform-K sparse
+    oracle.  Deliberately *independent* of the kernel's staging: it checks
+    the flat chunk view + lut against the plain packed-tile math."""
+    import numpy as np
+    lut = np.asarray(lut)
+    n = int(np.asarray(cnt))
+    c = jnp.concatenate([cols_fl[int(lut[j])] for j in range(n)], axis=1)
+    v = jnp.concatenate([vals_fl[int(lut[j])] for j in range(n)], axis=1)
+    return dso_sparse_block_step_ref(
+        c, v, y, w, alpha, gw, ga, row_nnz, col_nnz, scalars,
+        row_batches=row_batches, loss_name=loss_name, reg_name=reg_name)
+
+
 def swa_attention_ref(q, k, v, *, window: int, causal: bool = True,
                       q_offset: int = 0):
     """Sliding-window attention oracle.

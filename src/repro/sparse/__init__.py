@@ -10,8 +10,9 @@ Runners:            ``core.dso.run_dso_grid(impl='sparse')`` and
 """
 
 from repro.sparse.format import (BUCKET_SKEW_THRESHOLD, BucketedGridData,
-                                 CSRMatrix, MAX_K_BUCKETS, SparseGridData,
-                                 SparseTile, SPARSE_DENSITY_THRESHOLD,
+                                 CSRMatrix, K_CHUNK, MAX_K_BUCKETS,
+                                 SparseGridData, SparseTile,
+                                 SPARSE_DENSITY_THRESHOLD,
                                  assign_k_buckets, bucketed_grid_from_csr,
                                  choose_k, csr_k_per_tile, density,
                                  grid_nbytes, make_bucketed_grid_data,
@@ -23,7 +24,7 @@ from repro.sparse.ingest import (ScanStats, csr_primal_objective,
                                  scan_libsvm)
 
 __all__ = [
-    "BUCKET_SKEW_THRESHOLD", "BucketedGridData", "CSRMatrix",
+    "BUCKET_SKEW_THRESHOLD", "BucketedGridData", "CSRMatrix", "K_CHUNK",
     "MAX_K_BUCKETS", "SparseGridData", "SparseTile",
     "SPARSE_DENSITY_THRESHOLD", "assign_k_buckets",
     "bucketed_grid_from_csr", "choose_k", "csr_k_per_tile", "density",

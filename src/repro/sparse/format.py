@@ -48,7 +48,11 @@ nnz-proportional:
     bucket-K``, tracking real nnz instead of max-K padding.  ``bucket_id``
     / ``bucket_pos`` (p, p) map tile (q, b) to its (bucket, slot) address;
     the shared scaling statistics are identical to the uniform layouts', so
-    the bucketed trajectory equals the ``sparse_jnp`` one.
+    the bucketed trajectory equals the ``sparse_jnp`` one.  What actually
+    lives on the device is the *flat chunk view* — every tile re-expressed
+    as consecutive (mb, K_CHUNK) chunks of ONE ragged buffer plus a per-tile
+    chunk offset table — which is what the one-kernel scalar-prefetch
+    Pallas backend streams (``kernels/dso_sparse.py``).
 """
 
 from __future__ import annotations
@@ -249,21 +253,39 @@ class SparseGridData(NamedTuple):
     k_per_tile: np.ndarray = None  # (p, p) int
 
 
+#: flat-chunk granularity of the bucketed layout's packed view: every
+#: bucket width is a multiple of the sublane, so a tile of width K_k is
+#: exactly ``K_k // K_CHUNK`` consecutive (mb, K_CHUNK) chunks
+K_CHUNK = SUBLANE
+
+
 class BucketedGridData(NamedTuple):
     """The p x p DSO grid in K-bucketed ragged block-ELL form.
 
     Tiles are grouped into ``len(bucket_ks)`` packed widths; bucket k's
     ``cols_b[k]``/``vals_b[k]`` stack every processor's tiles of that width
-    as (p, slots_k, mb, K_k) — rectangular per bucket, so vmap over
-    processors and shard_map over devices both stay rectangular.  Tile
-    (q, b) lives at ``[q, bucket_pos[q, b]]`` of bucket ``bucket_id[q, b]``;
-    unused trailing slots (processors with fewer tiles of that width) are
+    as (p, slots_k, mb, K_k) — rectangular per bucket.  Tile (q, b) lives
+    at ``[q, bucket_pos[q, b]]`` of bucket ``bucket_id[q, b]``; unused
+    trailing slots (processors with fewer tiles of that width) are
     all-padding tiles that no schedule ever addresses.  All scaling
     statistics match the uniform layouts' exactly.
+
+    The per-bucket rectangles are HOST-side numpy (inspection,
+    ``grid_to_csr``, and the legacy ``lax.switch`` backends, which upload
+    them on demand).  What lives on DEVICE is the *flat chunk view*: every
+    bucket width is a multiple of ``K_CHUNK``, so each tile is
+    ``K_k // K_CHUNK`` consecutive (mb, K_CHUNK) chunks and the whole grid
+    packs into ONE ragged buffer ``cols_fl``/``vals_fl`` of shape
+    (p, n_chunks, mb, K_CHUNK) — byte-identical to the per-bucket
+    rectangles, laid out bucket-major then slot-major so a tile's chunks
+    are contiguous.  ``chunk_lut[q, b]`` is the tile's offset table: the
+    n_kc (= max-K / K_CHUNK) chunk indices the one-kernel Pallas backend
+    scalar-prefetches (entries past the tile's ``chunk_cnt[q, b]`` are
+    clamped to its last chunk, so a revisited block index costs no DMA).
     """
 
-    cols_b: tuple     # per bucket: (p, slots_k, mb, K_k) int32
-    vals_b: tuple     # per bucket: (p, slots_k, mb, K_k) float32
+    cols_b: tuple     # per bucket: (p, slots_k, mb, K_k) int32 numpy (host)
+    vals_b: tuple     # per bucket: (p, slots_k, mb, K_k) float32 numpy
     bucket_id: Array  # (p, p) int32 — bucket of tile (q, b)
     bucket_pos: Array  # (p, p) int32 — slot of tile (q, b) in its bucket
     yg: Array         # (p, mb)
@@ -280,6 +302,11 @@ class BucketedGridData(NamedTuple):
     tile_row_nnz_g: Array = None   # (p, p, mb)
     # per-tile raw max row widths (host-side, stats only)
     k_per_tile: np.ndarray = None  # (p, p) int
+    # flat chunk view (device-resident payload of the one-kernel backends)
+    cols_fl: Array = None    # (p, n_chunks, mb, K_CHUNK) int32
+    vals_fl: Array = None    # (p, n_chunks, mb, K_CHUNK) float32
+    chunk_lut: Array = None  # (p, p, n_kc) int32 — clamped chunk indices
+    chunk_cnt: Array = None  # (p, p) int32 — live chunks of tile (q, b)
 
     def tile(self, q: int, b: int) -> SparseTile:
         """The packed tile of processor q / block b (tests, inspection)."""
@@ -288,6 +315,17 @@ class BucketedGridData(NamedTuple):
         return SparseTile(cols=self.cols_b[k][q, s],
                           vals=self.vals_b[k][q, s],
                           row_nnz=None, db=self.db)
+
+    def flat_tile(self, q: int, b: int):
+        """Tile (q, b) reassembled from the flat chunk view — (mb, K_k)
+        ``(cols, vals)`` that must equal ``tile(q, b)`` exactly (pinned by
+        the round-trip tests)."""
+        lut = np.asarray(self.chunk_lut)[q, b]
+        cnt = int(np.asarray(self.chunk_cnt)[q, b])
+        c = np.asarray(self.cols_fl)[q, lut[:cnt]]   # (cnt, mb, K_CHUNK)
+        v = np.asarray(self.vals_fl)[q, lut[:cnt]]
+        return (c.transpose(1, 0, 2).reshape(self.mb, cnt * K_CHUNK),
+                v.transpose(1, 0, 2).reshape(self.mb, cnt * K_CHUNK))
 
 
 def density(prob) -> float:
@@ -433,6 +471,14 @@ def bucketed_grid_from_csr(csr: CSRMatrix, y, p: int, row_batches: int = 1,
     width instead of the global max: resident bytes drop from
     ``8 * p^2 * mb * max-K`` to ``8 * mb * sum_k slots_k * K_k``, and a
     tile step streams ``8 * mb * bucket-K`` instead of ``8 * mb * max-K``.
+
+    The flat chunk view (``cols_fl``/``vals_fl`` + ``chunk_lut``/
+    ``chunk_cnt``) is derived here from the same addresses: a pure reshape
+    of the per-bucket rectangles into (mb, K_CHUNK) chunks, concatenated
+    bucket-major / slot-major so every tile's chunks are contiguous.  It
+    carries exactly the same elements (no byte growth); only the flat view
+    and the index tables go to the device — the per-bucket rectangles stay
+    host-side numpy.
     """
     shared, addrs = _tile_csr(csr, y, p, row_batches)
     mb, db = shared["mb"], shared["db"]
@@ -463,12 +509,50 @@ def bucketed_grid_from_csr(csr: CSRMatrix, y, p: int, row_batches: int = 1,
             cols_b[k][q, s, a.local_rows[msk], a.pos[msk]] = \
                 (a.idx[msk] - b * db).astype(np.int32)
             vals_b[k][q, s, a.local_rows[msk], a.pos[msk]] = a.vals[msk]
+    cols_fl, vals_fl, chunk_lut, chunk_cnt = _flat_chunk_view(
+        cols_b, vals_b, widths, bucket_id, bucket_pos)
     return BucketedGridData(
-        cols_b=tuple(jnp.asarray(c) for c in cols_b),
-        vals_b=tuple(jnp.asarray(v) for v in vals_b),
+        cols_b=tuple(cols_b), vals_b=tuple(vals_b),
         bucket_id=jnp.asarray(bucket_id),
         bucket_pos=jnp.asarray(bucket_pos),
-        bucket_ks=widths, **shared)
+        bucket_ks=widths,
+        cols_fl=jnp.asarray(cols_fl), vals_fl=jnp.asarray(vals_fl),
+        chunk_lut=jnp.asarray(chunk_lut), chunk_cnt=jnp.asarray(chunk_cnt),
+        **shared)
+
+
+def _flat_chunk_view(cols_b, vals_b, widths, bucket_id, bucket_pos):
+    """Pack per-bucket (p, slots_k, mb, K_k) rectangles into the flat
+    (p, n_chunks, mb, K_CHUNK) chunk buffer + per-tile offset tables.
+
+    Chunk order is bucket-major, then slot-major within a bucket, so tile
+    (q, b)'s ``n_k = K_k // K_CHUNK`` chunks sit at consecutive indices
+    ``base[k] + pos * n_k .. + n_k - 1``.  ``chunk_lut[q, b, j]`` holds
+    that range, with entries past ``chunk_cnt[q, b]`` clamped to the last
+    live chunk (the scalar-prefetch index map then re-reads an
+    already-resident block instead of streaming a dead one).
+    """
+    p = cols_b[0].shape[0] if cols_b else 0
+    mb = cols_b[0].shape[2] if cols_b else 0
+    n_per = np.asarray([w // K_CHUNK for w in widths], np.int64)
+    base = np.zeros(len(widths) + 1, np.int64)
+    parts_c, parts_v = [], []
+    for k, w in enumerate(widths):
+        s_k, n_k = cols_b[k].shape[1], int(n_per[k])
+        base[k + 1] = base[k] + s_k * n_k
+        for arr, parts in ((cols_b[k], parts_c), (vals_b[k], parts_v)):
+            parts.append(arr.reshape(p, s_k, mb, n_k, K_CHUNK)
+                         .transpose(0, 1, 3, 2, 4)
+                         .reshape(p, s_k * n_k, mb, K_CHUNK))
+    cols_fl = np.concatenate(parts_c, axis=1)
+    vals_fl = np.concatenate(parts_v, axis=1)
+    bucket_id = np.asarray(bucket_id)
+    bucket_pos = np.asarray(bucket_pos)
+    cnt = n_per[bucket_id]                              # (p, p)
+    off = base[bucket_id] + bucket_pos * cnt            # (p, p)
+    n_kc = int(n_per.max())                             # max-K / K_CHUNK
+    lut = off[..., None] + np.minimum(np.arange(n_kc), cnt[..., None] - 1)
+    return (cols_fl, vals_fl, lut.astype(np.int32), cnt.astype(np.int32))
 
 
 def make_sparse_grid_data(prob, p: int, row_batches: int = 1,
@@ -590,9 +674,12 @@ def grid_nbytes(data) -> int:
     replacement for the dense grid's 4 * m_pad * d_pad).  Computed from
     shape/dtype — no device-to-host copy."""
     if isinstance(data, BucketedGridData):
-        return int(sum(c.nbytes + v.nbytes
-                       for c, v in zip(data.cols_b, data.vals_b))
-                   + data.bucket_id.nbytes + data.bucket_pos.nbytes)
+        # device-resident = the flat chunk view + the index tables (the
+        # per-bucket rectangles are host-side numpy, not counted); the flat
+        # view carries exactly the per-bucket rectangles' elements
+        return int(data.cols_fl.nbytes + data.vals_fl.nbytes
+                   + data.bucket_id.nbytes + data.bucket_pos.nbytes
+                   + data.chunk_lut.nbytes + data.chunk_cnt.nbytes)
     return int(data.cols_g.nbytes + data.vals_g.nbytes)
 
 

@@ -1,24 +1,35 @@
 """K-bucketed ragged sparse backend + load-balanced schedule coverage.
 
-Five groups, mirroring the PR 4 acceptance gates:
+Six groups, mirroring the PR 4 / PR 8 acceptance gates:
 
   1. packing    — bucket-width assignment invariants, and the round-trip
                   property: every tile of a ``BucketedGridData`` densifies
                   to exactly the same tile as the uniform
                   ``SparseGridData`` (deterministic + hypothesis forms),
-                  with identical scaling statistics.
+                  with identical scaling statistics; the flat chunk view's
+                  offset table reassembles every tile's exact (mb, K_k)
+                  rectangle (``flat_tile`` == ``tile``).
   2. trajectory — ``sparse_bucketed_jnp`` / ``sparse_bucketed_pallas``
                   equal ``sparse_jnp`` to <= 1e-5 on every loss/reg pair
-                  on a power-law-skewed problem (the PR acceptance gate).
-  3. schedules  — the LPT schedule is a valid (n_epochs, p, p) permutation
+                  on a power-law-skewed problem (the PR 4 acceptance
+                  gate).
+  3. one-kernel — the scalar-prefetch one-kernel Pallas backend is
+                  BIT-identical to ``sparse_bucketed_jnp`` (same staged
+                  math by construction) across loss x reg, {cyclic, lpt},
+                  and bucket counts 1-4, and within 1e-5 of the legacy
+                  ``lax.switch`` backends; the ops wrapper matches the
+                  independent ``dso_bucketed_block_step_ref`` oracle, and
+                  ``REPRO_FORCE_INTERPRET`` / the per-platform Mosaic
+                  probe cache behave (PR 8 gates).
+  4. schedules  — the LPT schedule is a valid (n_epochs, p, p) permutation
                   array (never two workers on one block), covers every
                   (worker, block) pair per epoch, balances a skewed cost
                   matrix better than cyclic, and drives the grid runner.
-  4. auto       — ``impl="auto"`` upgrades to the bucketed layout exactly
+  5. auto       — ``impl="auto"`` upgrades to the bucketed layout exactly
                   when the tile-K skew crosses the threshold in the sparse
                   regime; the ingester's pass-1 ``k_per_tile`` matches the
                   tiler's, so the decision needs no extra data pass.
-  5. sharded    — grid == sharded for both bucketed backends under both
+  6. sharded    — grid == sharded for both bucketed backends under both
                   the cyclic and the LPT schedule (subprocess, 4 host
                   devices); plus the ``dso_sparse_block_step`` interpret
                   default now auto-detects the backend like the dense ops.
@@ -91,13 +102,23 @@ def _check_roundtrip(prob, p, row_batches=1):
     np.testing.assert_array_equal(buck.k_per_tile, uni.k_per_tile)
     for q in range(p):
         for b in range(p):
+            t = buck.tile(q, b)
             t_u = SparseTile(uni.cols_g[q, b], uni.vals_g[q, b], None,
                              uni.db).toarray()
-            np.testing.assert_allclose(buck.tile(q, b).toarray(), t_u,
+            np.testing.assert_allclose(t.toarray(), t_u,
                                        err_msg=f"tile ({q}, {b})")
+            # flat chunk view round-trip: the offset table reassembles the
+            # tile's exact (mb, K_bucket) rectangle, chunk for chunk
+            fc, fv = buck.flat_tile(q, b)
+            np.testing.assert_array_equal(fc, np.asarray(t.cols),
+                                          err_msg=f"flat cols ({q}, {b})")
+            np.testing.assert_array_equal(fv, np.asarray(t.vals),
+                                          err_msg=f"flat vals ({q}, {b})")
     # the ragged grid never exceeds the uniform one's packed-byte budget
-    assert grid_nbytes(buck) <= grid_nbytes(uni) + buck.bucket_id.nbytes \
-        + buck.bucket_pos.nbytes
+    # (device payload = flat view + index maps + chunk tables)
+    maps = buck.bucket_id.nbytes + buck.bucket_pos.nbytes \
+        + buck.chunk_lut.nbytes + buck.chunk_cnt.nbytes
+    assert grid_nbytes(buck) <= grid_nbytes(uni) + maps
     assert packed_bytes_per_step(buck) <= packed_bytes_per_step(uni)
 
 
@@ -148,6 +169,136 @@ def test_bucketed_pallas_matches_jnp_with_row_batches():
                              impl="sparse_bucketed_pallas")
     np.testing.assert_allclose(np.asarray(w1), np.asarray(w2), atol=1e-5)
     np.testing.assert_allclose(np.asarray(a1), np.asarray(a2), atol=1e-5)
+
+
+# -------------------------------------------------------------- one-kernel --
+
+# problem shapes whose bucketed tiling lands on exactly 1..4 K-buckets
+# (verified by the assert in _bucket_problem)
+_N_BUCKET_PROBLEMS = {
+    1: dict(p=2, m=64, d=32, density=0.3, alpha=0.0),
+    2: dict(p=2, m=96, d=64, density=0.15, alpha=1.0),
+    3: dict(p=4, m=96, d=128, density=0.3, alpha=2.0),
+    4: dict(p=4, m=96, d=128, density=0.4, alpha=2.5),
+}
+
+
+def _bucket_problem(n_buckets, loss="hinge", reg="l2", row_batches=1):
+    cfg = dict(_N_BUCKET_PROBLEMS[n_buckets])
+    p = cfg.pop("p")
+    prob = make_skewed_classification(loss=loss, reg=reg, lam=1e-3, seed=0,
+                                      **cfg)
+    data = make_bucketed_grid_data(prob, p, row_batches)
+    assert len(data.bucket_ks) == n_buckets, data.bucket_ks
+    return prob, p
+
+
+def _run_backend(prob, backend, p, schedule="cyclic", row_batches=1):
+    res = solve(prob, backend=backend, schedule=schedule, p=p, epochs=2,
+                eta0=0.5, row_batches=row_batches, seed=2)
+    return np.asarray(res.w), np.asarray(res.alpha)
+
+
+def _assert_onekernel_identity(prob, p, schedule="cyclic", row_batches=1):
+    """The PR 8 trajectory gate: one-kernel Pallas == flat jnp BITWISE
+    (shared staged math), and both within 1e-5 of the legacy lax.switch
+    dispatch (same math at per-bucket widths — f32 reduction order may
+    differ)."""
+    kw = dict(p=p, schedule=schedule, row_batches=row_batches)
+    w_jnp, a_jnp = _run_backend(prob, "sparse_bucketed_jnp", **kw)
+    w_pal, a_pal = _run_backend(prob, "sparse_bucketed_pallas", **kw)
+    np.testing.assert_array_equal(w_pal, w_jnp)
+    np.testing.assert_array_equal(a_pal, a_jnp)
+    w_sw, a_sw = _run_backend(prob, "sparse_bucketed_pallas_switch", **kw)
+    np.testing.assert_allclose(w_pal, w_sw, atol=1e-5)
+    np.testing.assert_allclose(a_pal, a_sw, atol=1e-5)
+
+
+@pytest.mark.parametrize("loss,reg", LOSS_REG_PAIRS)
+def test_onekernel_bit_identity_every_loss_reg(loss, reg):
+    prob, p = _bucket_problem(3, loss=loss, reg=reg)
+    _assert_onekernel_identity(prob, p)
+
+
+@pytest.mark.parametrize("n_buckets", [1, 2, 3, 4])
+@pytest.mark.parametrize("schedule", ["cyclic", "lpt"])
+def test_onekernel_bit_identity_buckets_and_schedules(n_buckets, schedule):
+    prob, p = _bucket_problem(n_buckets, row_batches=2)
+    _assert_onekernel_identity(prob, p, schedule=schedule, row_batches=2)
+
+
+def test_bucketed_block_step_matches_ref_oracle():
+    """ops.dso_bucketed_block_step (one-kernel launch) and its jnp twin
+    against the *independent* ref oracle, which reassembles the tile at
+    its exact bucket width from the offset table and runs the plain
+    uniform-K sparse scan — no staging, no max-width padding."""
+    from repro.kernels import dso_sparse, ref
+    from repro.sparse import make_bucketed_grid_data as _mk
+    prob, p = _bucket_problem(3)
+    data = _mk(prob, p, 2)
+    q, b = 1, 2
+    mb, db = data.mb, data.db
+    rng = np.random.default_rng(3)
+    args = (jnp.asarray(data.cols_fl[q]), jnp.asarray(data.vals_fl[q]),
+            jnp.asarray(data.chunk_lut[q, b]),
+            jnp.asarray(data.chunk_cnt[q, b]),
+            jnp.asarray(data.yg[q]),
+            jnp.asarray(rng.normal(0, 0.1, db).astype(np.float32)),
+            jnp.asarray(rng.random(mb).astype(np.float32)),
+            jnp.asarray(rng.random(db).astype(np.float32)),
+            jnp.asarray(rng.random(mb).astype(np.float32)))
+    stats = (jnp.asarray(data.tile_row_nnz_g[q, b]),
+             jnp.asarray(data.tile_col_nnz_g[q, :, b * db:(b + 1) * db]),
+             jnp.asarray(data.row_nnz_g[q]),
+             jnp.asarray(data.col_nnz[b * db:(b + 1) * db]))
+    scalars = jnp.asarray([0.5, 1e-3, prob.m, -10.0, 10.0], jnp.float32)
+    kw = dict(row_batches=2, loss_name="hinge", reg_name="l2")
+    got = ops.dso_bucketed_block_step(*args, *stats, scalars, **kw)
+    twin = dso_sparse.dso_bucketed_block_step_jnp(*args, *stats, scalars,
+                                                  **kw)
+    want = ref.dso_bucketed_block_step_ref(
+        *args, stats[2], stats[3], scalars, **kw)
+    for g, t, r in zip(got, twin, want):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(t))
+        np.testing.assert_allclose(np.asarray(g), np.asarray(r), atol=1e-5)
+
+
+def test_force_interpret_env_override(monkeypatch):
+    """REPRO_FORCE_INTERPRET=0/1 overrides the platform auto-detection of
+    ``interpret=None`` but never an explicit ``interpret=`` argument."""
+    monkeypatch.setattr(ops, "_on_tpu", lambda: True)
+    assert ops._resolve_interpret(None) is False        # platform default
+    monkeypatch.setenv("REPRO_FORCE_INTERPRET", "1")
+    assert ops._resolve_interpret(None) is True         # env wins
+    assert ops._resolve_interpret(False) is False       # explicit arg wins
+    monkeypatch.setenv("REPRO_FORCE_INTERPRET", "0")
+    assert ops._resolve_interpret(None) is False
+    monkeypatch.setattr(ops, "_on_tpu", lambda: False)
+    monkeypatch.setenv("REPRO_FORCE_INTERPRET", "1")
+    assert ops._resolve_interpret(None) is True
+    monkeypatch.setenv("REPRO_FORCE_INTERPRET", "")     # empty = unset
+    assert ops._resolve_interpret(None) is True         # back to platform
+
+
+def test_mosaic_probe_cached_per_platform(monkeypatch):
+    """The Mosaic scatter/gather probe verdict is cached per *platform
+    name*: switching the default backend re-probes instead of serving the
+    other platform's verdict."""
+    ops._mosaic_sparse_gather_error.cache_clear()
+    r1 = ops.mosaic_sparse_gather_error()
+    assert ops._mosaic_sparse_gather_error.cache_info().currsize == 1
+    assert ops.mosaic_sparse_gather_error() == r1       # cache hit
+    assert ops._mosaic_sparse_gather_error.cache_info().hits >= 1
+    calls = []
+    monkeypatch.setattr(
+        ops, "_mosaic_sparse_gather_error",
+        lambda platform: calls.append(platform) or f"probed:{platform}")
+    monkeypatch.setattr(ops.jax, "default_backend",
+                        lambda: "other-platform")
+    assert ops.mosaic_sparse_gather_error() == "probed:other-platform"
+    assert calls == ["other-platform"]                  # keyed on platform
+    monkeypatch.undo()
+    ops._mosaic_sparse_gather_error.cache_clear()
 
 
 # -------------------------------------------------------------- schedules --

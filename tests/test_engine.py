@@ -51,7 +51,8 @@ REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 ALL_BACKENDS = ("dense_jnp", "dense_pallas_fused", "dense_pallas_block",
                 "sparse_jnp", "sparse_pallas", "sparse_bucketed_jnp",
-                "sparse_bucketed_pallas")
+                "sparse_bucketed_pallas", "sparse_bucketed_jnp_switch",
+                "sparse_bucketed_pallas_switch")
 
 
 def _prob(m=64, d=40, density=0.2, seed=0, loss="hinge"):

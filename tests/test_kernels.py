@@ -208,12 +208,23 @@ def test_compiled_sparse_kernel_fails_loudly_without_mosaic_scatter(
     makes interpret=None resolve to compiled, and the probe kernel then
     hits this container's real (CPU) backend, which lacks the lowering."""
     monkeypatch.setattr(ops, "_on_tpu", lambda: True)
-    ops.mosaic_sparse_gather_error.cache_clear()
+    ops._mosaic_sparse_gather_error.cache_clear()
     try:
         z8 = jnp.zeros(8, jnp.float32)
         with pytest.raises(ValueError, match="sparse_jnp"):
             ops.dso_sparse_block_step(
                 jnp.zeros((8, 8), jnp.int32), jnp.zeros((8, 8), jnp.float32),
+                z8, z8, z8, z8, z8, jnp.ones(8), jnp.ones((1, 8)),
+                jnp.ones(8), jnp.ones(8),
+                jnp.asarray([0.5, 1e-3, 8.0, -31.6, 31.6], jnp.float32),
+                row_batches=1, loss_name="hinge", reg_name="l2")
+        # the one-kernel bucketed wrapper shares the gate (and names the
+        # bit-identical jnp fallback)
+        with pytest.raises(ValueError, match="sparse_bucketed_jnp"):
+            ops.dso_bucketed_block_step(
+                jnp.zeros((2, 8, 8), jnp.int32),
+                jnp.zeros((2, 8, 8), jnp.float32),
+                jnp.zeros(2, jnp.int32), jnp.int32(1),
                 z8, z8, z8, z8, z8, jnp.ones(8), jnp.ones((1, 8)),
                 jnp.ones(8), jnp.ones(8),
                 jnp.asarray([0.5, 1e-3, 8.0, -31.6, 31.6], jnp.float32),
@@ -228,4 +239,4 @@ def test_compiled_sparse_kernel_fails_loudly_without_mosaic_scatter(
             interpret=True)
         assert np.isfinite(np.asarray(out[0])).all()
     finally:
-        ops.mosaic_sparse_gather_error.cache_clear()
+        ops._mosaic_sparse_gather_error.cache_clear()

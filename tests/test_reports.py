@@ -47,7 +47,8 @@ def test_roofline_report_renders():
     from benchmarks.roofline import report
     md = report()
     lines = md.strip().split("\n")
-    assert len(lines) >= 42  # header + 40 baseline rows
+    assert len(lines) >= 3  # header + separator + at least one record
     assert all(l.startswith("|") for l in lines)
-    # every baseline row tagged 'baseline'
-    assert all("baseline" in l for l in lines[2:])
+    # DSO tile-step schema: every record row names its dominant term
+    assert all(any(t in l for t in ("compute", "memory", "collective"))
+               for l in lines[2:])
