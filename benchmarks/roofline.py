@@ -14,7 +14,25 @@ per-device quantities are total / p.  The simulator has no real
 collectives — the ICI term is the analytic DSO ring cost instead: per
 epoch each machine sends its padded primal block (w, and gw under
 AdaGrad) around the ring once, in p stage-hops of db floats each, so
-wire_bytes_per_device = (2 if adagrad else 1) * 4 * p * db.
+wire_bytes_per_device = (2 if adagrad else 1) * 4 * p * db.  Two more
+transports are priced alongside it for the general-permutation
+schedules: the point-to-point pair path (p + 1 moves of db floats,
+O(db) per step) and the legacy all-gather path ((p + 1) full (p, db)
+gathers, O(p * db) per step) — the p2p/all-gather byte ratio is the
+``dso_roofline`` gate on the ISSUE 9 transport swap.
+
+The collective term is then combined with the tile-step term both ways:
+
+    step_s             = max(compute_s, memory_s)      (pipelined HBM)
+    serial_total_s     = step_s + collective_s         (shift-then-step)
+    overlapped_total_s = max(step_s, collective_s)     (double-buffered)
+    overlap_headroom   = serial_total_s / overlapped_total_s
+
+``overlap_headroom`` is the analytic ceiling on what the double-buffered
+ring pipeline (``overlap=True`` in ``core.dso_dist``) can recover by
+hiding the ppermute behind the tile-step compute; it tops out at 2.0
+when the two terms are balanced and falls to 1.0 when either side
+dominates outright.
 
 ``useful_flops`` is the paper-level work per epoch — 4 flops per stored
 nonzero (multiply+add in the dual gather, multiply+add in the primal
@@ -111,19 +129,33 @@ def analyze(backend: str, shape_name: str, spec: dict | None = None, *,
     flops_dev = flops / p_
     bytes_dev = hbm_bytes / p_
     wire_dev = 2.0 * 4.0 * p_ * db   # w + gw ring, p hops of db floats
+    # general-permutation transports, same w+gw payload per epoch:
+    # p2p = p + 1 point-to-point moves of db floats (p fetches + the
+    # epoch-end restore); all-gather = p + 1 gathers of the FULL (p, db)
+    # block table — the O(p * db) per-step cost the p2p swap removes
+    wire_p2p_dev = 2.0 * 4.0 * (p_ + 1) * db
+    wire_ag_dev = 2.0 * 4.0 * (p_ + 1) * p_ * db
 
     nnz = int(np.asarray(tile.tile_row_nnz_g).sum())
     terms = {"compute_s": flops_dev / PEAK_FLOPS,
              "memory_s": bytes_dev / HBM_BW,
              "collective_s": wire_dev / ICI_BW}
     uf = useful_flops(nnz, prob.m, prob.d)
+    step_s = max(terms["compute_s"], terms["memory_s"])
+    serial_total_s = step_s + terms["collective_s"]
+    overlapped_total_s = max(step_s, terms["collective_s"])
 
     rec = dict(
         backend=be.name, shape=shape_name, **spec,
         row_batches=row_batches, mb=mb, db=db, nnz=nnz,
         flops_per_device=flops_dev, bytes_per_device=bytes_dev,
         wire_bytes_per_device=wire_dev,
+        wire_bytes_p2p_per_device=wire_p2p_dev,
+        wire_bytes_allgather_per_device=wire_ag_dev,
         **terms,
+        step_s=step_s, serial_total_s=serial_total_s,
+        overlapped_total_s=overlapped_total_s,
+        overlap_headroom=serial_total_s / max(overlapped_total_s, 1e-30),
         dominant=max(terms, key=terms.get).replace("_s", ""),
         intensity_flops_per_byte=flops_dev / max(bytes_dev, 1.0),
         useful_flops=uf, useful_flops_ratio=uf / max(flops, 1.0),
@@ -141,11 +173,20 @@ def analyze(backend: str, shape_name: str, spec: dict | None = None, *,
 
 def summarize(records: list[dict]) -> dict:
     """``dso_roofline`` BENCH entry: per shape, the bucketed pair's cost
-    ratios (switch over one-kernel-math) and each backend's dominant
-    roofline term."""
+    ratios (switch over one-kernel-math), each backend's dominant
+    roofline term, the overlap headroom of the double-buffered pipeline,
+    and the p2p/all-gather wire-byte gate."""
     out = {"peak_flops": PEAK_FLOPS, "hbm_bw": HBM_BW, "ici_bw": ICI_BW,
            "shapes": {}}
     by = {(r["backend"], r["shape"]): r for r in records}
+    ratios = [r["wire_bytes_p2p_per_device"]
+              / max(r["wire_bytes_allgather_per_device"], 1.0)
+              for r in records]
+    if ratios:
+        # analytic: (p+1)*db over (p+1)*p*db = 1/p, identical per shape
+        worst = max(ratios)
+        out["p2p_over_allgather_bytes"] = {
+            "worst": worst, "threshold": 0.5, "pass": worst <= 0.5}
     for shape in sorted({r["shape"] for r in records}):
         one = by.get(("sparse_bucketed_jnp", shape))
         sw = by.get(("sparse_bucketed_jnp_switch", shape))
@@ -153,6 +194,9 @@ def summarize(records: list[dict]) -> dict:
                               for r in records if r["shape"] == shape},
                  "useful_flops_ratio": {
                      r["backend"]: r["useful_flops_ratio"]
+                     for r in records if r["shape"] == shape},
+                 "overlap_headroom": {
+                     r["backend"]: r["overlap_headroom"]
                      for r in records if r["shape"] == shape}}
         if one and sw:
             entry["switch_over_onekernel"] = {
@@ -169,8 +213,8 @@ def report(directory=RESULTS) -> str:
     """Markdown table over the saved per-(backend x shape) records."""
     lines = [
         "| backend | shape | dominant | compute s | memory s | "
-        "collective s | flops/byte | useful-FLOP ratio |",
-        "|---|---|---|---|---|---|---|---|",
+        "collective s | overlap hr | flops/byte | useful-FLOP ratio |",
+        "|---|---|---|---|---|---|---|---|---|",
     ]
     for f in sorted(os.listdir(directory)):
         if not f.endswith(".json"):
@@ -180,6 +224,7 @@ def report(directory=RESULTS) -> str:
             f"| {r['backend']} | {r['shape']} | {r['dominant']} | "
             f"{r['compute_s']:.3e} | {r['memory_s']:.3e} | "
             f"{r['collective_s']:.3e} | "
+            f"{r.get('overlap_headroom', 1.0):.2f} | "
             f"{r['intensity_flops_per_byte']:.2f} | "
             f"{r['useful_flops_ratio']:.3f} |")
     return "\n".join(lines)

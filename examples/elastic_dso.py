@@ -25,8 +25,16 @@ ordered JSONL run-event log (``--events-out``), rendered to a readable
 timeline (``--report-out``, via ``benchmarks.report run-report``) — the
 CI chaos artifact.
 
+``--async-writes`` runs the same scenarios with
+``SnapshotStore(async_writes=True)``: the npz serialization + atomic
+rename drain on a background writer thread while the epoch loop keeps
+running.  Every assertion is unchanged — crash recovery must still be
+bit-identical and the corrupt snapshot must still be quarantined — which
+is exactly the point: the Supervisor's flush-before-read barriers make
+async writes invisible to recovery semantics.
+
     PYTHONPATH=src python examples/elastic_dso.py [--epochs N]
-        [--fault-every K] [--ckpt-every K]
+        [--fault-every K] [--ckpt-every K] [--async-writes]
         [--chaos [--ledger-out F] [--events-out F] [--report-out F]]
 """
 
@@ -81,7 +89,9 @@ def run_chaos(args):
                                 epochs=epochs, eta0=args.eta0,
                                 fault_plan=[ev.describe() for ev in plan]))
     with tempfile.TemporaryDirectory() as ckpt_dir:
-        sup = Supervisor(SnapshotStore(ckpt_dir), checkpoint_every=2,
+        sup = Supervisor(SnapshotStore(ckpt_dir,
+                                       async_writes=args.async_writes),
+                         checkpoint_every=2,
                          eta0=args.eta0, fault_plan=plan,
                          straggler_delay_s=0.05, replan=True,
                          straggler_factor=1.5, straggler_patience=1,
@@ -151,6 +161,11 @@ def main(argv=None):
                          "checkpoint boundary, so re-run recovery shows)")
     ap.add_argument("--ckpt-every", type=int, default=2)
     ap.add_argument("--eta0", type=float, default=0.5)
+    ap.add_argument("--async-writes", action="store_true",
+                    help="use SnapshotStore(async_writes=True): snapshot "
+                         "writes drain on a background thread while the "
+                         "epoch loop runs; all recovery assertions "
+                         "unchanged")
     ap.add_argument("--chaos", action="store_true",
                     help="run the self-healing gauntlet (NaN + crashes + "
                          "corrupt snapshot + persistent straggler) instead")
@@ -177,7 +192,7 @@ def main(argv=None):
     w_ref = np.asarray(ref.w_full())
 
     with tempfile.TemporaryDirectory() as ckpt_dir:
-        store = SnapshotStore(ckpt_dir)
+        store = SnapshotStore(ckpt_dir, async_writes=args.async_writes)
 
         # -- phase 1: crash storm, exact recovery ------------------------
         sup = Supervisor(store, checkpoint_every=args.ckpt_every,

@@ -9,14 +9,30 @@ of the paper's processors:
               iteration.  Under the cyclic schedule the move is a
               ``jax.lax.ppermute`` ring step — this *is* the paper's bulk
               synchronization, expressed as an XLA ``collective-permute``
-              (overlappable with compute).  A general permutation schedule
-              ("random" — NOMAD-style) is a shuffle, expressed as
-              all-gather + select.
+              (overlappable with compute).
 
-Under the cyclic schedule only w (d/p numbers per device per inner
-iteration) is ever communicated; alpha and X never move — exactly the
-paper's communication pattern, giving the (|Omega| T_u / p + T_c) T epoch
-cost of Theorem 1.
+The ring is a double-buffered pipeline by default (``overlap=True``): the
+travelling ``(w, gw)`` pair is fused into ONE stacked ppermute buffer (one
+rendezvous per inner iteration instead of two), and the scan carry holds a
+one-slot *staged* prefetch — the next block's statistic/payload slices
+(``engine.driver.stage_block``), which depend only on the block id, are
+computed while the current shift is in flight, so the transfer sits off
+the critical path.  The consumed update is unchanged
+(``engine.driver.staged_step`` runs exactly ``inner_iteration``'s ops), so
+trajectories are bit-identical to the ``overlap=False`` serial-shift path.
+
+General permutation schedules ("random"/"lpt"/"fixed") route point-to-point
+by default (``comm="p2p"``): the chunk's host-side permutations and their
+inverses compile into static ``ppermute`` source→target pairs — the block
+each device needs next is fetched from exactly the device holding it, O(db)
+bytes per device per step instead of the O(p·db) legacy
+``all_gather``+select path (kept under ``comm="allgather"``; identical
+values either way, pinned bitwise by tests).
+
+Under every schedule only w (d/p numbers per device per inner iteration)
+is ever communicated; alpha and X never move — exactly the paper's
+communication pattern, giving the (|Omega| T_u / p + T_c) T epoch cost of
+Theorem 1.
 
 The math is identical to ``dso.run_dso_grid`` (the engine's one
 ``inner_iteration``, any registered tile backend); tests assert
@@ -37,7 +53,7 @@ from repro.engine.data import (DSOState, as_tile_data, check_tile_stats,
                                eta_schedule, init_state, prob_meta,
                                tile_dims)
 from repro.engine.driver import (inner_iteration, resolve_backend_and_build,
-                                 warn_ragged_eval)
+                                 stage_block, staged_step, warn_ragged_eval)
 from repro.engine.schedules import get_schedule
 
 
@@ -52,7 +68,7 @@ def make_dso_mesh(p: int | None = None) -> Mesh:
 def _epoch_shardmap(mesh: Mesh, p: int, db: int, loss_name: str,
                     reg_name: str, use_adagrad: bool, row_batches: int,
                     *, backend_name: str = "dense_jnp", ring: bool = True,
-                    n_data: int | None = None):
+                    n_data: int | None = None, overlap: bool = True):
     """Builds the jitted sharded multi-epoch function for a fixed problem
     shape: ``etas`` (one step size per epoch) and ``perms`` (the schedule's
     (n, p, p) block permutations) drive a ``lax.scan`` over epochs INSIDE
@@ -62,9 +78,19 @@ def _epoch_shardmap(mesh: Mesh, p: int, db: int, loss_name: str,
 
     ``ring=True`` (cyclic schedule): the w-block moves to the ring
     neighbour by ``ppermute`` and ``perms`` is ignored (the owner map is
-    sigma_r).  ``ring=False``: the general-permutation path — blocks move
+    sigma_r).  With ``overlap=True`` (default) the ring is the
+    double-buffered pipeline: ``(w, gw)`` travel as ONE stacked ppermute
+    buffer and the carry holds the staged prefetch of the next block's
+    slices (``stage_block``), which depend only on the block id and so
+    overlap with the shift in the XLA schedule; ``overlap=False`` keeps
+    the legacy serial-shift body (two ppermutes on the critical path) as
+    the benchmark baseline.  Both consume identical updates — trajectories
+    are bit-identical.
+
+    ``ring=False``: the general-permutation all-gather path — blocks move
     by all-gather + dynamic select, and the epoch ends by restoring the
-    device-q-holds-block-q invariant.
+    device-q-holds-block-q invariant.  (The p2p alternative is
+    ``_epoch_shardmap_p2p``, traced per chunk from the host permutations.)
     """
     backend = get_backend(backend_name)
     if n_data is None:
@@ -92,6 +118,10 @@ def _epoch_shardmap(mesh: Mesh, p: int, db: int, loss_name: str,
                                    gw_b, alpha_q, ga_q, arrays_q, yq, rnq,
                                    tcnq, trnq, eta_t, row_batches)
 
+        def stage(blk_id):
+            return stage_block(backend, col_nnz, blk_id, arrays_q, yq,
+                               tcnq, trnq, row_batches, db)
+
         def cyclic_epoch(carry, xs):
             eta_t, _ = xs
 
@@ -104,6 +134,29 @@ def _epoch_shardmap(mesh: Mesh, p: int, db: int, loss_name: str,
                 w_blk, gw_blk = jax.lax.ppermute((w_blk, gw_blk), "dso",
                                                  ring_perm)
                 return (w_blk, gw_blk, alpha_q, ga_q)
+
+            return jax.lax.fori_loop(0, p, inner, carry), None
+
+        def cyclic_epoch_pipelined(carry, xs):
+            # Double-buffered ring: the carry threads a one-slot staged
+            # prefetch of the NEXT block's slices alongside the travelling
+            # pair.  The staged slices depend only on the block id — not on
+            # the ppermute result — so the latency-hiding scheduler runs
+            # them under the in-flight shift; and (w, gw) cross the ring as
+            # ONE stacked buffer: one rendezvous per inner iteration
+            # instead of two.  The consumed block is always sigma(q, r),
+            # exactly the serial-shift driver's — bit-identical trajectory.
+            eta_t, _ = xs
+
+            def inner(r, c):
+                w_blk, gw_blk, alpha_q, ga_q, staged = c
+                w_blk, alpha_q, gw_blk, ga_q = staged_step(
+                    backend, meta, staged, w_blk, gw_blk, alpha_q, ga_q,
+                    arrays_q, yq, rnq, eta_t, row_batches)
+                buf = jax.lax.ppermute(jnp.stack([w_blk, gw_blk]), "dso",
+                                       ring_perm)
+                staged = stage((q + r + 1) % p)   # prefetch sigma(q, r+1)
+                return (buf[0], buf[1], alpha_q, ga_q, staged)
 
             return jax.lax.fori_loop(0, p, inner, carry), None
 
@@ -139,9 +192,17 @@ def _epoch_shardmap(mesh: Mesh, p: int, db: int, loss_name: str,
             w_blk, gw_blk = fetch((w_blk, gw_blk), jnp.int32(p))
             return (w_blk, gw_blk, alpha_q, ga_q), None
 
-        epoch = cyclic_epoch if ring else shuffle_epoch
-        (w_blk, gw_blk, alpha_q, ga_q), _ = jax.lax.scan(
-            epoch, (w_blk, gw_blk, alpha_q, ga_q), (etas, perms))
+        if ring and overlap:
+            # the staged slot threads ACROSS epochs: the last iteration of
+            # epoch e prefetches sigma(q, p) = q — exactly epoch e+1's
+            # first block — so one stage(q) primes the whole chunk
+            carry0 = (w_blk, gw_blk, alpha_q, ga_q, stage(q))
+            (w_blk, gw_blk, alpha_q, ga_q, _), _ = jax.lax.scan(
+                cyclic_epoch_pipelined, carry0, (etas, perms))
+        else:
+            epoch = cyclic_epoch if ring else shuffle_epoch
+            (w_blk, gw_blk, alpha_q, ga_q), _ = jax.lax.scan(
+                epoch, (w_blk, gw_blk, alpha_q, ga_q), (etas, perms))
         return (w_blk[None], gw_blk[None], alpha_q[None], ga_q[None])
 
     sharded = shard_map(
@@ -157,6 +218,140 @@ def _epoch_shardmap(mesh: Mesh, p: int, db: int, loss_name: str,
     return jax.jit(sharded, donate_argnums=donate)
 
 
+def _p2p_routes(perm_e: np.ndarray):
+    """Static ppermute routing for one epoch's (p, p) permutation
+    ``perm_e[r, q]`` = block device q consumes at inner iteration r, given
+    the epoch-start invariant that device q holds block q.
+
+    Returns ``p + 1`` source→target pair lists, indexed exactly like the
+    all-gather path's ``fetch(c, r_next)``: entry ``r_next`` moves each
+    block from its holder BEFORE inner iteration ``r_next`` straight to
+    its ``r_next``-consumer (the schedule's inverse permutation names the
+    holder), and entry ``p`` is the end-of-epoch restore that sends every
+    block home.  A ``None`` entry marks an identity move (elided).
+    """
+    perm = np.asarray(perm_e)
+    p = perm.shape[-1]
+    # own[r] = holder map before inner iteration r; own[p] = after the last
+    own = np.concatenate([np.arange(p)[None, :], perm], axis=0)
+    inv = np.argsort(own, axis=-1)          # inv[r, b] = holder of block b
+    qs = np.arange(p)
+    routes = []
+    for r_next in range(p + 1):
+        want = perm[r_next] if r_next < p else qs
+        src = inv[r_next][want]             # src[t] sends to device t
+        if np.array_equal(src, qs):
+            routes.append(None)
+        else:
+            routes.append([(int(src[t]), t) for t in range(p)])
+    return routes
+
+
+def _epoch_shardmap_p2p(mesh: Mesh, p: int, db: int, loss_name: str,
+                        reg_name: str, use_adagrad: bool, row_batches: int,
+                        perms_host: np.ndarray, *,
+                        backend_name: str = "dense_jnp", n_data: int = 1):
+    """The point-to-point twin of ``_epoch_shardmap(ring=False)``: the
+    chunk's permutations are ALSO host values here, so every block move
+    compiles to a static-pair ``ppermute`` — each device receives exactly
+    the O(db) block it consumes next, instead of the all-gather path's
+    O(p·db) bytes.  ``(w, gw)`` travel as one stacked buffer (one
+    rendezvous per move) and identity moves are elided.
+
+    The body is the all-gather ``shuffle_epoch`` verbatim except inside
+    ``fetch``: the gather + argsort + select becomes a ``lax.switch`` over
+    ``r_next`` whose branches are the epoch's static ppermutes
+    (``_p2p_routes``).  Keeping the surrounding program shape identical —
+    same fori_loop, same traced ``perms`` operand, same tile-step code —
+    keeps the compiled arithmetic identical too: values are bit-identical
+    to the all-gather path, only the transport differs.
+
+    When all epochs in the chunk share one permutation (lpt broadcasts a
+    single Latin square; fixed schedules usually too) one traced epoch
+    body scans over the whole chunk; otherwise the chunk unrolls per
+    epoch (callers memoize on the permutation values).
+    """
+    backend = get_backend(backend_name)
+    perms_host = np.asarray(perms_host)
+    n = perms_host.shape[0]
+    uniform = n > 0 and bool((perms_host == perms_host[0]).all())
+    routes = [_p2p_routes(perms_host[e]) for e in range(1 if uniform else n)]
+
+    def epochs_body(*args):
+        arrays = args[:n_data]
+        (yq, rnq, tcnq, trnq, col_nnz, w_blk, gw_blk, alpha_q, ga_q,
+         etas, perms, lam, m, w_lo, w_hi) = args[n_data:]
+        arrays_q = tuple(a[0] for a in arrays)
+        q = jax.lax.axis_index("dso")
+        yq, rnq = yq[0], rnq[0]
+        tcnq, trnq = tcnq[0], trnq[0]
+        w_blk, gw_blk = w_blk[0], gw_blk[0]
+        alpha_q, ga_q = alpha_q[0], ga_q[0]
+        meta = (lam, m, loss_name, reg_name, use_adagrad, w_lo, w_hi)
+
+        def step_block(blk_id, w_b, gw_b, alpha_q, ga_q, eta_t):
+            return inner_iteration(backend, meta, col_nnz, blk_id, w_b,
+                                   gw_b, alpha_q, ga_q, arrays_q, yq, rnq,
+                                   tcnq, trnq, eta_t, row_batches)
+
+        def make_epoch(route):
+            def fetch(c, r_next):
+                # the p2p fetch: one static ppermute, switch-dispatched on
+                # r_next (every device branches the same way — r_next is
+                # uniform across the mesh, so the collectives line up)
+                w_blk, gw_blk = c
+                branches = [
+                    (lambda b: b) if prs is None
+                    else (lambda b, prs=prs:
+                          jax.lax.ppermute(b, "dso", prs))
+                    for prs in route
+                ]
+                buf = jax.lax.switch(r_next, branches,
+                                     jnp.stack([w_blk, gw_blk]))
+                return buf[0], buf[1]
+
+            def epoch(carry, xs):
+                eta_t, perm_e = xs
+
+                def inner(r, c):
+                    w_blk, gw_blk, alpha_q, ga_q = c
+                    w_blk, gw_blk = fetch((w_blk, gw_blk), r)
+                    blk_id = perm_e[r, q]
+                    w_blk, alpha_q, gw_blk, ga_q = step_block(
+                        blk_id, w_blk, gw_blk, alpha_q, ga_q, eta_t)
+                    return (w_blk, gw_blk, alpha_q, ga_q)
+
+                carry = jax.lax.fori_loop(0, p, inner, carry)
+                # restore the epoch-start invariant: device q holds block q
+                w_blk, gw_blk, alpha_q, ga_q = carry
+                w_blk, gw_blk = fetch((w_blk, gw_blk), jnp.int32(p))
+                return (w_blk, gw_blk, alpha_q, ga_q), None
+
+            return epoch
+
+        carry = (w_blk, gw_blk, alpha_q, ga_q)
+        if uniform:
+            # one traced epoch body reused for every epoch in the chunk
+            carry, _ = jax.lax.scan(make_epoch(routes[0]), carry,
+                                    (etas, perms))
+        else:
+            for e in range(n):
+                carry, _ = make_epoch(routes[e])(
+                    carry, (etas[e], perms[e]))
+        w_blk, gw_blk, alpha_q, ga_q = carry
+        return (w_blk[None], gw_blk[None], alpha_q[None], ga_q[None])
+
+    sharded = shard_map(
+        epochs_body, mesh=mesh,
+        in_specs=(P("dso"),) * (n_data + 4) + (P(None),)
+        + (P("dso"),) * 4 + (P(), P(), P(), P(), P(), P()),
+        out_specs=(P("dso"), P("dso"), P("dso"), P("dso")),
+        check_rep="pallas" not in backend_name,
+    )
+    donate = tuple(range(n_data + 5, n_data + 9))   # w, gw, alpha, ga
+    return jax.jit(sharded, donate_argnums=donate)
+
+
 class ShardedDSO:
     """Driver object holding device-placed state for Algorithm 1.
 
@@ -166,12 +361,23 @@ class ShardedDSO:
     ``run_dso_grid``); ``schedule`` accepts any engine schedule — "cyclic"
     keeps the paper's ring, "random" is the NOMAD-style shuffle, "lpt"
     load-balances the per-tile nnz across workers per inner iteration.
+
+    ``overlap=True`` (default) runs the cyclic ring as the double-buffered
+    pipeline (staged prefetch + one fused ppermute per inner iteration);
+    ``overlap=False`` keeps the legacy serial-shift body.  ``comm``
+    selects the transport for general-permutation schedules: "p2p"
+    (default via "auto") compiles each chunk's permutations into static
+    point-to-point ppermute pairs — O(db) bytes per device per move —
+    while "allgather" keeps the legacy all-gather+select path.  All four
+    combinations produce bit-identical trajectories; the knobs only move
+    communication off (or back onto) the critical path.
     """
 
     def __init__(self, prob: Problem, mesh: Mesh | None = None,
                  row_batches: int = 1, use_adagrad: bool = True,
                  alpha0: float = 0.0, impl: str = "jnp",
-                 schedule: str = "cyclic", seed: int = 0, obs=None):
+                 schedule: str = "cyclic", seed: int = 0, obs=None,
+                 overlap: bool = True, comm: str = "auto"):
         self.prob = prob
         # observability seam (duck-typed recorder or None; never required):
         # metrics() mirrors its eval scalars into obs gauges when attached
@@ -220,10 +426,38 @@ class ShardedDSO:
         # memory stays one grid (nnz-proportional on the sparse path)
         del data, tile, state
         self.epochs_done = 0
-        self._epochs_fn = _epoch_shardmap(
+        if comm not in ("auto", "p2p", "allgather"):
+            raise ValueError(
+                f"comm must be 'auto', 'p2p' or 'allgather', got {comm!r}")
+        self.overlap = bool(overlap)
+        self.comm = comm
+        # the ring schedule is already point-to-point; p2p routing only
+        # replaces the general-permutation all-gather path
+        self._p2p = (not self.schedule.ring) and comm in ("auto", "p2p")
+        self._n_data = n_data
+        self._p2p_cache = {}   # perms bytes -> jitted chunk fn (LRU)
+        self._epochs_fn = (None if self._p2p else _epoch_shardmap(
             self.mesh, self.p, self.db, prob.loss_name, prob.reg_name,
             use_adagrad, row_batches, backend_name=self.backend.name,
-            ring=self.schedule.ring, n_data=n_data)
+            ring=self.schedule.ring, n_data=n_data, overlap=self.overlap))
+
+    def _p2p_fn(self, perms_host: np.ndarray):
+        """The jitted p2p chunk function for these host permutations,
+        memoized on their values (an lpt/fixed schedule re-draws the same
+        square every chunk — one trace serves the whole run); LRU-capped
+        so a random schedule cannot grow the cache without bound."""
+        key = (perms_host.shape, perms_host.tobytes())
+        fn = self._p2p_cache.pop(key, None)
+        if fn is None:
+            fn = _epoch_shardmap_p2p(
+                self.mesh, self.p, self.db, self.prob.loss_name,
+                self.prob.reg_name, self.use_adagrad, self.row_batches,
+                perms_host, backend_name=self.backend.name,
+                n_data=self._n_data)
+        self._p2p_cache[key] = fn       # re-insert: most-recently-used
+        while len(self._p2p_cache) > 8:
+            self._p2p_cache.pop(next(iter(self._p2p_cache)))
+        return fn
 
     def run_epochs(self, n: int, eta0: float = 0.1):
         """Run ``n`` epochs in one donated-scan dispatch."""
@@ -233,7 +467,9 @@ class ShardedDSO:
                else {})
         self.key, perms = self.schedule.draw(self.key, self.epochs_done, n,
                                              self.p, **ctx)
-        self.w, self.gw, self.alpha, self.ga = self._epochs_fn(
+        fn = (self._p2p_fn(np.asarray(perms)) if self._p2p
+              else self._epochs_fn)
+        self.w, self.gw, self.alpha, self.ga = fn(
             *self._data_shards, self.yg, self.rng_, self.tcn, self.trn,
             self.col_nnz, self.w, self.gw, self.alpha, self.ga, etas,
             perms, self.lam, self.m_f, self.w_lo, self.w_hi)

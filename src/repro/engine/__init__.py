@@ -54,10 +54,15 @@ code-path *product* into a *sum*:
             |                       |                       |
         solve()                solve_serial()          ShardedDSO
      (grid simulator,        (paper-exact p=1         (shard_map ring;
-      cyclic/random/fixed     pointwise reference)     ppermute for the
-      schedules, out-of-core                           cyclic schedule,
-      grids, eval hooks)                               all-gather for
-            |                       |                  general perms)
+      cyclic/random/fixed     pointwise reference)     double-buffered
+      schedules, out-of-core                           pipelined cyclic:
+      grids, eval hooks)                               stage_block prefetch
+            |                       |                  + ONE fused (w, gw)
+            |                       |                  ppermute per step;
+            |                       |                  static ppermute-pair
+            |                       |                  p2p routes for
+            |                       |                  general perms,
+            |                       |                  all-gather fallback)
             +-----------+-----------+-----------+------+
                         v
                   SolveResult(w, alpha, history, state)
@@ -95,6 +100,10 @@ code-path *product* into a *sum*:
    |  snapshot.py (flat-npz codec + per-leaf CRC32 / file digest +     |
    |       |       SnapshotStore: latest-VALID-wins, quarantine of     |
    |       |       corrupt files, keep_last/keep_every retention GC;   |
+   |       |       async_writes=True: save() fetches to host and       |
+   |       |       returns, the npz + atomic rename drain on a writer  |
+   |       |       thread; flush() is the durability barrier and all   |
+   |       |       read paths barrier automatically;                   |
    |       |       the one codec — training/checkpoint.py delegates)   |
    |       +-> health.py     all_finite probe + objective-regression   |
    |       |                 monitor -> HealthGuard rollback-with-eta  |
@@ -102,9 +111,11 @@ code-path *product* into a *sum*:
    |       |                 straggler EWMA; typed LedgerEvent ledger  |
    |       +-> resume.py     solve(..., init=snap): bit-identical      |
    |       |                 (schedules.draw chunk-invariance)         |
-   |       +-> reshard.py    p -> p' live resharding: grid_to_csr      |
-   |       |                 re-blocks the packed tiles, the tilers    |
-   |       |                 re-tile, reshard_state repartitions       |
+   |       +-> reshard.py    p -> p' live resharding: direct tile->    |
+   |       |                 tile re-blocking when p/p' divide evenly  |
+   |       |                 (regrid_direct — no CSR round-trip),      |
+   |       |                 grid_to_csr + the tilers otherwise;       |
+   |       |                 reshard_state repartitions                |
    |       +-> supervisor.py crash/nan/corrupt/straggler fault plans   |
    |                         over ShardedDSO, auto-resume from store,  |
    |                         wall-clock replanning (lpt -> reshard),   |
@@ -131,7 +142,7 @@ from repro.engine.data import (DSOState, GridData, TileData, as_tile_data,
                                make_grid_data, prob_meta, tile_dims)
 from repro.engine.driver import (SolveResult, inner_iteration, run_epoch,
                                  run_epochs, solve, solve_serial,
-                                 warn_ragged_eval)
+                                 stage_block, staged_step, warn_ragged_eval)
 from repro.engine.evaluate import (make_csr_primal_eval, pd_gap_eval_hook,
                                    problem_eval_hook)
 from repro.engine.schedules import (SCHEDULES, Schedule, cyclic_perms,
@@ -146,7 +157,8 @@ __all__ = [
     "eta_schedule", "gather_alpha", "gather_w", "init_state",
     "init_state_data", "make_grid_data", "prob_meta", "tile_dims",
     "SolveResult", "inner_iteration", "run_epoch", "run_epochs", "solve",
-    "solve_serial", "warn_ragged_eval", "make_csr_primal_eval",
+    "solve_serial", "stage_block", "staged_step", "warn_ragged_eval",
+    "make_csr_primal_eval",
     "pd_gap_eval_hook", "problem_eval_hook",
     "SCHEDULES", "Schedule", "cyclic_perms",
     "fixed_schedule", "get_schedule", "lpt_latin_square",

@@ -74,6 +74,42 @@ def resolve_backend_and_build(prob, impl, p: int, row_batches: int):
 # ----------------------------------------------------- inner iteration --
 
 
+def stage_block(backend: TileBackend, col_nnz, blk_id, arrays_q, y_q,
+                tcn_q, trn_q, row_batches: int, db: int):
+    """Stage everything about the active block that depends ONLY on its id:
+    the per-block sparsity-statistic slices.  None of this depends on the
+    travelling ``(w, gw)`` block, so the double-buffered sharded driver
+    computes the stage for inner iteration t+1 while iteration t's
+    ``ppermute`` is still in flight — the prefetch half of the pipeline.
+
+    The data payload slice is NOT staged: it is re-derived from the block
+    id at consume time (``staged_step``), keeping the staged carry O(tile
+    statistics) — and keeping the compiled tile-step arithmetic literally
+    identical to the serial driver's, the bit-identity contract.
+    """
+    blk_cols = blk_id * db
+    col_nnz_blk = jax.lax.dynamic_slice(col_nnz, (blk_cols,), (db,))
+    mb = y_q.shape[0]
+    trn_blk = jax.lax.dynamic_slice(trn_q, (blk_id, 0), (1, mb))[0]
+    tcn_blk = jax.lax.dynamic_slice(tcn_q, (0, blk_cols), (row_batches, db))
+    return (blk_id, col_nnz_blk, trn_blk, tcn_blk)
+
+
+def staged_step(backend: TileBackend, meta, staged, w_blk, gw_blk, alpha_q,
+                ga_q, arrays_q, y_q, rn_q, eta_t, row_batches: int):
+    """Consume a ``stage_block`` tuple: select the staged block's payload
+    and run all its tile steps on the (now-arrived) travelling ``(w, gw)``
+    block.  The ops are exactly ``inner_iteration``'s — same slices, same
+    kernel — so the pipelined driver's trajectory is bit-identical to the
+    serial one."""
+    blk_id, col_nnz_blk, trn_blk, tcn_blk = staged
+    db = w_blk.shape[0]
+    block = backend.select_block(arrays_q, blk_id, blk_id * db, db)
+    return backend.block_step(meta, block, y_q, w_blk, alpha_q, gw_blk,
+                              ga_q, rn_q, col_nnz_blk, trn_blk, tcn_blk,
+                              eta_t, row_batches)
+
+
 def inner_iteration(backend: TileBackend, meta, col_nnz, blk_id, w_blk,
                     gw_blk, alpha_q, ga_q, arrays_q, y_q, rn_q, tcn_q, trn_q,
                     eta_t, row_batches: int):
@@ -85,17 +121,14 @@ def inner_iteration(backend: TileBackend, meta, col_nnz, blk_id, w_blk,
     ``tcn_q`` (row_batches, d_pad) / ``trn_q`` (p, mb) are its precomputed
     tile sparsity statistics.  The block-level slicing is shared here; the
     layout payload slice and the kernel are the backend's two hooks.
+    Composed as ``stage_block`` (the block-id-only slices the pipelined
+    sharded driver prefetches) + ``staged_step`` (the consume).
     """
     db = w_blk.shape[0]
-    blk_cols = blk_id * db
-    col_nnz_blk = jax.lax.dynamic_slice(col_nnz, (blk_cols,), (db,))
-    mb = y_q.shape[0]
-    trn_blk = jax.lax.dynamic_slice(trn_q, (blk_id, 0), (1, mb))[0]
-    tcn_blk = jax.lax.dynamic_slice(tcn_q, (0, blk_cols), (row_batches, db))
-    block = backend.select_block(arrays_q, blk_id, blk_cols, db)
-    return backend.block_step(meta, block, y_q, w_blk, alpha_q, gw_blk,
-                              ga_q, rn_q, col_nnz_blk, trn_blk, tcn_blk,
-                              eta_t, row_batches)
+    staged = stage_block(backend, col_nnz, blk_id, arrays_q, y_q, tcn_q,
+                         trn_q, row_batches, db)
+    return staged_step(backend, meta, staged, w_blk, gw_blk, alpha_q, ga_q,
+                       arrays_q, y_q, rn_q, eta_t, row_batches)
 
 
 # ---------------------------------------------------------- epoch body --
@@ -507,6 +540,11 @@ def solve(source, *, backend="auto", schedule="cyclic", p: int = 4,
                        history=list(history), config=cfg)
             if span is not None:
                 span.__exit__(None, None, None)
+    if store is not None and hasattr(store, "flush"):
+        # async-write stores overlap serialization with the chunk loop;
+        # drain (and surface any write failure) before declaring the run
+        # durable
+        store.flush()
     return SolveResult(gather_w(state, d), gather_alpha(state, m), history,
                        state)
 

@@ -42,6 +42,20 @@ deterministic resume — keep the per-epoch key discipline when adding new
 schedules.  (Replaying a "fixed" schedule across a resume needs the
 caller to pass the same ``fixed_schedule(perms)`` object again: the
 snapshot config records only the name.)
+
+Overlap invariant (the pipelined sharded driver, ``core.dso_dist`` with
+``overlap=True``, relies on this alongside the resume contract): the
+block CONSUMED by processor q at inner iteration r of epoch e is always
+``perms[e, r, q]`` — prefetch depth never changes WHAT is computed, only
+when the block's statistics are staged.  The double-buffered cyclic
+epoch stages block sigma(q, r+1) while the fused (w, gw) ppermute for
+step r is in flight, threading the staged slot across epoch and chunk
+boundaries (the last iteration of epoch e prefetches epoch e+1's first
+block, sigma(q, p) = q); the p2p transport likewise fetches along the
+inverse permutation before consuming ``perms[e, r, q]``.  Trajectories
+are therefore bit-identical to the serial-shift driver under ANY
+schedule drawn here — a schedule change affects the pipeline only
+through the permutation stream itself.
 """
 
 from __future__ import annotations

@@ -16,7 +16,15 @@ elastic.  Data flow:
         |   training/checkpoint.py delegates to) + per-leaf CRC32 and a
         |   whole-file digest (verify_pytree) + SnapshotStore
         |   (dso_<epochs_done>.npz, latest-VALID-wins: corrupt files are
-        |   quarantined; retention GC via keep_last / keep_every pinning)
+        |   quarantined; retention GC via keep_last / keep_every pinning).
+        |   async_writes=True moves the npz serialization + atomic rename
+        |   to a single background writer thread: save() blocks only for
+        |   the device->host fetch (the donation hazard) and the epoch
+        |   loop overlaps the disk write; flush() is the durability
+        |   barrier (re-raising writer errors), every read path
+        |   (load/latest/epochs/verify/quarantine) barriers automatically,
+        |   and a SIGKILL mid-write leaves only an invisible .tmp file —
+        |   latest-VALID-wins is unchanged
         |
         ├──> health.py      all_finite (jitted probe) + objective-
         |                   regression monitor; HealthGuard = the rollback
@@ -31,12 +39,18 @@ elastic.  Data flow:
         |                   — bit-identical to the uninterrupted run
         |                   (draw's chunk-invariance contract)
         |
-        ├──> reshard.py     p -> p': sparse.format.grid_to_csr re-blocks
-        |                   the packed tiles to the global CSR, the normal
-        |                   tilers re-tile at p' (statistics recomputed),
-        |                   reshard_state repartitions the blocked state —
-        |                   same iterate, new grid.  Exact at p' == p;
-        |                   a different serializable execution otherwise.
+        ├──> reshard.py     p -> p': when the padded sizes agree and p/p'
+        |                   divide evenly, sparse.format.regrid_direct
+        |                   re-blocks tile->tile (merge/split of shard
+        |                   entry lists through the SAME addressing pass
+        |                   and packers a fresh ingest would run — no
+        |                   global CSR, no lexsort); otherwise
+        |                   grid_to_csr + the normal tilers re-tile at p'
+        |                   (both paths equal field-for-field, pinned by
+        |                   tests).  reshard_state repartitions the
+        |                   blocked state — same iterate, new grid.
+        |                   Exact at p' == p; a different serializable
+        |                   execution otherwise.
         |
         └──> supervisor.py  Supervisor(store, fault_plan).run_sharded():
                             chunks ShardedDSO.run_epochs between

@@ -5,10 +5,15 @@ layout ``(p, p, mb, K)``, the per-tile nnz statistics, and the blocked
 state ``(p, db)`` / ``(p, mb)``.  Resharding rebuilds all of it for p'
 WITHOUT touching raw data:
 
-* **data** — ``sparse.format.grid_to_csr`` re-blocks the packed tiles back
-  into the global CSR (uniform, bucketed, and dense layouts), and the
-  ordinary tilers (the ``_tile_csr`` addressing pass) re-tile it at p',
-  recomputing every per-tile statistic for the new blocking;
+* **data** — when the padded sizes agree and p/p' divide evenly,
+  ``sparse.format.regrid_direct`` re-blocks the packed tiles tile->tile
+  (merge: concatenate r = p/p' old shards; split: contiguous row slices),
+  feeding the remapped entries through the same addressing pass and
+  packers a fresh ingest at p' would run — no global CSR, no (row, col)
+  lexsort.  Otherwise ``sparse.format.grid_to_csr`` rebuilds the global
+  CSR (uniform, bucketed, and dense layouts) and the ordinary tilers
+  re-tile it at p'.  Both paths produce identical grids (pinned by
+  tests), so the choice is purely a round-trip-cost optimisation;
 * **state** — ``reshard_state`` repartitions w/alpha and their AdaGrad
   accumulators: gather to the real (m,)/(d,) coordinates (dropping the old
   grid's padding), re-pad for p', re-block.  Padding positions restart at
@@ -35,7 +40,8 @@ import jax.numpy as jnp
 from repro.engine.backends import get_backend
 from repro.engine.data import DSOState, make_grid_data
 from repro.sparse.format import (bucketed_grid_from_csr, grid_to_csr,
-                                 pad_to_multiple, sparse_grid_from_csr)
+                                 pad_to_multiple, regrid_direct,
+                                 sparse_grid_from_csr)
 from repro.runtime.snapshot import DSOSnapshot
 
 
@@ -66,14 +72,22 @@ def retile(data, m: int, d: int, p_new: int, *, row_batches: int = 1,
 
     ``layout`` defaults to the input's ("dense" rebuilds a dense
     ``GridData``; "sparse"/"bucketed" go through the block-ELL tilers).
-    The CSR round-trip is exact (``grid_to_csr``), so the only thing that
-    changes is the blocking — statistics are recomputed by the same
-    addressing pass a fresh ingest at p' would run.
+    Packed layouts take the direct tile->tile path
+    (``sparse.format.regrid_direct``) when the padded sizes agree and
+    p/p' divide evenly; otherwise (and for dense) the exact CSR
+    round-trip (``grid_to_csr``) re-blocks — either way the statistics
+    are recomputed by the same addressing pass a fresh ingest at p'
+    would run, and the two paths agree field-for-field.
     """
-    csr, y = grid_to_csr(data, m, d)
     if layout is None:
         layout = ("dense" if hasattr(data, "Xg")
                   else "bucketed" if hasattr(data, "bucket_id") else "sparse")
+    if layout in ("sparse", "bucketed"):
+        direct = regrid_direct(data, m, d, p_new, row_batches,
+                               layout=layout)
+        if direct is not None:
+            return direct
+    csr, y = grid_to_csr(data, m, d)
     if layout == "sparse":
         return sparse_grid_from_csr(csr, y, p_new, row_batches)
     if layout == "bucketed":

@@ -33,6 +33,11 @@ Two layers:
   ``keep_every=n`` pinning (epochs divisible by n are never collected —
   the keep-every-nth anchor trail for post-hoc analysis); the default
   ``keep_last=None`` keeps everything, matching the PR-5 behavior.
+  ``SnapshotStore(async_writes=True)`` moves serialization + rename + GC
+  onto a background writer thread, overlapped with the next epoch chunk
+  (the state pytree is device-fetched synchronously at the boundary);
+  ``flush()`` is the write barrier and every read path takes it first,
+  so latest-valid-wins is unchanged.
 
 A snapshot is taken only at epoch boundaries (the inner-iteration cursor
 is always 0 there; it is still recorded in ``config`` for forward
@@ -47,7 +52,9 @@ from __future__ import annotations
 import json
 import os
 import re
+import threading
 import zlib
+from concurrent.futures import ThreadPoolExecutor
 from typing import NamedTuple
 
 import jax
@@ -289,12 +296,25 @@ class SnapshotStore:
     ``save`` runs retention GC afterwards: the newest ``keep_last``
     snapshots survive, plus every epoch divisible by ``keep_every``
     (pinned anchors).  ``keep_last=None`` (default) keeps everything.
+
+    ``async_writes=True`` overlaps the npz serialization with the caller's
+    next epoch chunk: ``save`` fetches the state pytree to host
+    SYNCHRONOUSLY (the caller is about to donate those device buffers back
+    into the epoch scan), then hands serialization + atomic rename + GC to
+    a single background writer thread.  ``flush()`` is the barrier —
+    it drains pending writes and re-raises the first failure — and every
+    read path (``epochs`` / ``verify`` / ``load``) flushes first, so
+    latest-VALID-wins semantics are exactly the synchronous ones: a reader
+    can never race a half-written latest.  A crash mid-background-write
+    leaves only a ``.tmp`` file the name pattern never matches — the older
+    snapshot stays the valid latest.
     """
 
     _PAT = re.compile(r"dso_(\d+)\.npz$")
 
     def __init__(self, directory: str, *, keep_last: int | None = None,
-                 keep_every: int | None = None):
+                 keep_every: int | None = None,
+                 async_writes: bool = False):
         if keep_last is not None and keep_last < 1:
             raise ValueError(f"keep_last must be >= 1, got {keep_last}")
         if keep_every is not None and keep_every < 1:
@@ -302,10 +322,46 @@ class SnapshotStore:
         self.directory = directory
         self.keep_last = keep_last
         self.keep_every = keep_every
+        self.async_writes = bool(async_writes)
         self.quarantined: list = []   # (epochs_done, reason) in move order
+        self._pool: ThreadPoolExecutor | None = None
+        self._pending: list = []      # futures of submitted writes
+        self._worker_thread = None    # set by the pool initializer
 
     def path(self, epochs_done: int) -> str:
         return os.path.join(self.directory, f"dso_{epochs_done:08d}.npz")
+
+    # ------------------------------------------------- async write plumbing
+    def _mark_worker(self):
+        self._worker_thread = threading.current_thread()
+
+    def _write(self, path: str, snapshot: DSOSnapshot) -> str:
+        out = save_snapshot(path, snapshot)
+        self.gc()
+        return out
+
+    def flush(self):
+        """Barrier for async writes: wait until every pending background
+        write has hit the disk (atomic rename included), re-raising the
+        first write failure.  A no-op in synchronous mode."""
+        if not self._pending:
+            return
+        pending, self._pending = self._pending, []
+        first_err = None
+        for fut in pending:
+            try:
+                fut.result()
+            except Exception as e:              # noqa: BLE001
+                first_err = first_err or e
+        if first_err is not None:
+            raise first_err
+
+    def _barrier(self):
+        # Read paths flush pending writes first — EXCEPT on the writer
+        # thread itself (its gc() lists the directory mid-write; joining
+        # its own future would deadlock).
+        if threading.current_thread() is not self._worker_thread:
+            self.flush()
 
     def save(self, *, snapshot: DSOSnapshot | None = None, state=None,
              key=None, epochs_done: int = 0, history=(),
@@ -316,11 +372,26 @@ class SnapshotStore:
                                    history=tuple(history),
                                    config=dict(config or {}))
         os.makedirs(self.directory, exist_ok=True)
-        out = save_snapshot(self.path(snapshot.epochs_done), snapshot)
-        self.gc()
-        return out
+        path = self.path(snapshot.epochs_done)
+        if not self.async_writes:
+            out = save_snapshot(path, snapshot)
+            self.gc()
+            return out
+        # Device-fetch NOW: the epoch driver donates these buffers back
+        # into the scan right after save() returns — a deferred fetch
+        # would read deleted memory.  Serialization overlaps the chunk.
+        snapshot = snapshot._replace(
+            state=jax.tree_util.tree_map(np.asarray, snapshot.state),
+            key=np.asarray(snapshot.key))
+        if self._pool is None:
+            self._pool = ThreadPoolExecutor(
+                max_workers=1, thread_name_prefix="snapshot-writer",
+                initializer=self._mark_worker)
+        self._pending.append(self._pool.submit(self._write, path, snapshot))
+        return path
 
     def epochs(self) -> list:
+        self._barrier()
         if not os.path.isdir(self.directory):
             return []
         return sorted(int(m.group(1)) for f in os.listdir(self.directory)
@@ -333,11 +404,13 @@ class SnapshotStore:
     def verify(self, epochs_done: int) -> str:
         """``verify_pytree`` of one snapshot: "verified" | "legacy" or
         raises ``SnapshotIntegrityError``."""
+        self._barrier()
         return verify_pytree(self.path(epochs_done))
 
     def quarantine(self, epochs_done: int, reason: str = "") -> str:
         """Move a corrupt snapshot into ``quarantine/`` (kept for forensics
         rather than deleted) and record it.  Returns the new path."""
+        self._barrier()   # the file to move may still be an in-flight write
         qdir = os.path.join(self.directory, "quarantine")
         os.makedirs(qdir, exist_ok=True)
         src = self.path(epochs_done)

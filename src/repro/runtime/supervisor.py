@@ -228,6 +228,17 @@ class Supervisor:
                 and opt.epochs_done > self._last_restore):
             self._restore_streak = 0   # progress past the restore point
 
+    def _flush_store(self) -> None:
+        """Barrier for async-write stores before any read of the store:
+        restore and reshard must never race a half-written latest.  The
+        store's own read paths barrier too (``SnapshotStore._barrier``);
+        this keeps the contract explicit at every supervisor read site and
+        covers duck-typed stores that expose ``flush`` without auto-
+        barriered reads."""
+        flush = getattr(self.store, "flush", None)
+        if flush is not None:
+            flush()
+
     def _adopt(self, opt: ShardedDSO, snap) -> None:
         """Restore a snapshot into ``opt``, resharding if the grids differ
         (resume on a resized cluster)."""
@@ -251,6 +262,7 @@ class Supervisor:
         recovery path behind crashes AND failed health checks."""
         at = int(opt.epochs_done)
         span = self._span("restore", epoch=at, failure=failure or kind)
+        self._flush_store()            # pending async writes land first
         try:
             snap = self.store.load()   # latest-VALID-wins, quarantines
         except FileNotFoundError as e:
@@ -317,6 +329,7 @@ class Supervisor:
                 detail=dict(relief=self._relief)))
         elif self._replan_stage == 1:
             p_new = self.reshard_to or max(1, opt.p // 2)
+            self._flush_store()
             if self.store.latest() != t:
                 self._save(opt)       # live reshard: nothing is lost
             p_old = opt.p
@@ -339,6 +352,7 @@ class Supervisor:
         if ev.kind == "crash":
             return self._recover(opt, kind="crash")
         if ev.kind == "reshard":
+            self._flush_store()
             if self.store.latest() != t:
                 self._save(opt)       # live reshard: nothing is lost
             p_old = opt.p
@@ -366,6 +380,7 @@ class Supervisor:
             # chaos: bit-flip one byte INSIDE the first leaf's npy payload
             # (zip metadata has semantically dead bytes a flip would not
             # corrupt) — latest-valid-wins must route around the file
+            self._flush_store()        # the byte to flip must be on disk
             ep = self.store.latest()
             path = self.store.path(ep)
             with open(path, "r+b") as f:
@@ -428,6 +443,7 @@ class Supervisor:
                 nnz=float(np.asarray(prob.row_nnz).sum()),
                 payload_bytes=float(sum(getattr(a, "nbytes", 0)
                                         for a in opt._data_shards)))
+        self._flush_store()            # a prior run may still be writing
         if self.store.latest() is not None:
             snap = self.store.load()
             self._adopt(opt, snap)
@@ -490,4 +506,5 @@ class Supervisor:
                     opt = self._replan(opt, dso_kw)
             while pending and pending[0].epoch <= t:
                 opt = self._apply(pending.popleft(), opt, dso_kw)
+        self._flush_store()            # run is durable when we return
         return opt, self.log

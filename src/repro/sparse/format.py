@@ -343,6 +343,35 @@ class _ShardAddr(NamedTuple):
     vals: np.ndarray        # (nnz_q,) float32
 
 
+def _shard_addressing(idx, local_rows, vals, mb: int, p: int, db: int,
+                      rb: int, n_rb: int, d_pad: int):
+    """Per-shard addressing pass shared by ``_tile_csr`` and the direct
+    tile->tile reshard: given one shard's stored entries in ascending
+    (row, col) order, compute the packed ELL address of every entry plus
+    the per-tile statistics.  Returns
+    ``(addr, k_raw_q, tile_row_nnz_q, tile_col_nnz_q)``.
+    """
+    blk = idx // db
+    seg = local_rows * p + blk               # ascending: rows asc, blk asc
+    counts = np.bincount(seg, minlength=mb * p)
+    k_raw_q = counts.reshape(mb, p).max(axis=0)
+    trn_q = counts.reshape(mb, p).T.astype(np.float32)
+    starts = np.zeros(mb * p + 1, np.int64)
+    np.cumsum(counts, out=starts[1:])
+    pos = np.arange(len(seg)) - starts[seg]
+    # per-row-batch per-column counts (global column index)
+    tc_q = np.zeros((n_rb, d_pad), np.float32)
+    if idx.size:
+        batch = local_rows // rb
+        keep = batch < n_rb                  # trailing truncated rows
+        tc_q = np.bincount(batch[keep] * d_pad + idx[keep],
+                           minlength=n_rb * d_pad) \
+            .reshape(n_rb, d_pad).astype(np.float32)
+    addr = _ShardAddr(idx=idx, local_rows=local_rows, blk=blk, pos=pos,
+                      vals=vals)
+    return addr, k_raw_q, trn_q, tc_q
+
+
 def _tile_csr(csr: CSRMatrix, y, p: int, row_batches: int):
     """Layout-independent half of the grid tilers: padding, every scaling
     statistic, the per-tile raw widths, and the packed ELL address of each
@@ -379,23 +408,10 @@ def _tile_csr(csr: CSRMatrix, y, p: int, row_batches: int):
         local_rows = np.repeat(np.arange(r1 - r0, dtype=np.int64),
                                np.diff(csr.indptr[r0:r1 + 1])) \
             if r1 > r0 else np.zeros(0, np.int64)
-        blk = idx // db
-        seg = local_rows * p + blk           # ascending: rows asc, blk asc
-        counts = np.bincount(seg, minlength=mb * p)
-        k_raw[q] = counts.reshape(mb, p).max(axis=0)
-        tile_row_nnz[q] = counts.reshape(mb, p).T
-        starts = np.zeros(mb * p + 1, np.int64)
-        np.cumsum(counts, out=starts[1:])
-        pos = np.arange(len(seg)) - starts[seg]
-        addrs.append(_ShardAddr(idx=idx, local_rows=local_rows, blk=blk,
-                                pos=pos, vals=csr.values[lo:hi]))
-        # per-row-batch per-column counts (global column index)
-        if r1 > r0:
-            batch = local_rows // rb
-            keep = batch < n_rb              # trailing truncated rows
-            tc = np.bincount(batch[keep] * d_pad + idx[keep],
-                             minlength=n_rb * d_pad)
-            tile_col_nnz[q] = tc.reshape(n_rb, d_pad)
+        addr, k_raw[q], tile_row_nnz[q], tile_col_nnz[q] = \
+            _shard_addressing(idx, local_rows, csr.values[lo:hi],
+                              mb, p, db, rb, n_rb, d_pad)
+        addrs.append(addr)
 
     shared = dict(
         yg=jnp.asarray(y_pad.reshape(p, mb)),
@@ -421,7 +437,16 @@ def sparse_grid_from_csr(csr: CSRMatrix, y, p: int, row_batches: int = 1,
     layout that drops the max-K padding on skewed data.
     """
     shared, addrs = _tile_csr(csr, y, p, row_batches)
-    mb, db = shared["mb"], shared["db"]
+    return _pack_uniform(shared, addrs, k_align=k_align, pow2=pow2)
+
+
+def _pack_uniform(shared, addrs, *, k_align: int = SUBLANE,
+                  pow2: bool = False) -> SparseGridData:
+    """Scatter packed ELL addresses into the uniform max-K grid.  Shared by
+    ``sparse_grid_from_csr`` and the direct tile->tile reshard — both hand
+    it the same ``(shared, addrs)`` a fresh ``_tile_csr`` would produce, so
+    the resulting grids are equal field-for-field by construction."""
+    p, mb, db = shared["p"], shared["mb"], shared["db"]
     K = choose_k(int(shared["k_per_tile"].max()), align=k_align, pow2=pow2)
     cols_g = np.zeros((p, p, mb, K), np.int32)
     vals_g = np.zeros((p, p, mb, K), np.float32)
@@ -481,7 +506,16 @@ def bucketed_grid_from_csr(csr: CSRMatrix, y, p: int, row_batches: int = 1,
     host-side numpy.
     """
     shared, addrs = _tile_csr(csr, y, p, row_batches)
-    mb, db = shared["mb"], shared["db"]
+    return _pack_bucketed(shared, addrs, k_align=k_align,
+                          max_buckets=max_buckets)
+
+
+def _pack_bucketed(shared, addrs, *, k_align: int = SUBLANE,
+                   max_buckets: int = MAX_K_BUCKETS) -> BucketedGridData:
+    """Scatter packed ELL addresses into the K-bucketed ragged grid (+ its
+    flat chunk view).  Shared by ``bucketed_grid_from_csr`` and the direct
+    tile->tile reshard, like ``_pack_uniform``."""
+    p, mb, db = shared["p"], shared["mb"], shared["db"]
     widths, bucket_id = assign_k_buckets(shared["k_per_tile"],
                                          max_buckets=max_buckets,
                                          align=k_align)
@@ -627,6 +661,136 @@ def grid_to_csr(data, m: int, d: int):
     csr = CSRMatrix(indptr=indptr, indices=cols.astype(np.int32),
                     values=vals.astype(np.float32), shape=(m, d))
     return csr, np.asarray(data.yg).reshape(-1)[:m]
+
+
+def _grid_entries(data):
+    """Stored entries of every processor shard of a packed grid, each in
+    ascending (local row, global col) order — the exact order ``_tile_csr``
+    receives them in from a CSR.  Returns per shard
+    ``(idx, local_rows, vals)`` with ``idx`` the GLOBAL column index."""
+    p, mb, db = data.p, data.mb, data.db
+    out = []
+    if isinstance(data, SparseGridData):
+        cols_g = np.asarray(data.cols_g)
+        vals_g = np.asarray(data.vals_g)
+        for q in range(p):
+            # walk the tile cube row-major — (mb, p, K) — so nonzero emits
+            # ascending (row, block, pos) = ascending (row, col), no sort
+            vq = vals_g[q].transpose(1, 0, 2)
+            i, b, pos = np.nonzero(vq)
+            idx = b * db + cols_g[q, b, i, pos].astype(np.int64)
+            out.append((idx, i.astype(np.int64), vq[i, b, pos]))
+    elif isinstance(data, BucketedGridData):
+        bucket_id = np.asarray(data.bucket_id)
+        bucket_pos = np.asarray(data.bucket_pos)
+        for q in range(p):
+            idx_l, row_l, val_l = [], [], []
+            for b in range(p):
+                k, s = int(bucket_id[q, b]), int(bucket_pos[q, b])
+                vals = np.asarray(data.vals_b[k][q, s])
+                i, pos = np.nonzero(vals)
+                idx_l.append(b * db + np.asarray(data.cols_b[k][q, s])
+                             [i, pos].astype(np.int64))
+                row_l.append(i.astype(np.int64))
+                val_l.append(vals[i, pos])
+            idx = np.concatenate(idx_l)
+            rows = np.concatenate(row_l)
+            vals = np.concatenate(val_l)
+            # block-major -> row-major; a stable sort keeps blocks (and the
+            # ascending cols within each block) in order inside each row
+            order = np.argsort(rows, kind="stable")
+            out.append((idx[order], rows[order], vals[order]))
+    else:
+        raise TypeError(f"packed grid expected, got {type(data).__name__}")
+    return out
+
+
+def regrid_direct(data, m: int, d: int, p_new: int, row_batches: int = 1,
+                  *, layout: str | None = None, k_align: int = SUBLANE,
+                  pow2: bool = False, max_buckets: int = MAX_K_BUCKETS):
+    """Direct tile->tile re-blocking of a packed grid onto the p' grid,
+    skipping the ``grid_to_csr`` round-trip (no global CSR, no global
+    (row, col) lexsort, no indptr rebuild).
+
+    Works when the padded problem sizes agree at both blockings
+    (``pad_to_multiple(m, p) == pad_to_multiple(m, p')``, same for d) and
+    one of p, p' divides the other: then a new shard is either a
+    concatenation of r = p/p' old shards (merge) or a contiguous row slice
+    of one old shard (split), both of which preserve the ascending
+    (row, col) entry order ``_tile_csr`` relies on.  The remapped entries
+    are fed through the SAME per-shard addressing pass and packers as a
+    fresh tiling at p', so the result equals the round-trip grid
+    field-for-field by construction (pinned by tests).
+
+    Returns ``None`` when the preconditions fail — the caller
+    (``runtime.reshard.retile``) falls back to the CSR round-trip.
+    ``layout`` may differ from the input's (uniform <-> bucketed
+    conversion is free: both pack from the same addresses).
+    """
+    if not isinstance(data, (SparseGridData, BucketedGridData)):
+        return None
+    p, mb, db = data.p, data.mb, data.db
+    if (pad_to_multiple(m, p) != pad_to_multiple(m, p_new)
+            or pad_to_multiple(d, p) != pad_to_multiple(d, p_new)
+            or (p % p_new and p_new % p)):
+        return None
+    if layout is None:
+        layout = "bucketed" if isinstance(data, BucketedGridData) \
+            else "sparse"
+    if layout not in ("sparse", "bucketed"):
+        return None
+    m_pad, d_pad = p * mb, p * db
+    mb2, db2 = m_pad // p_new, d_pad // p_new
+    rb = max(1, mb2 // row_batches)
+    n_rb = mb2 // rb
+
+    old = _grid_entries(data)
+    ents = []
+    if p_new <= p:       # merge: new shard q' = old shards q'*r .. +r-1
+        r = p // p_new
+        for q2 in range(p_new):
+            grp = old[q2 * r:(q2 + 1) * r]
+            ents.append((np.concatenate([g[0] for g in grp]),
+                         np.concatenate([g[1] + j * mb
+                                         for j, g in enumerate(grp)]),
+                         np.concatenate([g[2] for g in grp])))
+    else:                # split: old shard q -> s contiguous row slices
+        s = p_new // p
+        for q in range(p):
+            idx, rows, vals = old[q]
+            cut = np.searchsorted(rows, np.arange(s + 1) * mb2)
+            for j in range(s):
+                lo, hi = cut[j], cut[j + 1]
+                ents.append((idx[lo:hi], rows[lo:hi] - j * mb2,
+                             vals[lo:hi]))
+
+    tile_row_nnz = np.zeros((p_new, p_new, mb2), np.float32)
+    tile_col_nnz = np.zeros((p_new, n_rb, d_pad), np.float32)
+    k_raw = np.zeros((p_new, p_new), np.int64)
+    addrs = []
+    for q2, (idx, rows, vals) in enumerate(ents):
+        addr, k_raw[q2], tile_row_nnz[q2], tile_col_nnz[q2] = \
+            _shard_addressing(idx, rows, vals, mb2, p_new, db2,
+                              rb, n_rb, d_pad)
+        addrs.append(addr)
+    # global row/col orders are unchanged (equal padded sizes), so the
+    # shard-shaped statistics re-block by pure reshape
+    shared = dict(
+        yg=jnp.asarray(np.asarray(data.yg).reshape(p_new, mb2)),
+        row_nnz_g=jnp.asarray(np.asarray(data.row_nnz_g)
+                              .reshape(p_new, mb2)),
+        col_nnz=jnp.asarray(np.asarray(data.col_nnz)),
+        row_valid=jnp.asarray(np.asarray(data.row_valid)
+                              .reshape(p_new, mb2)),
+        p=p_new, mb=mb2, db=db2,
+        tile_col_nnz_g=jnp.asarray(tile_col_nnz),
+        tile_row_nnz_g=jnp.asarray(tile_row_nnz),
+        k_per_tile=k_raw,
+    )
+    if layout == "sparse":
+        return _pack_uniform(shared, addrs, k_align=k_align, pow2=pow2)
+    return _pack_bucketed(shared, addrs, k_align=k_align,
+                          max_buckets=max_buckets)
 
 
 def csr_k_per_tile(csr: CSRMatrix, p: int) -> np.ndarray:
