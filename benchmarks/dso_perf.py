@@ -103,6 +103,53 @@ sys.path.insert(0, os.path.join(
 HERE = os.path.dirname(os.path.abspath(__file__))
 REPO = os.path.dirname(HERE)
 GAP_TARGET = 0.08
+HISTORY = os.path.join(HERE, "results", "history.jsonl")
+
+
+def _git_sha():
+    import subprocess
+    try:
+        out = subprocess.run(["git", "rev-parse", "--short", "HEAD"],
+                             cwd=REPO, capture_output=True, text=True,
+                             timeout=10)
+        return out.stdout.strip() or None
+    except Exception:
+        return None           # not a checkout (tarball run): sha is null
+
+
+def append_history(record: dict, *, path: str | None = None,
+                   source: str = "dso_perf") -> dict | None:
+    """Append one gate-trajectory entry to ``results/history.jsonl``.
+
+    ``record`` is a BENCH-shaped dict ({section: {..., "gate": {...}}});
+    the entry keeps each section's scalar gate metrics + pass flag, the
+    wall-time trend fields the gates ride on, a timestamp, and the git
+    sha — the bench trajectory ``report.py --section trends`` renders.
+    Returns the entry (or None when ``record`` carries no gates).
+    """
+    gates = {}
+    for section, rec in record.items():
+        g = rec.get("gate") if isinstance(rec, dict) else None
+        if not g:
+            continue
+        keep = {k: v for k, v in g.items()
+                if k == "pass" or (isinstance(v, (int, float))
+                                   and not isinstance(v, bool))}
+        gates[section] = keep
+    if not gates:
+        return None
+    entry = {
+        "ts": time.strftime("%Y-%m-%dT%H:%M:%S%z"),
+        "unix": time.time(),
+        "git_sha": _git_sha(),
+        "source": source,
+        "gates": gates,
+    }
+    path = path or HISTORY
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "a") as f:
+        f.write(json.dumps(entry) + "\n")
+    return entry
 
 
 def _run(fn, epochs, **kw):
@@ -673,19 +720,20 @@ def bench_obs_overhead(m=8192, d=2048, density=0.05, p=4, epochs=20,
     import tempfile
 
     import jax
+    import numpy as np
     from repro.data.synthetic import make_classification
     from repro.engine import solve
     from repro.engine.driver import _obs_throughput
-    from repro.obs import RunRecorder
+    from repro.obs import RunRecorder, TelemetrySpec
 
     prob = make_classification(m=m, d=d, density=density, loss="hinge",
                                lam=1e-4, seed=0)
     kw = dict(backend="dense_jnp", schedule="cyclic", p=p, eta0=0.5,
               eval_every=every, eval_hook=None, seed=0)
 
-    def run(obs):
+    def run(obs, telemetry=None):
         t0 = time.perf_counter()
-        res = solve(prob, epochs=epochs, obs=obs, **kw)
+        res = solve(prob, epochs=epochs, obs=obs, telemetry=telemetry, **kw)
         jax.block_until_ready((res.w, res.alpha))
         return (time.perf_counter() - t0) / epochs
 
@@ -694,6 +742,12 @@ def bench_obs_overhead(m=8192, d=2048, density=0.05, p=4, epochs=20,
     with tempfile.TemporaryDirectory() as td:
         path = os.path.join(td, "events.jsonl")
         with_obs = min(run(RunRecorder(path)) for _ in range(repeats))
+        # device-telemetry lane end to end: the extra scan carry + the
+        # chunk-boundary drain into the same recorder (separate warmup:
+        # run_epochs_telemetry is its own jitted program)
+        run(RunRecorder(os.path.join(td, "warm.jsonl")), TelemetrySpec())
+        with_tel = min(run(RunRecorder(os.path.join(td, "tel.jsonl")),
+                           TelemetrySpec()) for _ in range(repeats))
         # direct per-chunk recorder cost: exactly the obs work one eval
         # chunk performs (span + throughput gauges), JSONL writes included
         rec = RunRecorder(os.path.join(td, "direct.jsonl"))
@@ -707,22 +761,38 @@ def bench_obs_overhead(m=8192, d=2048, density=0.05, p=4, epochs=20,
             record(every, 0.1, 0.5)
             span.__exit__(None, None, None)
         s_obs_chunk = (time.perf_counter() - t0) / rec_repeats
+        # direct per-chunk telemetry drain: pricing + JSONL append of one
+        # drained (every, p, p, F) buffer into the same live recorder
+        tel = TelemetrySpec(obs=rec)
+        buf = np.zeros((every, p, p, len(tel.fields)), np.float32)
+        perms = np.tile(np.arange(p), (every, p, 1))
+        etas = np.full(every, 0.5, np.float32)
+        t0 = time.perf_counter()
+        for _ in range(rec_repeats):
+            tel.drain(buf, t0=0, etas=etas, perms=perms,
+                      db=-(-d // p), transport="ring", wall_s=0.1)
+        s_tel_chunk = (time.perf_counter() - t0) / rec_repeats
         rec.close()
-    ratio = s_obs_chunk / (every * base)
+    ratio = (s_obs_chunk + s_tel_chunk) / (every * base)
     out = {
         "problem": {"m": m, "d": d, "density": density, "p": p,
                     "epochs": epochs, "eval_every": every},
         "s_per_epoch": base,
         "s_per_epoch_with_recorder": with_obs,
+        "s_per_epoch_with_telemetry": with_tel,
         "s_per_obs_chunk": s_obs_chunk,
+        "s_per_telemetry_drain": s_tel_chunk,
         "end_to_end_overhead_trend": (with_obs - base) / base,
+        "end_to_end_telemetry_trend": (with_tel - base) / base,
         "gate": {
             "metric": "per-eval-chunk recorder seconds (one epoch_chunk "
                       "span + rows/s, nnz/s, packed-bytes/s, eta, epoch_s "
-                      "samples, JSONL appends to a live file) amortized "
-                      "over the chunk's epochs, as a fraction of epoch "
-                      "seconds; obs=None is a true no-op by construction "
-                      "(tests/test_obs.py pins it)",
+                      "samples, JSONL appends to a live file) PLUS the "
+                      "per-chunk telemetry drain (comm pricing + the "
+                      "telemetry event append), amortized over the "
+                      "chunk's epochs, as a fraction of epoch seconds; "
+                      "obs=None and telemetry=None are true no-ops by "
+                      "construction (tests/test_obs.py pins both)",
             "threshold": 0.02,
             "obs_overhead_per_epoch": ratio,
         },
@@ -1042,6 +1112,9 @@ def main(argv=None):
         merged.update(out)
         with open(path, "w") as f:
             json.dump(merged, f, indent=1)
+    # bench-trajectory ledger: every gated run appends its metrics, so
+    # `report.py --section trends` can flag a ratio that rots over time
+    append_history(out)
     print(json.dumps(out, indent=1))
 
 

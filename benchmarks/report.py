@@ -4,12 +4,34 @@ and render observability run-event logs into readable run reports.
     PYTHONPATH=src python -m benchmarks.report [--section dryrun|roofline]
     PYTHONPATH=src python -m benchmarks.report --section run-report \\
         --events <run-events.jsonl>
+    PYTHONPATH=src python -m benchmarks.report --section heatmap \\
+        --events <run-events.jsonl> [--p N] [--t0-min K]
+    PYTHONPATH=src python -m benchmarks.report --section drift \\
+        [--smoke] [--write-bench]
+    PYTHONPATH=src python -m benchmarks.report --section trends \\
+        [--append-bench]
 
 The run-report mode consumes the JSONL event log a ``repro.obs.RunRecorder``
 writes (``examples/elastic_dso.py --chaos`` produces one per run, uploaded
 as the CI chaos artifact) and renders: the run meta, per-chunk throughput
 (rows/s, nnz/s, packed bytes/s), the convergence trace (eval.* gauges),
 the span timing summary, and the recovery-ledger timeline.
+
+Three telemetry-era sections:
+
+  heatmap — folds the ``type="telemetry"`` events in a run log into the
+      per-(inner-iteration r, worker q) nnz-throughput matrix and the
+      per-(worker, chunk) wall-balance matrix: schedule skew and injected
+      stragglers become visually obvious ('*' marks the argmax row).
+  drift   — measures ``run_epoch`` per roofline backend at the
+      dso_overlap gate shape and reports |measured - predicted|/predicted
+      under host-calibrated roofline terms, attributing each backend's
+      wall time to compute/memory/collective (``--write-bench`` merges
+      the gated ``dso_drift`` record into BENCH_dso.json).
+  trends  — renders ``results/history.jsonl`` (the ledger every gated
+      ``dso_perf`` run appends to) and flags any gated metric that
+      regressed > 20% vs the best recorded run (direction-aware:
+      speedups regress down, overheads regress up).
 """
 
 import argparse
@@ -178,20 +200,209 @@ def run_report(events_path: str) -> str:
     return "\n".join(lines)
 
 
+def heatmap_report(events_path: str, *, p=None, t0_min=0) -> str:
+    """Render the telemetry heatmaps from one run-event log (lazily —
+    the log is streamed, never materialized)."""
+    from repro.obs import iter_events
+    from repro.obs.telemetry import render_heatmap
+
+    return render_heatmap(iter_events(events_path), p=p, t0_min=t0_min)
+
+
+# bench-gate metric directions for the trends section: which way is
+# "worse"?  Speedup/traffic ratios regress DOWN; overheads, drift, and
+# recovery costs regress UP.  Only listed metrics are regression-flagged;
+# unlisted numerics still render as trend lines.
+GATE_DIRECTIONS = {
+    "epoch_scan_vs_loop.best_speedup": "higher",
+    "dso_sparse.traffic_ratio_dense_over_sparse": "higher",
+    "dso_sparse_skewed.traffic_ratio_uniform_over_bucketed": "higher",
+    "dso_sparse_skewed.resident_ratio_uniform_over_bucketed": "higher",
+    "dso_onekernel.speedup_onekernel_over_switch": "higher",
+    "dso_overlap.speedup_pipelined_over_serial": "higher",
+    "dso_overlap.speedup_p2p_over_allgather": "higher",
+    "dso_ckpt.snapshot_overhead_per_epoch": "lower",
+    "dso_ckpt.async_snapshot_overhead_per_epoch": "lower",
+    "dso_ckpt.probe_overhead_per_epoch": "lower",
+    "obs_overhead.obs_overhead_per_epoch": "lower",
+    "dso_chaos.steady_state_wall_ratio": "lower",
+    "dso_chaos.primal_gap": "lower",
+    "dso_drift.worst_drift": "lower",
+}
+REGRESSION_TOL = 0.20
+
+
+def trends_report(history_path: str | None = None) -> str:
+    """Render the bench-gate trajectory and flag > 20% regressions vs the
+    best recorded run (direction-aware)."""
+    from benchmarks.dso_perf import HISTORY
+    from repro.obs import iter_events
+
+    path = history_path or HISTORY
+    if not os.path.exists(path):
+        return f"no bench history at {path} (run benchmarks.dso_perf, or " \
+               f"`--section trends --append-bench` to seed it from the " \
+               f"tracked BENCH_dso.json)"
+    entries = list(iter_events(path))    # same tolerant JSONL reader
+    lines = [f"bench history: {path} ({len(entries)} run(s))"]
+    series: dict = {}
+    for e in entries:
+        for section, gate in e.get("gates", {}).items():
+            for k, v in gate.items():
+                if isinstance(v, bool) or not isinstance(v, (int, float)):
+                    continue
+                if k in ("threshold", "probe_threshold", "wall_threshold",
+                         "gap_threshold", "min_skew", "min_buckets"):
+                    continue
+                series.setdefault(f"{section}.{k}", []).append(
+                    (e.get("ts"), e.get("git_sha"), float(v)))
+    lines.append("")
+    lines.append("### Gate-metric trajectories (first -> last)")
+    regressions = []
+    for name in sorted(series):
+        pts = series[name]
+        vals = [v for _, _, v in pts]
+        direction = GATE_DIRECTIONS.get(name)
+        best = (max(vals) if direction == "higher" else
+                min(vals) if direction == "lower" else None)
+        tag = ""
+        if best is not None and len(vals) >= 1:
+            latest = vals[-1]
+            regressed = (latest < best * (1 - REGRESSION_TOL)
+                         if direction == "higher"
+                         else latest > best * (1 + REGRESSION_TOL))
+            if regressed:
+                tag = "  <-- REGRESSED vs best"
+                regressions.append(
+                    f"{name}: latest {latest:.6g} vs best {best:.6g} "
+                    f"({direction} is better)")
+        span = (f"{vals[0]:.6g} -> {vals[-1]:.6g}" if len(vals) > 1
+                else f"{vals[0]:.6g}")
+        best_txt = f", best {best:.6g}" if best is not None else ""
+        lines.append(f"- {name}: {span} over {len(vals)} run(s)"
+                     f"{best_txt}{tag}")
+    fails = [(e.get("ts"), s) for e in entries
+             for s, g in e.get("gates", {}).items() if g.get("pass") is False]
+    lines.append("")
+    if regressions:
+        lines.append(f"### REGRESSIONS (> {REGRESSION_TOL:.0%} vs best)")
+        lines.extend(f"- {r}" for r in regressions)
+    else:
+        lines.append(f"no gated metric regressed > {REGRESSION_TOL:.0%} "
+                     f"vs its best recorded run")
+    if fails:
+        lines.append("### Recorded gate failures")
+        lines.extend(f"- {ts}: {s}" for ts, s in fails)
+    return "\n".join(lines)
+
+
+def drift_report(*, smoke: bool = False, write_bench: bool = False) -> str:
+    """Run the measured-vs-roofline drift attribution and render it."""
+    from benchmarks.roofline import DRIFT_SMOKE_SHAPE, drift
+
+    rec = (drift(DRIFT_SMOKE_SHAPE, epochs=2, repeats=2, gate=False)
+           if smoke else drift())
+    pb = rec["problem"]
+    lines = [f"run_epoch measured vs calibrated roofline at the "
+             f"dso_overlap gate shape (m={pb['m']} d={pb['d']} "
+             f"p={pb['p']} density={pb['density']})"
+             + (" [smoke shape — no gate]" if smoke else ""),
+             "",
+             "| backend | measured s/epoch | predicted s/epoch | drift | "
+             "compute | memory | collective | TPU-roofline dominant |",
+             "|---|---|---|---|---|---|---|---|"]
+    for b, r in rec["backends"].items():
+        a = r["attribution"]
+        if not r.get("gated", True):
+            b = f"{b} (ungated ref)"
+        lines.append(
+            f"| {b} | {r['measured_s_per_epoch']:.3e} | "
+            f"{r['predicted_s_per_epoch']:.3e} | {r['drift']:.3f} | "
+            f"{a['compute']:.2f} | {a['memory']:.2f} | "
+            f"{a['collective']:.2f} | {r['roofline_dominant']} |")
+    cal = rec["calibration"]
+    lines.append("")
+    lines.append(f"calibrated host terms: {cal['s_per_flop']:.3e} s/flop, "
+                 f"{cal['s_per_hbm_byte']:.3e} s/HBM-byte, "
+                 f"{cal['s_per_wire_byte']:.3e} s/wire-byte")
+    if "gate" in rec:
+        g = rec["gate"]
+        lines.append(f"gate: worst drift {g['worst_drift']:.3f} "
+                     f"({g['worst_backend']}) <= {g['threshold']} -> "
+                     f"{'PASS' if g['pass'] else 'FAIL'}")
+    if write_bench and not smoke:
+        here = os.path.dirname(os.path.abspath(__file__))
+        repo = os.path.dirname(here)
+        for path in (os.path.join(repo, "BENCH_dso.json"),
+                     os.path.join(here, "results", "dso_perf.json")):
+            merged = {}
+            if os.path.exists(path):
+                try:
+                    with open(path) as f:
+                        merged = json.load(f)
+                except (json.JSONDecodeError, OSError):
+                    merged = {}
+            merged["dso_drift"] = rec
+            with open(path, "w") as f:
+                json.dump(merged, f, indent=1)
+        lines.append("dso_drift merged into BENCH_dso.json + "
+                     "results/dso_perf.json")
+    return "\n".join(lines)
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--section",
-                    choices=["dryrun", "roofline", "run-report", "all"],
+                    choices=["dryrun", "roofline", "run-report", "heatmap",
+                             "drift", "trends", "all"],
                     default="all")
     ap.add_argument("--events", default=None,
                     help="run-event JSONL log (RunRecorder output) for "
-                         "--section run-report")
+                         "--section run-report / heatmap")
+    ap.add_argument("--p", type=int, default=None,
+                    help="heatmap: only fold telemetry chunks at this "
+                         "grid size (a resharding run mixes several)")
+    ap.add_argument("--t0-min", type=int, default=0,
+                    help="heatmap: ignore telemetry chunks before this "
+                         "epoch (skip warmup / pre-fault chunks)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="drift: tiny shape, no gate, nothing written")
+    ap.add_argument("--write-bench", action="store_true",
+                    help="drift: merge the gated dso_drift record into "
+                         "BENCH_dso.json + results/dso_perf.json")
+    ap.add_argument("--history", default=None,
+                    help="trends: history.jsonl path (default: "
+                         "benchmarks/results/history.jsonl)")
+    ap.add_argument("--append-bench", action="store_true",
+                    help="trends: first append the tracked BENCH_dso.json "
+                         "gates to the history (no benches re-run)")
     args = ap.parse_args()
     if args.section == "run-report":
         if args.events is None:
             ap.error("--section run-report requires --events <log.jsonl>")
         print("## §Run report\n")
         print(run_report(args.events))
+        return
+    if args.section == "heatmap":
+        if args.events is None:
+            ap.error("--section heatmap requires --events <log.jsonl>")
+        print("## §Telemetry heatmap\n")
+        print(heatmap_report(args.events, p=args.p, t0_min=args.t0_min))
+        return
+    if args.section == "drift":
+        print("## §Roofline drift\n")
+        print(drift_report(smoke=args.smoke, write_bench=args.write_bench))
+        return
+    if args.section == "trends":
+        if args.append_bench:
+            from benchmarks.dso_perf import append_history
+            bench = os.path.join(os.path.dirname(HERE), "BENCH_dso.json")
+            if os.path.exists(bench):
+                with open(bench) as f:
+                    append_history(json.load(f), path=args.history,
+                                   source="bench-record")
+        print("## §Bench trends\n")
+        print(trends_report(args.history))
         return
     if args.section in ("dryrun", "all"):
         print("## §Dry-run\n")

@@ -23,7 +23,12 @@ The chaos run also drives a ``repro.obs.RunRecorder``: every throughput
 sample, snapshot/restore/reshard span, and ledger event lands in ONE
 ordered JSONL run-event log (``--events-out``), rendered to a readable
 timeline (``--report-out``, via ``benchmarks.report run-report``) — the
-CI chaos artifact.
+CI chaos artifact.  A ``TelemetrySpec`` rides the same run: per-(epoch,
+inner iteration, worker) device buffers drain into the log as
+``telemetry`` events, and the straggler heatmap rendered from them
+(``--heatmap-out``) must pin the injected slow worker as the
+wall-balance argmax row — device-side attribution agreeing with the
+fault plan.
 
 ``--async-writes`` runs the same scenarios with
 ``SnapshotStore(async_writes=True)``: the npz serialization + atomic
@@ -55,7 +60,8 @@ import numpy as np  # noqa: E402
 
 from repro.core.dso_dist import ShardedDSO, make_dso_mesh  # noqa: E402
 from repro.data.synthetic import make_classification  # noqa: E402
-from repro.obs import RunRecorder  # noqa: E402
+from repro.obs import (RunRecorder, TelemetrySpec, render_heatmap,  # noqa: E402
+                       wall_balance)
 from repro.runtime import (FaultEvent, SnapshotStore, Supervisor,  # noqa: E402
                            ledger_counts, periodic_crashes,
                            render_ledger_event)
@@ -88,6 +94,10 @@ def run_chaos(args):
                       meta=dict(run="elastic_dso_chaos", m=prob.m, d=prob.d,
                                 epochs=epochs, eta0=args.eta0,
                                 fault_plan=[ev.describe() for ev in plan]))
+    # the telemetry lane rides the same run: every chunk's device buffer
+    # drains into the event log, and the supervisor attributes its
+    # simulated straggler sleeps to the slow worker's row
+    tel = TelemetrySpec(obs=rec)
     with tempfile.TemporaryDirectory() as ckpt_dir:
         sup = Supervisor(SnapshotStore(ckpt_dir,
                                        async_writes=args.async_writes),
@@ -95,7 +105,7 @@ def run_chaos(args):
                          eta0=args.eta0, fault_plan=plan,
                          straggler_delay_s=0.05, replan=True,
                          straggler_factor=1.5, straggler_patience=1,
-                         reshard_to=4, obs=rec)
+                         reshard_to=4, obs=rec, telemetry=tel)
         opt, ledger = sup.run_sharded(prob, epochs, mesh=make_dso_mesh(8),
                                       impl="auto", schedule="cyclic",
                                       seed=5)
@@ -142,6 +152,20 @@ def run_chaos(args):
                     + "\n")
         print(f"run-event log -> {args.events_out} "
               f"({len(rec.events)} events); report -> {args.report_out}")
+        # straggler heatmap: restrict to the p=8 chunks from the slow
+        # fault on (t0 >= 10) — the post-replan chunks run at p'=4 with
+        # the straggler shed, so they would dilute the attribution
+        heat = render_heatmap(tel, p=8, t0_min=10)
+        with open(args.heatmap_out, "w") as f:
+            f.write("## §Straggler heatmap (p=8 chunks, t0 >= 10)\n\n"
+                    + heat + "\n")
+        print(heat)
+        print(f"straggler heatmap -> {args.heatmap_out}")
+        bal, _ = wall_balance(tel, p=8, t0_min=10)
+        hot = int(np.argmax(bal.sum(axis=1)))
+        assert hot == 2, (
+            f"wall-balance argmax is worker {hot}, but the plan injected "
+            f"the straggler on worker 2")
         # every fault class detected/acted on, and the run still converged
         assert counts.get("health", 0) >= 1, "NaN never detected"
         assert sup.store.quarantined, "corrupt snapshot never quarantined"
@@ -175,6 +199,9 @@ def main(argv=None):
     ap.add_argument("--report-out", default="elastic-chaos-report.md",
                     help="--chaos: rendered run report "
                          "(benchmarks.report run-report)")
+    ap.add_argument("--heatmap-out", default="elastic-chaos-heatmap.md",
+                    help="--chaos: straggler heatmap rendered from the "
+                         "telemetry lane (obs.render_heatmap)")
     args = ap.parse_args(argv)
     if args.chaos:
         return run_chaos(args)

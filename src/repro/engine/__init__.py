@@ -83,6 +83,18 @@ code-path *product* into a *sum*:
    |  adds NO calls and NO allocations to the chunk loop and keeps     |
    |  trajectories bit-identical (the metrics-off contract, pinned by  |
    |  tests/test_obs.py and the obs_overhead gate in BENCH_dso.json)   |
+   |                                                                   |
+   |  solve(..., telemetry=spec): the DEVICE-side lane — the chunk     |
+   |  runs run_epochs_telemetry, a sibling jitted scan whose extra     |
+   |  carry accumulates a (n, p, p, 5) buffer of per-(epoch, inner     |
+   |  iteration r, worker q) TELEMETRY_FIELDS (dw/dalpha update norms, |
+   |  tile rows/nnz, nonfinite probes), drained at every chunk         |
+   |  boundary into spec.drain() with the chunk's etas + perms (the    |
+   |  host prices comm bytes per transport there); requires            |
+   |  scan_epochs=True; telemetry=None compiles the SAME run_epochs as |
+   |  before — bit-identical, zero overhead.  driver.py keeps its own  |
+   |  literal TELEMETRY_FIELDS copy: the engine never imports          |
+   |  repro.obs (tuple equality pinned by tests/test_obs.py)           |
    +-------------------------------------------------------------------+
 
    +--------------------- RUNTIME (repro/runtime) ---------------------+

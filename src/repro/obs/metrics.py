@@ -26,6 +26,15 @@ Instruments:
 
 from __future__ import annotations
 
+import random
+import zlib
+
+# quantile reservoir size: 4096 floats (~32 KiB) bounds the memory of a
+# histogram no matter how many samples it sees; nearest-rank quantiles
+# over a uniform reservoir of this size are exact for short runs and
+# within ~2% rank error for long ones — plenty for a summary table
+_RESERVOIR_CAP = 4096
+
 
 def _label_key(labels: dict) -> tuple:
     """Canonical hashable form of a label dict (sorted item tuple)."""
@@ -83,11 +92,15 @@ class Gauge(Metric):
 
 
 class Histogram(Metric):
-    """Running summary (count / sum / min / max) of observed samples.
+    """Running summary (count / sum / min / max / quantiles) of samples.
 
     Deliberately bucketless: the run-event log keeps every observation (the
     emitted events ARE the samples), so the report can re-bucket offline;
-    the in-process summary only needs the moments a summary table shows.
+    the in-process summary keeps the moments plus a bounded reservoir for
+    p50/p90/p99.  The reservoir is Vitter's Algorithm R with a PRNG seeded
+    from the metric NAME (crc32 — ``hash()`` is salted per process), so
+    the same sample stream always yields the same quantile estimates:
+    summaries are reproducible run to run.
     """
 
     kind = "histogram"
@@ -98,6 +111,8 @@ class Histogram(Metric):
         self.sum = 0.0
         self.min = None
         self.max = None
+        self._reservoir: list = []
+        self._rng = random.Random(zlib.crc32(name.encode()))
 
     def observe(self, v: float):
         v = float(v)
@@ -105,12 +120,31 @@ class Histogram(Metric):
         self.sum += v
         self.min = v if self.min is None else min(self.min, v)
         self.max = v if self.max is None else max(self.max, v)
+        if len(self._reservoir) < _RESERVOIR_CAP:
+            self._reservoir.append(v)
+        else:
+            j = self._rng.randrange(self.count)
+            if j < _RESERVOIR_CAP:
+                self._reservoir[j] = v
         self._emit(v)
         return self
 
     @property
     def mean(self):
         return self.sum / self.count if self.count else None
+
+    def quantile(self, q: float):
+        """Nearest-rank quantile over the reservoir (``q`` in [0, 1]);
+        exact while the stream fits the reservoir, approximate after."""
+        if not self._reservoir:
+            return None
+        s = sorted(self._reservoir)
+        return s[min(len(s) - 1, max(0, int(q * len(s))))]
+
+    def quantiles(self) -> dict:
+        """The summary trio: ``{"p50": ..., "p90": ..., "p99": ...}``."""
+        return {"p50": self.quantile(0.50), "p90": self.quantile(0.90),
+                "p99": self.quantile(0.99)}
 
 
 _KINDS = {"counter": Counter, "gauge": Gauge, "histogram": Histogram}
@@ -163,7 +197,8 @@ class MetricRegistry:
                 name + "{" + ",".join(f"{k}={v}" for k, v in lkey) + "}"
             if m.kind == "histogram":
                 out[tag] = dict(kind=m.kind, count=m.count, sum=m.sum,
-                                min=m.min, max=m.max, mean=m.mean)
+                                min=m.min, max=m.max, mean=m.mean,
+                                **m.quantiles())
             else:
                 out[tag] = dict(kind=m.kind, value=m.value)
         return out

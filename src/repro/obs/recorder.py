@@ -184,18 +184,28 @@ class RunRecorder:
         self.close()
 
 
-def read_events(path: str) -> list:
-    """Load a JSONL run-event log back into a list of event dicts
-    (tolerates a truncated final line from a crashed run)."""
-    out = []
+def iter_events(path: str):
+    """Stream a JSONL run-event log lazily, one event dict at a time.
+
+    Generator — a multi-GB event log costs one line of memory, so report
+    sections can fold over runs far larger than RAM.  A truncated final
+    line (crashed run mid-write) ends the stream: the valid prefix is
+    yielded, the torn tail is dropped.
+    """
     with open(path) as f:
         for line in f:
             line = line.strip()
             if not line:
                 continue
             try:
-                out.append(json.loads(line))
+                yield json.loads(line)
             except json.JSONDecodeError:
                 if os.path.getsize(path) and line is not None:
-                    break      # truncated tail: keep the valid prefix
-    return out
+                    return     # truncated tail: keep the valid prefix
+
+
+def read_events(path: str) -> list:
+    """Load a JSONL run-event log back into a list of event dicts
+    (tolerates a truncated final line from a crashed run).  Materializing
+    wrapper over ``iter_events`` — prefer the generator for large logs."""
+    return list(iter_events(path))

@@ -74,6 +74,16 @@ imports it):
         v
         obs.RunRecorder ──> benchmarks/report.py --section run-report
 
+        Supervisor(..., telemetry=spec)  the device-side lane rides the
+        |   same seam: the spec threads into every ShardedDSO the
+        |   supervisor builds (rebuilds after crashes, replans, live
+        |   reshards included), chunk device buffers drain into the
+        |   event log, and each simulated straggler sleep is attributed
+        |   to the slow worker (spec.attribute_delay) so the wall-
+        |   balance heatmap pins the fault on that worker's row
+        v
+        obs.TelemetrySpec ──> benchmarks/report.py --section heatmap
+
 ``render_ledger_event`` / ``render_ledger`` are the one human-readable
 rendering of that ledger, shared by the examples and the run report.
 

@@ -264,6 +264,8 @@ def test_metrics_off_is_true_noop(monkeypatch):
 
     monkeypatch.setattr(drv, "_obs_throughput", boom)
     monkeypatch.setattr(drv, "_obs_eval", boom)
+    # telemetry=None must likewise never compile/enter the telemetry scan
+    monkeypatch.setattr(drv, "run_epochs_telemetry", boom)
     prob = _prob()
     res = drv.solve(prob, epochs=3, p=4, eta0=0.5)
     assert len(res.history) == 3
@@ -309,6 +311,14 @@ def test_recorder_overhead_amortized(tmp_path):
     rec = RunRecorder(str(tmp_path / "run.jsonl"))
     record = _obs_throughput(rec, rows=float(prob.m), nnz=float(prob.nnz),
                              payload_bytes=4.0 * prob.m * prob.d)
+    # the telemetry drain rides the same chunk boundary — fold its host
+    # cost (buffer fetch + comm model + one JSONL event) into the budget
+    from repro.obs import TelemetrySpec
+    p = kw["p"]
+    tel = TelemetrySpec(obs=rec)
+    buf = np.zeros((every, p, p, len(tel.fields)), np.float32)
+    perms = np.tile(np.arange(p), (every, p, 1))
+    etas = np.full(every, 0.5, np.float32)
     reps = 200
     t0 = time.perf_counter()
     for _ in range(reps):
@@ -316,12 +326,15 @@ def test_recorder_overhead_amortized(tmp_path):
         span.__enter__()
         record(every, 0.1, 0.5)
         span.__exit__(None, None, None)
+        tel.drain(buf, t0=0, etas=etas, perms=perms, db=64,
+                  transport="ring", wall_s=0.1)
     s_chunk = (time.perf_counter() - t0) / reps
     rec.close()
     ratio = s_chunk / (every * s_epoch)
     assert ratio <= 0.02, (
-        f"recorder chunk cost {s_chunk:.2e}s is {ratio:.1%} of the "
-        f"{every}-epoch chunk ({s_epoch:.2e}s/epoch) — over the 2% budget")
+        f"recorder+telemetry chunk cost {s_chunk:.2e}s is {ratio:.1%} of "
+        f"the {every}-epoch chunk ({s_epoch:.2e}s/epoch) — over the 2% "
+        f"budget")
 
 
 # ------------------------------------------------------------ run report --
@@ -361,3 +374,191 @@ def test_report_cli_run_report(tmp_path):
         env=dict(os.environ, PYTHONPATH=os.path.join(REPO, "src")))
     assert out.returncode == 0, out.stderr
     assert "Run report" in out.stdout and "rows_per_s" in out.stdout
+
+
+# ------------------------------------------------------- telemetry lane --
+
+
+def test_telemetry_fields_literal_sync():
+    """engine.driver carries its own literal copy of TELEMETRY_FIELDS so
+    the engine never imports repro.obs — the two tuples must stay
+    identical (this test is the sync contract)."""
+    from repro.engine import driver
+    from repro.obs import TELEMETRY_FIELDS
+    assert driver.TELEMETRY_FIELDS == TELEMETRY_FIELDS
+    assert TELEMETRY_FIELDS == ("dw_norm", "dalpha_norm", "rows", "nnz",
+                                "nonfinite")
+
+
+def test_comm_bytes_matrix_ring_and_allgather():
+    from repro.obs import comm_bytes_matrix
+    p, db = 4, 16
+    blk = 2 * 4 * db
+    perms = np.tile(np.arange(p), (2, p, 1))
+    ring = comm_bytes_matrix(perms, db, "ring")
+    assert ring.shape == (2, p, p)
+    assert (ring == blk).all()          # one ppermute per inner iteration
+    ag = comm_bytes_matrix(perms, db, "allgather")
+    # p payloads per fetch; the end-of-epoch restore folds into row p-1
+    assert (ag[:, : p - 1] == blk * p).all()
+    assert (ag[:, p - 1] == 2 * blk * p).all()
+    with pytest.raises(ValueError, match="transport"):
+        comm_bytes_matrix(perms, db, "smoke-signals")
+
+
+def test_comm_bytes_matrix_p2p_hand_case():
+    """p=2, epoch perm [[0,1],[1,0]]: the first route is the identity
+    (elided), the swap before r=1 moves both blocks, and the end-of-epoch
+    restore swaps them back into the last row -> [[0, 0], [2blk, 2blk]]."""
+    from repro.obs import comm_bytes_matrix
+    db = 8
+    blk = 2 * 4 * db
+    out = comm_bytes_matrix([[[0, 1], [1, 0]]], db, "p2p")
+    np.testing.assert_array_equal(
+        out, [[[0.0, 0.0], [2.0 * blk, 2.0 * blk]]])
+
+
+def test_telemetry_spec_drain_schema_and_validation(tmp_path):
+    from repro.obs import TelemetrySpec, iter_events
+    path = str(tmp_path / "ev.jsonl")
+    rec = RunRecorder(path)
+    tel = TelemetrySpec(obs=rec)
+    with pytest.raises(ValueError, match="telemetry buffer"):
+        tel.drain(np.zeros((2, 2, 2, 3)), t0=0, etas=[0.5, 0.5],
+                  perms=np.tile(np.arange(2), (2, 2, 1)), db=4,
+                  transport="ring")
+    buf = np.zeros((2, 2, 2, 5), np.float32)
+    buf[..., 3] = 7.0
+    buf[1, 0, 1, 4] = 1.0                    # one nonfinite probe fired
+    tel.drain(buf, t0=4, etas=[0.5, 0.25],
+              perms=np.tile(np.arange(2), (2, 2, 1)), db=4,
+              transport="ring", wall_s=0.125)
+    tel.attribute_delay(1, 0.75, t0=5, epochs=2)
+    rec.close()
+    assert tel.nonfinite_total() == 1
+    evs = [e for e in iter_events(path) if e.get("type") == "telemetry"]
+    kinds = [e["kind"] for e in evs]
+    assert kinds == ["chunk", "delay"]
+    chunk = evs[0]
+    assert chunk["t0"] == 4 and chunk["epochs"] == 2 and chunk["p"] == 2
+    assert chunk["transport"] == "ring" and chunk["nonfinite"] == 1
+    assert chunk["eta"] == [0.5, 0.25]
+    assert np.asarray(chunk["nnz"]).shape == (2, 2, 2)
+    assert np.asarray(chunk["comm_bytes"]).shape == (2, 2, 2)
+    want = {"type": "telemetry", "kind": "delay", "worker": 1,
+            "seconds": 0.75, "t0": 5, "epochs": 2}
+    assert {k: evs[1][k] for k in want} == want    # recorder adds seq/ts
+
+
+def _toy_spec(slow_worker=2, p=4):
+    """Two drained chunks with flat nnz plus one attributed straggler
+    delay inside the second chunk's epoch window."""
+    from repro.obs import TelemetrySpec
+    tel = TelemetrySpec()
+    perms = np.tile(np.arange(p), (2, p, 1))
+    for t0 in (0, 2):
+        buf = np.ones((2, p, p, 5), np.float32)
+        buf[..., 4] = 0.0
+        tel.drain(buf, t0=t0, etas=[0.5, 0.5], perms=perms, db=4,
+                  transport="ring", wall_s=0.4)
+    tel.attribute_delay(slow_worker, 3.0, t0=2, epochs=2)
+    tel.attribute_delay(slow_worker, 3.0, t0=99, epochs=1)  # out of range
+    return tel
+
+
+def test_wall_balance_pins_attributed_straggler():
+    from repro.obs import wall_balance
+    tel = _toy_spec(slow_worker=2)
+    mat, t0s = wall_balance(tel)
+    assert t0s == [0, 2] and mat.shape == (4, 2)
+    # flat nnz -> wall split evenly; the delay lands whole on worker 2's
+    # row for the chunk containing t0=2 only (the t0=99 record matches no
+    # chunk and is dropped)
+    np.testing.assert_allclose(mat[:, 0], 0.1)
+    np.testing.assert_allclose(mat[[0, 1, 3], 1], 0.1)
+    np.testing.assert_allclose(mat[2, 1], 0.1 + 3.0)
+    assert int(np.argmax(mat.sum(axis=1))) == 2
+
+
+def test_render_heatmap_from_event_generator(tmp_path):
+    """render_heatmap folds a one-shot iter_events generator into BOTH
+    matrices (throughput + wall balance) — the generator must be
+    normalized once, not consumed twice."""
+    from repro.obs import TelemetrySpec, iter_events, render_heatmap
+    path = str(tmp_path / "ev.jsonl")
+    src = _toy_spec(slow_worker=1)
+    with RunRecorder(path) as rec:
+        tel = TelemetrySpec(obs=rec)
+        for c in src.chunks:
+            tel.drain(c.buf, t0=c.t0, etas=c.etas,
+                      perms=np.tile(np.arange(c.p), (c.epochs, c.p, 1)),
+                      db=c.db, transport=c.transport, wall_s=c.wall_s)
+        tel.attribute_delay(1, 3.0, t0=2, epochs=2)
+    text = render_heatmap(iter_events(path))
+    assert "(no telemetry)" not in text
+    assert "nnz throughput" in text and "wall balance" in text
+    assert "argmax worker: 1" in text
+
+
+def test_iter_events_is_lazy_and_tolerates_truncation(tmp_path):
+    from repro.obs import iter_events
+    path = str(tmp_path / "ev.jsonl")
+    with open(path, "w") as f:
+        f.write(json.dumps({"type": "a"}) + "\n")
+        f.write(json.dumps({"type": "b"}) + "\n")
+        f.write('{"type": "tru')               # crash-truncated tail
+    gen = iter_events(path)
+    assert not isinstance(gen, list)           # a true generator
+    assert next(gen)["type"] == "a"
+    assert [e["type"] for e in gen] == ["b"]   # bad tail dropped
+    assert read_events(path) == [{"type": "a"}, {"type": "b"}]
+
+
+def test_histogram_quantiles_exact_then_deterministic():
+    from repro.obs.metrics import _RESERVOIR_CAP
+    h = MetricRegistry().histogram("h")
+    for v in np.random.default_rng(0).permutation(1000):
+        h.observe(float(v))
+    # stream fits the reservoir -> exact nearest-rank quantiles
+    assert h.quantile(0.5) == 500.0
+    assert h.quantiles() == {"p50": 500.0, "p90": 900.0, "p99": 990.0}
+    # past the cap the reservoir subsamples, but the crc32(name)-seeded
+    # PRNG makes the estimate a pure function of (name, sample stream)
+    vals = np.random.default_rng(1).normal(size=_RESERVOIR_CAP + 500)
+    h1 = MetricRegistry().histogram("lat")
+    h2 = MetricRegistry().histogram("lat")
+    for v in vals:
+        h1.observe(float(v))
+        h2.observe(float(v))
+    assert h1.quantiles() == h2.quantiles()
+    snap = MetricRegistry()
+    snap.histogram("s").observe(2.0)
+    entry = snap.snapshot()["s"]
+    assert entry["p50"] == entry["p90"] == entry["p99"] == 2.0
+
+
+def test_history_ledger_and_trends_regression_flag(tmp_path):
+    """benchmarks history ledger round trip: two appended records where a
+    'higher is better' gate drops >20% must surface in --section trends
+    as a REGRESSION."""
+    from benchmarks.dso_perf import append_history
+    from benchmarks.report import trends_report
+    path = str(tmp_path / "history.jsonl")
+    old = {"dso_sparse": {"gate": {"traffic_ratio_dense_over_sparse": 6.0,
+                                   "threshold": 2.0, "pass": True}},
+           "obs_overhead": {"gate": {"obs_overhead_per_epoch": 0.001,
+                                     "pass": True}}}
+    new = {"dso_sparse": {"gate": {"traffic_ratio_dense_over_sparse": 4.0,
+                                   "threshold": 2.0, "pass": True}},
+           "obs_overhead": {"gate": {"obs_overhead_per_epoch": 0.0011,
+                                     "pass": True}}}
+    assert append_history(old, path=path)["gates"][
+        "dso_sparse"]["traffic_ratio_dense_over_sparse"] == 6.0
+    append_history(new, path=path)
+    text = trends_report(path)
+    assert "dso_sparse.traffic_ratio_dense_over_sparse" in text
+    assert "REGRESSION" in text
+    # thresholds are config, not measurements -> never trended
+    assert "dso_sparse.threshold" not in text
+    # a 10% drift on a 'lower' gate stays inside the 20% tolerance
+    assert text.count("REGRESSION") == 1
